@@ -1,0 +1,50 @@
+"""Fig 1 analogue: offloaded MoE inference time breakdown + operational
+intensity (the paper's motivation figure).
+
+(a) fraction of decode wall time spent on host->device expert transfer vs
+    compute, per policy (fp16 / int3 / int2) on the GPU-only profile;
+(b) operational intensity (FLOPs/byte moved) per policy vs the machine
+    balance point — shows quantization moving decode away from the
+    memory-bound region exactly as Fig 1(b) draws it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.quantize import packed_nbytes
+from repro.offload import GPU_ONLY, LayerSpecSim, simulate_decode
+
+from .common import trained_moe
+from .bench_throughput import _trace
+
+
+def run(quick: bool = True):
+    rows = []
+    d, fe, e, k = 4096, 14336, 8, 2        # Mixtral-8x7B expert dims
+    trace = _trace("mixtral-8x7b", 32 if quick else 128, quick)
+    flops_per_expert = 2.0 * 3 * d * fe
+    for policy, bits in (("fp16", 16), ("quant", 3), ("quant", 2)):
+        if bits == 16:
+            qb = 3 * d * fe * 2
+        else:
+            qb = 3 * (packed_nbytes(bits, d, fe) + (d // 64) * fe * 4)
+        spec = LayerSpecSim(d, fe, e, k, 3 * d * fe * 2, qb, [0] * e)
+        r = simulate_decode(trace, spec, GPU_ONLY, policy, num_layers=32)
+        oi = flops_per_expert / qb            # FLOPs per byte moved
+        balance = GPU_ONLY.compute_flops / GPU_ONLY.link_bw
+        rows.append({
+            "name": f"fig1/{policy}-int{bits}",
+            "transfer_frac": r.transfer_time_frac,
+            "tok_s": r.tokens_per_s,
+            "op_intensity": oi,
+            "machine_balance": balance,
+            "bound": "memory" if oi < balance else "compute",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        extra = ",".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+                         for k, v in r.items() if k != "name")
+        print(f"{r['name']},{extra}")

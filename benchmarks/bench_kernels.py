@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks (CPU timing is indicative only; the TPU story is
+the packed-byte traffic, reported as `derived`).
+
+For each bit width: quant_matmul wire bytes vs fp16, and the fused
+low-rank epilogue's marginal cost at the paper's rank budgets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize
+from repro.core.quantize import packed_nbytes
+from repro.kernels import ops
+
+from .common import timed
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    m, k, n = (64, 1024, 1024) if quick else (256, 4096, 4096)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    fp16_bytes = k * n * 2
+    for bits in (2, 3, 4, 8):
+        qt = quantize(w, bits, 64)
+        us = timed(lambda: ops.quant_matmul(x, qt, impl="ref"))
+        wire = packed_nbytes(bits, k, n) + (k // 64) * n * 4
+        rows.append({"name": f"kernel/quant_matmul_int{bits}",
+                     "us_per_call": us,
+                     "derived": f"wire_reduction={fp16_bytes / wire:.2f}x"})
+    qt = quantize(w, 2, 64)
+    for rank in (16, 32, 128):
+        u = jnp.asarray(rng.integers(-127, 127, (k, rank)).astype(np.int8))
+        v = jnp.asarray(rng.integers(-127, 127, (rank, n)).astype(np.int8))
+        us_ = jnp.ones((1, rank), jnp.float32) * 0.01
+        vs_ = jnp.ones((rank, 1), jnp.float32) * 0.01
+        mask = jnp.ones((m,), jnp.float32)
+        us = timed(lambda: ops.lowrank_comp_matmul(
+            x, qt, u, v, us_, vs_, mask, impl="ref"))
+        extra = rank * (k + n)
+        rows.append({"name": f"kernel/lowrank_fused_r{rank}",
+                     "us_per_call": us,
+                     "derived": f"comp_bytes_pct="
+                                f"{100 * extra / (packed_nbytes(2, k, n)):.1f}%"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -1,0 +1,88 @@
+"""Fig 4 analogue: (a) low-rank compensators restore quantization residual;
+(b) kurtosis predicts per-expert quantization error.
+
+Reported on BOTH the heavy-tailed *init* weights (clean mechanism — the
+paper measures on at-scale pretrained weights we cannot load) and the
+*trained* toy weights (honest toy-scale finding: brief Adam training
+reshapes the grafted tails, and the correlation can invert — see
+EXPERIMENTS.md §Claims notes; this motivates the beyond-paper
+error-guided allocation in fig8c).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import QuantConfig
+from repro.core import compress_expert_stack
+
+from .common import bench_moe_cfg, heavy_tail_expert_init, trained_moe
+
+
+def _corr_and_gain(params, qcfg):
+    kurts, errs, errs_c = [], [], []
+    for seg in params["segments"]:
+        for p in seg:
+            if "moe" not in p:
+                continue
+            for proj in ("w1", "w2", "w3"):
+                w = p["moe"][proj]
+                if w.ndim == 4:
+                    w = w[0]
+                _, rep = compress_expert_stack(jnp.asarray(w), qcfg)
+                kurts += list(rep["kurtosis"])
+                errs += list(rep["rel_err_quant"])
+                errs_c += list(rep["rel_err_comp"])
+    corr = float(np.corrcoef(kurts, errs)[0, 1])
+    return corr, float(np.mean(errs)), float(np.mean(errs_c))
+
+
+def _synthetic_sweep():
+    """Controlled mechanism demo: t(df)-distributed 256x256 matrices,
+    df 2.05…50 — kurtosis spans ~3…10^3 with tight error estimates."""
+    from repro.core import hqq_quantize, kurtosis as kurt_fn, quant_error, \
+        quantize
+    rng = np.random.default_rng(0)
+    dfs = np.geomspace(2.05, 50, 10)
+    ws = [jnp.asarray(rng.standard_t(df, (256, 256)).astype(np.float32))
+          for df in dfs]
+    ks = [float(kurt_fn(w)) for w in ws]
+    rows = []
+    for label, qfn in (("rtn", lambda w: quantize(w, 2, 64)),
+                       ("hqq", lambda w: hqq_quantize(w, 2, 64, iters=20))):
+        es = [float(quant_error(w, qfn(w))) for w in ws]
+        rows.append({"name": f"fig4b/synthetic_{label}",
+                     "corr": float(np.corrcoef(ks, es)[0, 1])})
+    return rows
+
+
+def run(quick: bool = True):
+    rows = _synthetic_sweep()
+    cfg = bench_moe_cfg()
+    init_params_ = heavy_tail_expert_init(cfg, 0)(jax.random.key(0))
+    # RTN regime: the paper's Fig-4b mechanism (heavy tails hurt naive
+    # quantization) reproduces cleanly
+    rtn = QuantConfig(enabled=True, bits=2, rank_budget=32, hqq_iters=0)
+    c_rtn, _, _ = _corr_and_gain(init_params_, rtn)
+    rows.append({"name": "fig4b/kurtosis_error_corr_rtn", "corr": c_rtn})
+    # HQQ regime: the half-quadratic l_p prox is built to absorb
+    # element-wise tails, so the correlation collapses — on real LLM
+    # weights kurtosis is structured (outlier channels) and survives HQQ,
+    # which our toy cannot emulate; this motivates the beyond-paper
+    # error-guided allocation (fig8c)
+    hqq = QuantConfig(enabled=True, bits=2, rank_budget=32, hqq_iters=20)
+    c_hqq, e0i, e1i = _corr_and_gain(init_params_, hqq)
+    rows.append({"name": "fig4b/kurtosis_error_corr_hqq", "corr": c_hqq})
+    _, tparams = trained_moe(steps=60 if quick else 300)
+    c_tr, e0, e1 = _corr_and_gain(tparams, hqq)
+    rows.append({"name": "fig4b/kurtosis_error_corr_trained", "corr": c_tr})
+    rows.append({"name": "fig4a/mean_residual_reduction",
+                 "before": e0, "after": e1, "gain": e0 - e1})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        extra = ",".join(f"{k}={v:.4f}" for k, v in r.items() if k != "name")
+        print(f"{r['name']},{extra}")

@@ -1,0 +1,166 @@
+"""Shared benchmark utilities: tiny trained MoE + compression variants."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, MoEConfig, QuantConfig, TrainConfig
+from repro.core import compress_ffn_weights
+from repro.data import SyntheticLM, SyntheticLMConfig
+from repro.models import ExecContext, forward, init_params
+from repro.train import train
+
+CACHE_DIR = Path("experiments/bench_cache")
+
+
+def bench_moe_cfg(num_experts=8, top_k=2, d_model=128, d_expert=256,
+                  layers=2, vocab=512) -> ModelConfig:
+    """Mixtral-shaped miniature (8 experts top-2) for quality benchmarks."""
+    return ModelConfig(
+        name=f"bench-moe-{num_experts}e", family="moe", num_layers=layers,
+        d_model=d_model, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=0, vocab_size=vocab, block_pattern=("global",),
+        max_position=2048,
+        moe=MoEConfig(num_experts=num_experts, top_k=top_k,
+                      d_expert=d_expert,
+                      quant=QuantConfig(enabled=True, bits=2,
+                                        rank_budget=32, top_n_restore=1)))
+
+
+def heavy_tail_expert_init(cfg: ModelConfig, seed: int = 0):
+    """init_fn that draws each expert's weights from a Student-t with a
+    per-expert tail index (df 2.2 … 30, std-normalized).
+
+    Large-scale-trained MoE experts are heavy-tailed with heterogeneous
+    kurtosis (paper Fig 4; KurTail [1]); a briefly-trained toy model stays
+    Gaussian, so we graft that spectrum at init — tails persist through
+    short training and give the kurtosis-guided allocation something real
+    to discriminate.  (Documented in EXPERIMENTS.md §Methodology.)
+    """
+    def init_fn(key):
+        params = init_params(key, cfg, jnp.float32)
+        rng = np.random.default_rng(seed)
+        e = cfg.moe.num_experts
+        dfs = np.geomspace(2.2, 30.0, e)
+        rng.shuffle(dfs)
+
+        def retail(w):  # (…, E, K, N)
+            w = np.asarray(w)
+            out = w.copy()
+            lead = w.shape[:-3]
+            for idx in np.ndindex(*lead) if lead else [()]:
+                for ei in range(e):
+                    df = dfs[ei]
+                    t = rng.standard_t(df, w.shape[-2:]).astype(np.float32)
+                    t /= np.sqrt(df / (df - 2.0))          # unit std
+                    out[idx + (ei,)] = t * w[idx + (ei,)].std()
+            return jnp.asarray(out)
+
+        for seg in params["segments"]:
+            for p in seg:
+                if "moe" in p:
+                    for k in ("w1", "w2", "w3"):
+                        p["moe"][k] = retail(p["moe"][k])
+        return params
+
+    return init_fn
+
+
+@functools.lru_cache(maxsize=4)
+def trained_moe(num_experts=8, top_k=2, steps=150, seed=0
+                ) -> Tuple[ModelConfig, Dict]:
+    """Train (or load cached) a tiny MoE on the synthetic Zipf-Markov LM,
+    with heavy-tailed per-expert weight spectra (see heavy_tail_expert_init)."""
+    cfg = bench_moe_cfg(num_experts=num_experts, top_k=top_k)
+    cache = CACHE_DIR / f"moe_{num_experts}e{top_k}k_{steps}s_{seed}"
+    from repro.checkpoint import CheckpointManager
+    from repro.launch.steps import TrainState
+    from repro.optim.adamw import adamw_init
+    tcfg = TrainConfig(total_steps=steps, lr=2e-3, warmup_steps=20,
+                       checkpoint_every=10 ** 9, loss_chunk=0, seed=seed)
+    if (cache / ("step_%08d.json" % steps)).exists():
+        mgr = CheckpointManager(cache)
+        params = init_params(jax.random.key(seed), cfg, jnp.float32)
+        state, _ = mgr.restore(TrainState(params, adamw_init(params)))
+        return cfg, state.params
+    res = train(cfg, tcfg, checkpoint_dir=str(cache), log_every=50,
+                batch_shape=(8, 128),
+                init_fn=heavy_tail_expert_init(cfg, seed))
+    return cfg, res.state.params
+
+
+def compress_model(cfg: ModelConfig, params, qcfg: QuantConfig
+                   ) -> Tuple[ModelConfig, Dict, Dict]:
+    """Offline-compress every MoE layer's experts.
+
+    Scanned segments are unrolled first (per-layer kurtosis/rank allocation
+    makes the stacks heterogeneous); returns (cfg', params', reports)."""
+    from repro.models.transformer import unstack_params
+    cfg2 = dataclasses.replace(
+        cfg, force_unroll_plan=True,
+        moe=dataclasses.replace(cfg.moe, quant=qcfg) if cfg.moe else None)
+    params = unstack_params(params, cfg)
+    new_segs = []
+    reports = {}
+    for si, seg in enumerate(params["segments"]):
+        pos = []
+        for pi, p in enumerate(seg):
+            p = dict(p)
+            if "moe" in p:
+                mp = dict(p["moe"])
+                stacks, rep = compress_ffn_weights(
+                    mp["w1"], mp["w2"], mp["w3"], qcfg)
+                reports[f"layer{si}_{pi}"] = rep
+                mp["stacks"] = stacks
+                for k in ("w1", "w2", "w3"):
+                    mp.pop(k)
+                p["moe"] = mp
+            pos.append(p)
+        new_segs.append(tuple(pos))
+    out = dict(params)
+    out["segments"] = tuple(new_segs)
+    return cfg2, out, reports
+
+
+def eval_nll(cfg: ModelConfig, params, *, quantized: bool,
+             batches: int = 4, seed: int = 0,
+             step_offset: int = 50_000) -> float:
+    """Held-out mean NLL on the synthetic stream.
+
+    Same language seed as training (the Markov structure IS the language);
+    held-out-ness comes from a disjoint, deterministic step range."""
+    data = SyntheticLM(SyntheticLMConfig(vocab_size=cfg.vocab_size,
+                                         batch_size=8, seq_len=128,
+                                         seed=seed))
+    ctx = ExecContext(mode="train", quantized=quantized,
+                      exact_capacity=True)
+
+    @jax.jit
+    def nll(params, tokens):
+        out = forward(params, tokens, cfg, ctx)
+        logits = out.logits[:, :-1].astype(jnp.float32)
+        tgt = tokens[:, 1:]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        sel = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - sel)
+
+    vals = [float(nll(params,
+                      jnp.asarray(data.batch(step_offset + i)["tokens"])))
+            for i in range(batches)]
+    return float(np.mean(vals))
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us

@@ -1,0 +1,77 @@
+"""§Perf report: compare hillclimb variants against each cell's baseline.
+
+Reads experiments/perf/*.json (tagged dry-run artifacts produced by
+``repro.launch.dryrun --opt ...``) and prints per-cell iteration tables:
+three roofline terms, the dominant one, and the delta vs baseline.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from pathlib import Path
+
+PERF = Path("experiments/perf")
+
+
+def load():
+    cells = defaultdict(dict)
+    for f in sorted(PERF.glob("*.json")):
+        rec = json.loads(f.read_text())
+        parts = rec["cell"].split("|")
+        key = "|".join(parts[:3])
+        tag = parts[3] if len(parts) > 3 else "baseline"
+        cells[key][tag] = rec
+    return cells
+
+
+def fmt_row(tag, rec, base=None):
+    r = rec["roofline"]
+    terms = (r["t_compute"], r["t_memory"], r["t_collective"])
+    dom = max(terms)
+    line = (f"| {tag:28s} | {terms[0]*1e3:10.2f} | {terms[1]*1e3:10.2f} "
+            f"| {terms[2]*1e3:10.2f} | {r['dominant']:10s} ")
+    if base is not None:
+        b = base["roofline"]
+        bdom = max(b["t_compute"], b["t_memory"], b["t_collective"])
+        line += f"| {100 * (dom - bdom) / bdom:+7.1f}% |"
+    else:
+        line += "| baseline |"
+    return line
+
+
+def main():
+    cells = load()
+    for key, variants in cells.items():
+        print(f"\n### {key}")
+        print("| variant | compute ms | memory ms | collective ms | "
+              "dominant | Δ dominant |")
+        print("|---|---|---|---|---|---|")
+        base = variants.get("baseline")
+        if base:
+            print(fmt_row("baseline", base))
+        for tag, rec in sorted(variants.items()):
+            if tag == "baseline":
+                continue
+            print(fmt_row(tag, rec, base))
+
+
+def run(quick: bool = True):
+    out = []
+    for key, variants in load().items():
+        base = variants.get("baseline")
+        if not base:
+            continue
+        b = base["roofline"]
+        bdom = max(b["t_compute"], b["t_memory"], b["t_collective"])
+        for tag, rec in variants.items():
+            r = rec["roofline"]
+            dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            out.append({"name": f"perf/{key}/{tag}",
+                        "dom_ms": dom * 1e3,
+                        "delta_pct": 100 * (dom - bdom) / bdom})
+    return out
+
+
+if __name__ == "__main__":
+    main()

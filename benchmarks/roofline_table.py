@@ -1,0 +1,95 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-cell table.
+
+Reads experiments/dryrun/*.json, prints a markdown table with the three
+terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio, and memory fit —
+and writes experiments/roofline.md for EXPERIMENTS.md inclusion.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.config import SHAPES
+from repro.registry import ASSIGNED, get_config
+from repro.configs.base import supports_shape
+
+DRYRUN = Path("experiments/dryrun")
+HBM_PER_CHIP = 16 * 2 ** 30   # v5e
+
+
+def load_cells(mesh: str = "16x16"):
+    rows = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            skip = supports_shape(cfg, shape)
+            stem = f"{arch}_{shape.name}_{mesh}"
+            hits = sorted(DRYRUN.glob(stem + "*.json"))
+            if skip:
+                rows.append({"arch": arch, "shape": shape.name,
+                             "status": "SKIP", "note": skip})
+                continue
+            if not hits:
+                rows.append({"arch": arch, "shape": shape.name,
+                             "status": "MISSING"})
+                continue
+            rec = json.loads(hits[-1].read_text())
+            r = rec["roofline"]
+            ma = rec["memory_analysis"]
+            resident = (ma["argument_bytes"] or 0) + (ma["temp_bytes"] or 0)
+            rows.append({
+                "arch": arch, "shape": shape.name, "status": "ok",
+                "q": rec["quantized"],
+                "t_compute_ms": r["t_compute"] * 1e3,
+                "t_memory_ms": r["t_memory"] * 1e3,
+                "t_collective_ms": r["t_collective"] * 1e3,
+                "dominant": r["dominant"],
+                "useful": r["useful_ratio"],
+                "resident_gib": resident / 2 ** 30,
+                "fits": resident <= HBM_PER_CHIP,
+                "note": r.get("note", ""),
+            })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    out = ["| arch | shape | q | compute ms | memory ms | coll ms | "
+           "dominant | useful | GiB/chip | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"{r['status']} | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {int(r['q'])} "
+            f"| {r['t_compute_ms']:.2f} | {r['t_memory_ms']:.2f} "
+            f"| {r['t_collective_ms']:.2f} | {r['dominant']} "
+            f"| {r['useful']:.2f} | {r['resident_gib']:.1f} "
+            f"| {'yes' if r['fits'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def run(quick: bool = True):
+    rows = load_cells()
+    ok = [r for r in rows if r["status"] == "ok"]
+    return [{"name": f"roofline/{r['arch']}/{r['shape']}",
+             "dominant": r["dominant"],
+             "t_dom_ms": max(r["t_compute_ms"], r["t_memory_ms"],
+                             r["t_collective_ms"])} for r in ok]
+
+
+def main():
+    rows = load_cells()
+    md = to_markdown(rows)
+    Path("experiments").mkdir(exist_ok=True)
+    Path("experiments/roofline.md").write_text(md + "\n")
+    print(md)
+    ok = sum(r["status"] == "ok" for r in rows)
+    sk = sum(r["status"] == "SKIP" for r in rows)
+    ms = sum(r["status"] == "MISSING" for r in rows)
+    print(f"\n{ok} ok / {sk} skipped / {ms} missing (single-pod table)")
+
+
+if __name__ == "__main__":
+    main()

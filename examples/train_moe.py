@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-param MoE LM for a few hundred steps
+on the synthetic data pipeline, with checkpointing and restart handling.
+
+This is the assignment's (b) end-to-end training example: a real loop
+(AdamW, warmup-cosine, grad clip, router aux losses, z-loss), atomic
+checkpoints every 50 steps, straggler monitoring, and a perplexity report
+against the stream's entropy floor.
+
+Run:  PYTHONPATH=src python examples/train_moe.py [--steps 300]
+"""
+import argparse
+import math
+
+import numpy as np
+
+from repro.config import ModelConfig, MoEConfig, QuantConfig, TrainConfig
+from repro.data import SyntheticLM, SyntheticLMConfig
+from repro.train import StragglerMonitor, train
+
+
+def build_cfg() -> ModelConfig:
+    # ~100M params: 4 layers, d=256, 16 experts of d_ff=1024 + GQA attention
+    return ModelConfig(
+        name="moe-100m", family="moe", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=4, head_dim=32, d_ff=0, vocab_size=8192,
+        block_pattern=("global",), max_position=4096,
+        moe=MoEConfig(num_experts=16, top_k=2, d_expert=1024,
+                      router_aux_weight=0.02,
+                      quant=QuantConfig(enabled=True, bits=2,
+                                        rank_budget=32, top_n_restore=1)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="experiments/train_moe_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_cfg()
+    n_params = cfg.num_params
+    print(f"model: {cfg.name}  ~{n_params / 1e6:.0f}M params "
+          f"({cfg.moe.num_experts} experts, top-{cfg.moe.top_k})")
+
+    data = SyntheticLM(SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, batch_size=args.batch, seq_len=args.seq))
+    print(f"data entropy floor (unigram): {data.entropy_floor():.3f} nats")
+
+    tcfg = TrainConfig(total_steps=args.steps, lr=1e-3, warmup_steps=30,
+                       checkpoint_every=50, keep_checkpoints=3,
+                       clip_norm=1.0, loss_chunk=0)
+    res = train(cfg, tcfg, data=data, checkpoint_dir=args.ckpt,
+                log_every=20, batch_shape=(args.batch, args.seq),
+                straggler=StragglerMonitor(threshold=4.0))
+
+    first = np.mean([h["loss"] for h in res.history[:10]])
+    last = np.mean([h["loss"] for h in res.history[-10:]])
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(ppl {math.exp(first):.1f} -> {math.exp(last):.1f})")
+    print(f"checkpoints in {args.ckpt}; straggler flags: "
+          f"{res.straggler_flags}")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""BEAM-LRC: Bandwidth-Efficient Adaptive MoE via Low-Rank Compensation.
+
+A production-grade JAX training/inference framework reproducing and
+extending the paper's router-guided precision-restoration technique.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""Atomic, keep-k, mesh-agnostic checkpointing."""
+from .manager import CheckpointManager

@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, mesh-agnostic resume.
+
+Design for 1000+ nodes (emulated here on one host):
+- tensors are saved *unsharded* (gathered per leaf) in an .npz plus a JSON
+  manifest, so a restore onto a DIFFERENT mesh/topology re-shards
+  transparently (elastic scaling);
+- writes go to ``step_XXXX.tmp`` then ``os.replace`` (atomic on POSIX), so
+  a crash mid-write can never corrupt the latest checkpoint;
+- the manifest carries a content checksum; restore validates it and falls
+  back to the previous checkpoint on mismatch (torn-write recovery);
+- ``keep`` retention bounds disk; ``latest_step`` scans only committed
+  manifests.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _checksum(flat: Dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(flat):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(flat[k]).tobytes()[:4096])
+        h.update(str(flat[k].shape).encode())
+    return h.hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- write --------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+        flat = _flatten(tree)
+        tmp_npz = self.dir / f"step_{step:08d}.npz.tmp"
+        final_npz = self.dir / f"step_{step:08d}.npz"
+        with open(tmp_npz, "wb") as f:
+            np.savez(f, **flat)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "checksum": _checksum(flat),
+            "n_tensors": len(flat),
+            "bytes": int(sum(v.nbytes for v in flat.values())),
+            "extra": extra or {},
+        }
+        tmp_man = self.dir / f"step_{step:08d}.json.tmp"
+        final_man = self.dir / f"step_{step:08d}.json"
+        tmp_man.write_text(json.dumps(manifest))
+        os.replace(tmp_npz, final_npz)      # atomic commits: data first,
+        os.replace(tmp_man, final_man)      # manifest last = commit point
+        self._retain()
+        return final_npz
+
+    def _retain(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            for suffix in (".npz", ".json"):
+                p = self.dir / f"step_{s:08d}{suffix}"
+                if p.exists():
+                    p.unlink()
+
+    # -- read ---------------------------------------------------------------
+    def all_steps(self):
+        return sorted(int(p.stem.split("_")[1])
+                      for p in self.dir.glob("step_*.json"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``template`` (shapes validated).
+        ``shardings`` (optional pytree) re-shards onto the current mesh —
+        this is what makes restarts elastic across topology changes."""
+        steps = self.all_steps()
+        if step is None:
+            if not steps:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            candidates = steps[::-1]
+        else:
+            candidates = [step]
+        last_err: Optional[Exception] = None
+        for s in candidates:
+            try:
+                return self._restore_one(template, s, shardings)
+            except Exception as e:  # torn write -> try previous
+                last_err = e
+        raise last_err
+
+    def _restore_one(self, template, step: int, shardings):
+        man = json.loads((self.dir / f"step_{step:08d}.json").read_text())
+        with np.load(self.dir / f"step_{step:08d}.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        if _checksum(flat) != man["checksum"]:
+            raise IOError(f"checksum mismatch at step {step}")
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in leaves:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx",
+                                                         getattr(p, "name", p))))
+                           for p in path)
+            arr = flat[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            arr = arr.astype(leaf.dtype)
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, man

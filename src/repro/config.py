@@ -1,0 +1,308 @@
+"""Frozen-dataclass configuration system for the BEAM-LRC framework.
+
+Every tunable in the framework flows through these dataclasses so that a
+single ``--arch`` + ``--shape`` + ``--mesh`` selection fully determines a
+run.  Configs are hashable/frozen; derived quantities are properties.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+
+def replace(cfg, **kw):
+    """dataclasses.replace that tolerates nested dotted keys ('moe.top_k')."""
+    nested: dict[str, dict] = {}
+    flat: dict[str, Any] = {}
+    for k, v in kw.items():
+        if "." in k:
+            head, rest = k.split(".", 1)
+            nested.setdefault(head, {})[rest] = v
+        else:
+            flat[k] = v
+    for head, sub in nested.items():
+        flat[head] = replace(getattr(cfg, head), **sub)
+    return dataclasses.replace(cfg, **flat)
+
+
+# ---------------------------------------------------------------------------
+# Quantization / compensation (the paper's technique)
+# ---------------------------------------------------------------------------
+
+RANK_BUCKETS: Tuple[int, ...] = (0, 16, 32, 128, 256, 512, 1024)
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of BEAM-LRC quantize-then-compensate.
+
+    ``bits`` is the expert-weight precision; ``rank_budget`` is R_avg from
+    paper §3.1; ``top_n_restore`` is the number of router-ranked experts
+    whose compensators are applied per token (n < k).
+    """
+    enabled: bool = False
+    bits: int = 2                      # expert weight bits: 2 | 3 | 4 | 8
+    group_size: int = 64               # quantization group along K
+    rank_budget: int = 32              # R_avg (paper: 32 Mixtral, 64 DeepSeek)
+    rank_buckets: Tuple[int, ...] = RANK_BUCKETS
+    top_n_restore: int = 1             # n (paper: 1 Mixtral, 3 DeepSeek)
+    factor_bits: int = 8               # compensator factor storage precision
+    factor_group_size: int = 64
+    hqq_iters: int = 20                # half-quadratic optimization steps
+    hqq_p: float = 0.7                 # l_p norm of HQQ shrinkage
+    hqq_beta: float = 10.0             # initial HQQ penalty
+    hqq_beta_scale: float = 1.01
+    scale_dtype: str = "f32"           # f32 | bf16 storage for scale/zero
+    kurtosis_guided: bool = True       # False -> uniform rank (ablation)
+    compensate_shared: bool = True     # statically compensate shared experts
+    uniform_rank: Optional[int] = None # override when kurtosis_guided=False
+    # beyond-paper: allocate by the MEASURED per-expert residual instead of
+    # its kurtosis proxy (residuals are computed offline anyway; the paper's
+    # §6 names "model-aware rank allocation" as future work)
+    rank_alloc: str = "kurtosis"       # kurtosis | error | uniform
+
+    def __post_init__(self):
+        assert self.bits in (1, 2, 3, 4, 8), f"unsupported bits={self.bits}"
+        assert self.factor_bits in (3, 4, 8, 16)
+        # group_size <= 0 -> per-channel quantization (resolved to K at
+        # compression time); used by the GPTQ-collapse baseline in fig6
+
+
+# ---------------------------------------------------------------------------
+# Model family configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN hidden dim
+    num_shared_experts: int = 0
+    d_shared: int = 0                  # shared-expert hidden (0 -> d_expert)
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True      # renormalize selected probs
+    router_aux_weight: float = 0.01    # load-balancing loss weight
+    router_z_weight: float = 1e-3      # router z-loss weight
+    router_jitter: float = 0.0
+    quant: QuantConfig = field(default_factory=QuantConfig)
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder tower for enc-dec models (whisper)."""
+    num_layers: int
+    d_model: int
+    num_heads: int
+    d_ff: int
+    source_len: int = 1500             # whisper: 30s audio -> 1500 frames
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    # --- layer pattern: names cycled over layers -------------------------
+    # entries: 'global' | 'local' | 'recurrent' | 'mlstm' | 'slstm'
+    block_pattern: Tuple[str, ...] = ("global",)
+    window_size: int = 4096            # for 'local' sliding-window layers
+    # --- positional ------------------------------------------------------
+    rope_theta: float = 10_000.0
+    rope_kind: str = "default"         # default | mrope | none
+    rope_local_theta: float = 0.0      # gemma3 uses a different local theta
+    abs_pos_embed: bool = False        # whisper-style additive sinusoidal
+    # --- misc ------------------------------------------------------------
+    act: str = "silu"                  # silu | gelu
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+    post_attn_norm: bool = False       # gemma3-style extra norms
+    scale_embed: bool = False          # gemma-style sqrt(d) embedding scale
+    # --- MoE ---------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    moe_layer_period: int = 1          # MoE every k-th layer (1 = all)
+    first_layer_dense: bool = False    # deepseek-style dense layer 0
+    gated_ffn: bool = True             # False -> plain 2-matrix MLP (whisper)
+    # --- dense quantize-then-compensate (degenerate static form) ----------
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    # --- enc-dec -----------------------------------------------------------
+    encoder: Optional[EncoderConfig] = None
+    # --- recurrent (RG-LRU / xLSTM) ----------------------------------------
+    lru_width: int = 0                 # RG-LRU recurrence width (0 -> d_model)
+    conv1d_width: int = 4              # temporal conv width in recurrent block
+    # --- modality frontend stub -------------------------------------------
+    frontend: str = "none"             # none | audio_stub | vision_stub
+    max_position: int = 524_288
+    kv_bits: int = 16                  # 8 = int8 KV cache (beyond-paper)
+    # unrolled per-layer plan (needed when per-layer compensator ranks
+    # differ, e.g. after offline compression of a real model)
+    force_unroll_plan: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % self.num_kv_heads == 0 or self.num_kv_heads == 0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.moe is not None and (i % self.moe_layer_period == 0)
+
+    @property
+    def num_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, h, kv, hd, ff, v = (self.d_model, self.num_heads, self.num_kv_heads,
+                               self.head_dim, self.d_ff, self.vocab_size)
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind in ("global", "local"):
+                total += d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+                if self.qkv_bias:
+                    total += (h + 2 * kv) * hd
+            elif kind == "recurrent":
+                w = self.lru_width or d
+                total += 2 * d * w + w * d + self.conv1d_width * w + 3 * w
+            elif kind == "mlstm":
+                total += 2 * d * 2 * d + 2 * d * d // 4 + 2 * d * d
+            elif kind == "slstm":
+                total += 4 * d * d + 4 * d * d // 4
+            if self.is_moe_layer(i):
+                m = self.moe
+                total += d * m.num_experts  # router
+                total += m.num_experts * 3 * d * m.d_expert
+                total += m.num_shared_experts * 3 * d * (m.d_shared or m.d_expert)
+            elif kind in ("global", "local", "recurrent"):
+                if ff > 0:
+                    total += 3 * d * ff
+            total += 2 * d  # norms
+        if self.encoder is not None:
+            e = self.encoder
+            total += e.num_layers * (4 * e.d_model * e.d_model + 2 * e.d_model * e.d_ff)
+            # cross-attention in every decoder layer
+            total += self.num_layers * (4 * d * d)
+        return total
+
+    @property
+    def num_active_params(self) -> int:
+        """Active params per token (MoE counts only routed top-k + shared)."""
+        if self.moe is None:
+            return self.num_params
+        m = self.moe
+        full_experts = m.num_experts * 3 * self.d_model * m.d_expert
+        active_experts = (m.top_k + m.num_shared_experts) * 3 * self.d_model * (m.d_expert)
+        n_moe_layers = sum(1 for i in range(self.num_layers) if self.is_moe_layer(i))
+        return self.num_params - n_moe_layers * (full_experts - active_experts
+                                                 + m.num_shared_experts * 3 * self.d_model * m.d_expert
+                                                 - m.num_shared_experts * 3 * self.d_model * (m.d_shared or m.d_expert))
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per arch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k":   ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k":  ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / runtime
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    multi_pod: bool = False
+    # logical -> mesh axis rules; tried in order, first divisible rule wins.
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+        ("batch",      ("pod", "data")),
+        ("seq",        ()),               # activation seq (opt-in seq-parallel)
+        ("moe_seq",    ("model",)),       # seq sharding inside MoE dispatch
+        ("kv_seq",     ("data",)),        # long-context KV sharding
+        ("vocab",      ("model",)),
+        ("embed",      ()),
+        ("heads",      ("model",)),
+        ("kv_heads",   ("model",)),
+        ("mlp",        ("model",)),
+        ("expert",     ("model",)),
+        ("expert_mlp", ()),
+        ("lowrank",    ()),
+        ("conv",       ()),
+        ("lru",        ("model",)),
+    )
+    remat_policy: str = "minimal"      # none | minimal | full
+    scan_layers: bool = True
+    grad_compress_bits: int = 0        # 0 = off, 8 = int8 compressed psum
+    use_shard_map_moe: bool = False    # explicit all_to_all EP path
+    donate_state: bool = True
+
+    def rule_for(self, logical: str) -> Tuple[str, ...]:
+        for name, axes in self.rules:
+            if name == logical:
+                return axes
+        return ()
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    microbatch: int = 0                # 0 = no accumulation
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    seed: int = 0
+    z_loss: float = 1e-4
+    loss_chunk: int = 512   # sequence-chunked xent: peak logits = B*chunk*V
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 4096
+    prefill_chunk: int = 512
+    temperature: float = 0.0
+    eos_id: int = 1
+    offload: bool = False              # expert offloading emulation on/off
+    prefetch_layers: int = 1
+    cache_experts: int = 4             # device-resident expert cache per layer
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+    dtype: str = "bfloat16"

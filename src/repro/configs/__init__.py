@@ -1,0 +1,1 @@
+"""One module per architecture (exact dims from the assignment)."""

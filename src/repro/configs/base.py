@@ -1,0 +1,67 @@
+"""Config helpers: reduced smoke-test variants + shape applicability."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from ..config import (EncoderConfig, ModelConfig, MoEConfig, QuantConfig,
+                      ShapeConfig)
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family variant for CPU smoke tests: few layers, narrow
+    width, small vocab/experts — structure (pattern, GQA ratio, MoE-ness,
+    enc-dec, recurrence) preserved."""
+    pat = len(cfg.block_pattern)
+    layers = max(pat, 2)
+    if cfg.first_layer_dense:
+        layers += 1
+    kv = max(1, min(cfg.num_kv_heads, 2))
+    heads = max(kv * min(cfg.q_per_kv, 2), 2)
+    head_dim = 32
+    d_model = 128
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 8),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=64,
+            d_shared=64 if cfg.moe.d_shared else 0,
+            quant=dataclasses.replace(cfg.moe.quant, rank_budget=8,
+                                      hqq_iters=3),
+        )
+    enc = None
+    if cfg.encoder is not None:
+        enc = EncoderConfig(num_layers=2, d_model=d_model, num_heads=heads,
+                            d_ff=192, source_len=24)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=192 if cfg.d_ff else 0,
+        vocab_size=512,
+        window_size=min(cfg.window_size, 16),
+        lru_width=d_model if cfg.lru_width else 0,
+        moe=moe,
+        encoder=enc,
+        quant=dataclasses.replace(cfg.quant, rank_budget=8, hqq_iters=3),
+        max_position=4096,
+    )
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason string."""
+    if shape.name == "long_500k":
+        kinds = set(cfg.block_pattern)
+        subquadratic = kinds & {"recurrent", "mlstm", "slstm"} or (
+            "local" in kinds and "global" in kinds)
+        if not subquadratic and kinds == {"global"}:
+            return ("pure full-attention arch: 500k decode KV is "
+                    "quadratic-history; skipped per assignment")
+    return None

@@ -1,0 +1,12 @@
+"""BEAM-LRC core: the paper's contribution as composable JAX modules."""
+from .quantize import (PLANES, PACK_BLOCK, QuantizedTensor, dequantize,
+                       pack_bits, packed_nbytes, quant_error, quantize,
+                       quantize_with_params, unpack_bits)
+from .hqq import hqq_params, hqq_quantize, shrink_lp
+from .kurtosis import allocate_ranks, kurtosis, uniform_ranks
+from .compensator import (Compensator, build_compensator, compensated_weight,
+                          compensation_quality)
+from .pipeline import (CompressedExpertStack, compress_expert_stack,
+                       compress_ffn_weights)
+from .restoration import (compensated_expert_ffn, restoration_wire_bytes,
+                          topn_mask, topn_mask_from_scores)

@@ -1,0 +1,118 @@
+"""Low-rank residual compensators (paper §3.1, step 2).
+
+One truncated SVD of the quantization residual E = W - Q^-1(Q(W)) at the
+allocated rank r, reparameterized U <- U sqrt(S), V <- sqrt(S) V^T, with the
+factors themselves stored quantized (paper: INT3; default here int8).
+
+Ranks differ per expert (kurtosis-guided), but jit needs static shapes, so a
+layer's compensators are zero-padded to the layer-max rank; the *true* rank
+is kept for bandwidth accounting (padding columns are exact zeros and do not
+change the math).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantize import QuantizedTensor, dequantize, quantize
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("u", "v", "u_scale", "v_scale"),
+         meta_fields=("rank", "pad_rank", "factor_bits"))
+@dataclass
+class Compensator:
+    """Rank-r factors for one weight matrix; zero-padded to ``pad_rank``.
+
+    Factors are stored symmetric-quantized per column (u) / row (v) at
+    ``factor_bits`` (int8 codes in an int8 array; sub-byte widths reuse the
+    int8 container but clamp the code range, and bandwidth accounting uses
+    the true bit width).  ``u``: (m, R), ``v``: (R, n).
+    """
+    u: jax.Array
+    v: jax.Array
+    u_scale: jax.Array      # (1, R)
+    v_scale: jax.Array      # (R, 1)
+    rank: int               # true allocated rank (bandwidth accounting)
+    pad_rank: int           # static padded rank (jit shapes)
+    factor_bits: int
+
+    @property
+    def nbytes_wire(self) -> int:
+        """Bytes moved per transfer of this compensator (true rank only)."""
+        m = self.u.shape[0]
+        n = self.v.shape[1]
+        r = self.rank
+        bits = self.factor_bits
+        return int(r * (m + n) * bits / 8 + 2 * 2 * r)  # + bf16 scales
+
+    def materialize(self, dtype=jnp.float32) -> jax.Array:
+        """Dense E_hat = U V (including dequantized factors)."""
+        u = self.u.astype(jnp.float32) * self.u_scale
+        v = self.v.astype(jnp.float32) * self.v_scale
+        return (u @ v).astype(dtype)
+
+
+def _sym_quant_cols(x: jax.Array, bits: int, axis: int):
+    """Symmetric per-column (axis kept) quantization into int8 codes."""
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def build_compensator(residual: jax.Array, rank: int, pad_rank: int,
+                      factor_bits: int = 8) -> Compensator:
+    """Truncated SVD of ``residual`` at ``rank``, padded to ``pad_rank``."""
+    m, n = residual.shape
+    rank = int(min(rank, m, n))
+    pad_rank = int(max(pad_rank, rank))
+    if rank > 0:
+        # full_matrices=False keeps this O(mn*min(m,n)); offline-only cost.
+        u, s, vt = jnp.linalg.svd(residual.astype(jnp.float32),
+                                  full_matrices=False)
+        sq = jnp.sqrt(s[:rank])
+        u = u[:, :rank] * sq[None, :]
+        v = vt[:rank, :] * sq[:, None]
+    else:
+        u = jnp.zeros((m, 0), jnp.float32)
+        v = jnp.zeros((0, n), jnp.float32)
+    if pad_rank > rank:
+        u = jnp.pad(u, ((0, 0), (0, pad_rank - rank)))
+        v = jnp.pad(v, ((0, pad_rank - rank), (0, 0)))
+    if factor_bits >= 16:
+        return Compensator(u.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                           jnp.ones((1, pad_rank), jnp.float32),
+                           jnp.ones((pad_rank, 1), jnp.float32),
+                           rank, pad_rank, factor_bits)
+    qu, su = _sym_quant_cols(u, factor_bits, axis=0)   # per rank-column
+    qv, sv = _sym_quant_cols(v, factor_bits, axis=1)   # per rank-row
+    return Compensator(qu, qv, su, sv, rank, pad_rank, factor_bits)
+
+
+def compensated_weight(qt: QuantizedTensor, comp: Optional[Compensator],
+                       dtype=jnp.float32) -> jax.Array:
+    """W_hat = Q^-1(Q(W)) + U V (paper §3.2 reconstruction)."""
+    w = dequantize(qt, jnp.float32)
+    if comp is not None:
+        w = w + comp.materialize(jnp.float32)
+    return w.astype(dtype)
+
+
+def compensation_quality(w: jax.Array, qt: QuantizedTensor,
+                         comp: Optional[Compensator]) -> dict:
+    """Diagnostics: residual norms before/after compensation."""
+    w32 = w.astype(jnp.float32)
+    e0 = w32 - dequantize(qt)
+    e1 = w32 - compensated_weight(qt, comp)
+    nw = jnp.maximum(jnp.linalg.norm(w32), 1e-12)
+    return {
+        "rel_err_quant": float(jnp.linalg.norm(e0) / nw),
+        "rel_err_comp": float(jnp.linalg.norm(e1) / nw),
+    }

@@ -1,0 +1,74 @@
+"""Half-Quadratic Quantization (HQQ) — calibration-free zero-point search.
+
+Faithful re-implementation of Badri & Shaji (2023): minimize
+``||W - Q^-1(Q(W))||_p^p`` (p < 1) over the zero-point via half-quadratic
+splitting.  Per iteration:
+
+    W_q = clip(round(W/s + z))
+    W_r = (W_q - z) * s                       # current dequant
+    W_e = shrink_lp(W - W_r, beta, p)         # generalized soft-threshold
+    z   = mean_g( W_q - (W - W_e)/s )         # closed-form zero update
+    beta *= kappa
+
+The shrinkage operator is the proximal map of the l_p norm,
+``sign(x) * relu(|x| - |x|^(p-1)/beta)``.  Scale is held at its min/max
+initialization (HQQ's default); only the zero-point moves.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QuantizedTensor, quantize_with_params
+
+
+def shrink_lp(x: jax.Array, beta: float, p: float) -> jax.Array:
+    ax = jnp.abs(x)
+    # |x|^(p-1) for p<1 explodes at 0; HQQ clamps via the relu outside.
+    thresh = jnp.power(jnp.maximum(ax, 1e-8), p - 1.0) / beta
+    return jnp.sign(x) * jnp.maximum(ax - thresh, 0.0)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size", "iters"))
+def hqq_params(w: jax.Array, bits: int, group_size: int = 64,
+               iters: int = 20, p: float = 0.7, beta: float = 10.0,
+               beta_scale: float = 1.01):
+    """Return HQQ-optimized (scale, zero), each (K//G, N) f32.
+
+    The l_p shrinkage threshold |x|^(p-1)/beta is not scale-invariant, so
+    the optimization runs on std-normalized weights (scale folded back at
+    the end) — otherwise small-magnitude layers see a relatively huge
+    threshold and HQQ silently degrades to RTN-or-worse.
+    """
+    k, n = w.shape
+    w32 = w.astype(jnp.float32)
+    wstd = jnp.maximum(jnp.std(w32), 1e-12)
+    w = w32 / wstd
+    qmax = (1 << bits) - 1
+    g = w.reshape(k // group_size, group_size, n)
+    lo = g.min(axis=1, keepdims=True)
+    hi = g.max(axis=1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    zero = -lo / scale
+
+    def body(i, carry):
+        zero, beta = carry
+        wq = jnp.clip(jnp.round(g / scale + zero), 0, qmax)
+        wr = (wq - zero) * scale
+        we = shrink_lp(g - wr, beta, p)
+        zero = jnp.mean(wq - (g - we) / scale, axis=1, keepdims=True)
+        return zero, beta * beta_scale
+
+    zero, _ = jax.lax.fori_loop(0, iters, body, (zero, jnp.float32(beta)))
+    # fold the normalization back into the (scale, zero) pair
+    return (scale * wstd).reshape(-1, n), \
+        jnp.broadcast_to(zero, scale.shape).reshape(-1, n)
+
+
+def hqq_quantize(w: jax.Array, bits: int, group_size: int = 64,
+                 iters: int = 20, p: float = 0.7, beta: float = 10.0,
+                 beta_scale: float = 1.01) -> QuantizedTensor:
+    scale, zero = hqq_params(w, bits, group_size, iters, p, beta, beta_scale)
+    return quantize_with_params(w, scale, zero, bits, group_size)

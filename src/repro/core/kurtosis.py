@@ -1,0 +1,60 @@
+"""Kurtosis-guided rank allocation (paper §3.1, step 1).
+
+Experts with heavier-tailed weight distributions (higher kurtosis) incur
+larger quantization residuals and therefore receive larger compensator
+ranks.  Ranks come from a fixed bucket set and are assigned greedily in
+descending-kurtosis order under the global budget ``sum(r_i) <= N * R_avg``.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import RANK_BUCKETS
+
+
+def kurtosis(w: jax.Array) -> jax.Array:
+    """Pearson kurtosis over all elements of ``w`` (paper eq. in §3.1)."""
+    w = w.astype(jnp.float32).reshape(-1)
+    mu = jnp.mean(w)
+    var = jnp.mean((w - mu) ** 2)
+    return jnp.mean((w - mu) ** 4) / jnp.maximum(var, 1e-12) ** 2
+
+
+def allocate_ranks(kurt: Sequence[float], rank_budget: int,
+                   buckets: Tuple[int, ...] = RANK_BUCKETS,
+                   max_rank: int | None = None) -> np.ndarray:
+    """Greedy bucket assignment under ``sum(r) <= N * rank_budget``.
+
+    Traverses experts in descending kurtosis; each gets the largest bucket
+    that keeps the running total within budget (paper's literal policy —
+    concentrates rank on the hardest experts, many get r=0).
+
+    ``max_rank`` caps buckets at min(m, n) of the weight matrices.
+    """
+    kurt = np.asarray(kurt, dtype=np.float64)
+    n = len(kurt)
+    budget = n * rank_budget
+    usable = sorted((b for b in buckets
+                     if max_rank is None or b <= max_rank), reverse=True)
+    order = np.argsort(-kurt, kind="stable")
+    ranks = np.zeros(n, dtype=np.int64)
+    spent = 0
+    for idx in order:
+        for b in usable:
+            if spent + b <= budget:
+                ranks[idx] = b
+                spent += b
+                break
+    return ranks
+
+
+def uniform_ranks(n: int, rank_budget: int,
+                  buckets: Tuple[int, ...] = RANK_BUCKETS) -> np.ndarray:
+    """Ablation baseline: same bucket rank for every expert (<= budget)."""
+    feasible = [b for b in buckets if b <= rank_budget]
+    r = max(feasible) if feasible else 0
+    return np.full(n, r, dtype=np.int64)

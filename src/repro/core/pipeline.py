@@ -1,0 +1,205 @@
+"""Offline compression pipeline (paper §3.1): HQQ quantize -> kurtosis ->
+rank allocation -> one-time SVD -> packed artifact.
+
+Operates on *expert stacks*: a (E, K, N) weight tensor holding one
+projection (w1/w2/w3) for all E experts of a layer.  Dense models use E=1
+stacks (the degenerate static quantize-then-compensate form — see
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import QuantConfig
+from .compensator import _sym_quant_cols
+from .hqq import hqq_params
+from .kurtosis import allocate_ranks, kurtosis, uniform_ranks
+from .quantize import (QuantizedTensor, dequantize, pack_bits,
+                       packed_nbytes, quantize_with_params, unpack_bits)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("planes", "scale", "zero", "u", "v", "u_scale", "v_scale"),
+         meta_fields=("bits", "group_size", "shape", "ranks", "pad_rank",
+                      "factor_bits"))
+@dataclass
+class CompressedExpertStack:
+    """Quantized weights + padded low-rank compensators for E experts.
+
+    planes[i]: (E, K//c_i, N) uint8;  scale/zero: (E, K//G, N) f32
+    u: (E, K, R) int8/bf16;  v: (E, R, N);  R = pad_rank
+    ranks: per-expert TRUE ranks (tuple, static) for bandwidth accounting.
+    """
+    planes: Tuple[jax.Array, ...]
+    scale: jax.Array
+    zero: jax.Array
+    u: jax.Array
+    v: jax.Array
+    u_scale: jax.Array
+    v_scale: jax.Array
+    bits: int
+    group_size: int
+    shape: Tuple[int, int, int]        # (E, K, N)
+    ranks: Tuple[int, ...]
+    pad_rank: int
+    factor_bits: int
+
+    # -- helpers ----------------------------------------------------------
+    def expert_qt(self, e: int) -> QuantizedTensor:
+        return QuantizedTensor(tuple(p[e] for p in self.planes),
+                               self.scale[e], self.zero[e],
+                               self.bits, self.group_size, self.shape[1:])
+
+    def dequantize_all(self, dtype=jnp.float32) -> jax.Array:
+        """(E, K, N) dequantized (no compensation).
+
+        E is taken from the runtime leaves (inside shard_map the stack
+        carries the LOCAL expert slice, not the global count in ``shape``).
+        """
+        _, K, N = self.shape
+        E = self.scale.shape[0]
+        q = jax.vmap(lambda *pl: unpack_bits(tuple(pl), self.bits))(*self.planes)
+        g = q.astype(jnp.float32).reshape(E, K // self.group_size,
+                                          self.group_size, N)
+        w = (g - self.zero[:, :, None, :]) * self.scale[:, :, None, :]
+        return w.reshape(E, K, N).astype(dtype)
+
+    def compensation_all(self, dtype=jnp.float32) -> jax.Array:
+        """(E, K, N) dense U V term for every expert."""
+        u = self.u.astype(jnp.float32) * self.u_scale
+        v = self.v.astype(jnp.float32) * self.v_scale
+        return jnp.einsum("ekr,ern->ekn", u, v).astype(dtype)
+
+    # -- bandwidth accounting (bytes on the wire) --------------------------
+    def expert_wire_bytes(self, e: int, compensated: bool) -> int:
+        _, K, N = self.shape
+        b = packed_nbytes(self.bits, K, N)
+        b += 2 * (K // self.group_size) * N * 2          # bf16 scale+zero
+        if compensated:
+            r = self.ranks[e]
+            b += int(r * (K + N) * self.factor_bits / 8) + 4 * r
+        return b
+
+    @property
+    def fp16_wire_bytes(self) -> int:
+        _, K, N = self.shape
+        return K * N * 2
+
+
+def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
+                          ranks: Optional[np.ndarray] = None
+                          ) -> Tuple[CompressedExpertStack, Dict]:
+    """Full offline pipeline for one (E, K, N) projection stack.
+
+    Returns the packed artifact plus a report dict (kurtosis, ranks,
+    residual norms before/after compensation) used by benchmarks.
+    """
+    E, K, N = w.shape
+    w32 = jnp.asarray(w, jnp.float32)
+    # group_size <= 0 means per-channel (one group spanning all of K) —
+    # the coarse granularity at which RTN/GPTQ-class int2 collapses
+    if qcfg.group_size <= 0 or qcfg.group_size > K:
+        qcfg = __import__("dataclasses").replace(qcfg, group_size=K)
+
+    # 1. per-expert kurtosis (paper §3.1 step 1)
+    kurt = np.array([float(kurtosis(w32[e])) for e in range(E)])
+
+    # 2. HQQ quantization (paper §3.1 step 2; done before allocation so the
+    # 'error' strategy can rank by measured residuals)
+    def _q(we):
+        s, z = hqq_params(we, qcfg.bits, qcfg.group_size, qcfg.hqq_iters,
+                          qcfg.hqq_p, qcfg.hqq_beta, qcfg.hqq_beta_scale)
+        return quantize_with_params(we, s, z, qcfg.bits, qcfg.group_size)
+
+    qts = [_q(w32[e]) for e in range(E)]
+
+    # 3. rank allocation: kurtosis proxy (paper) | measured residual
+    # (beyond-paper) | uniform (ablation)
+    max_rank = min(K, N)
+    strategy = qcfg.rank_alloc if qcfg.kurtosis_guided else "uniform"
+    if ranks is None:
+        if strategy == "error":
+            from .quantize import quant_error
+            errs = np.array([float(quant_error(w32[e], qts[e]))
+                             for e in range(E)])
+            ranks = allocate_ranks(errs, qcfg.rank_budget, qcfg.rank_buckets,
+                                   max_rank=max_rank)
+        elif strategy == "kurtosis":
+            ranks = allocate_ranks(kurt, qcfg.rank_budget, qcfg.rank_buckets,
+                                   max_rank=max_rank)
+        else:
+            r = (qcfg.uniform_rank if qcfg.uniform_rank is not None
+                 else qcfg.rank_budget)
+            ranks = uniform_ranks(E, r, qcfg.rank_buckets)
+    ranks = np.minimum(np.asarray(ranks, np.int64), max_rank)
+    pad_rank = int(max(int(ranks.max()), 1))
+    planes = tuple(jnp.stack([qt.planes[i] for qt in qts])
+                   for i in range(len(qts[0].planes)))
+    scale = jnp.stack([qt.scale for qt in qts])
+    zero = jnp.stack([qt.zero for qt in qts])
+
+    # 4. residual SVD at the allocated rank, zero-padded to pad_rank
+    deq = jnp.stack([dequantize(qt) for qt in qts])
+    resid = w32 - deq
+    us, vs, uss, vss = [], [], [], []
+    for e in range(E):
+        r = int(ranks[e])
+        uu, ss, vt = jnp.linalg.svd(resid[e], full_matrices=False)
+        sq = jnp.sqrt(ss[:pad_rank])
+        uu = uu[:, :pad_rank] * sq[None, :]
+        vv = vt[:pad_rank, :] * sq[:, None]
+        mask = (jnp.arange(pad_rank) < r)
+        uu = uu * mask[None, :]
+        vv = vv * mask[:, None]
+        if qcfg.factor_bits >= 16:
+            us.append(uu.astype(jnp.bfloat16)); vs.append(vv.astype(jnp.bfloat16))
+            uss.append(jnp.ones((1, pad_rank), jnp.float32))
+            vss.append(jnp.ones((pad_rank, 1), jnp.float32))
+        else:
+            qu, su = _sym_quant_cols(uu, qcfg.factor_bits, axis=0)
+            qv, sv = _sym_quant_cols(vv, qcfg.factor_bits, axis=1)
+            us.append(qu); vs.append(qv); uss.append(su); vss.append(sv)
+
+    stack = CompressedExpertStack(
+        planes=planes, scale=scale, zero=zero,
+        u=jnp.stack(us), v=jnp.stack(vs),
+        u_scale=jnp.stack(uss), v_scale=jnp.stack(vss),
+        bits=qcfg.bits, group_size=qcfg.group_size, shape=(E, K, N),
+        ranks=tuple(int(r) for r in ranks), pad_rank=pad_rank,
+        factor_bits=qcfg.factor_bits)
+
+    # 5. report
+    comp = stack.compensation_all()
+    nw = jnp.maximum(jnp.linalg.norm(w32.reshape(E, -1), axis=1), 1e-12)
+    report = {
+        "kurtosis": kurt,
+        "ranks": np.asarray(ranks),
+        "rel_err_quant": np.asarray(
+            jnp.linalg.norm(resid.reshape(E, -1), axis=1) / nw),
+        "rel_err_comp": np.asarray(
+            jnp.linalg.norm((resid - comp).reshape(E, -1), axis=1) / nw),
+    }
+    return stack, report
+
+
+def compress_ffn_weights(w1: jax.Array, w2: jax.Array, w3: jax.Array,
+                         qcfg: QuantConfig):
+    """Compress the three projections of a (shared or routed) FFN stack.
+
+    Rank allocation runs per projection pool (paper computes kurtosis per
+    projection matrix w1/w2/w3 and budgets over the N experts of a pool).
+    """
+    out, reports = {}, {}
+    for name, w in (("w1", w1), ("w2", w2), ("w3", w3)):
+        if w is None:
+            continue
+        stack, rep = compress_expert_stack(w, qcfg)
+        out[name] = stack
+        reports[name] = rep
+    return out, reports

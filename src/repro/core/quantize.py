@@ -1,0 +1,178 @@
+"""Group-wise affine quantization with TPU-friendly bit-plane packing.
+
+The paper offloads INT2/INT3 experts over PCIe; on TPU the analogous win is
+streaming packed sub-byte weights HBM->VMEM.  TPU vector units want uniform
+shift/mask lanes, so a b-bit tensor is stored as a set of *power-of-two bit
+planes* (3 = 2+1): a plane of width ``p`` packs ``c = 8//p`` values per
+byte.  Packing is **block-local** along K (block = ``PACK_BLOCK`` rows): the
+K axis is cut into blocks, each block into ``c`` contiguous chunks, chunk
+``j`` stored at bit offset ``j*p``.  A kernel K-tile that is a multiple of
+the block therefore consumes every byte it loads in full — HBM traffic is
+exactly ``bits/8`` bytes per weight — and unpacking is a fixed sequence of
+uniform shifts + one stack/reshape on the sublane axis (no gathers).
+
+Quantization is asymmetric uint: ``q = clip(round(w/s + z), 0, 2^b-1)`` and
+``dequant = (q - z) * s`` with per-group (G along K) scale/zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# plane decomposition per bit width: tuple of (plane_width, bit_offset)
+PLANES = {
+    1: ((1, 0),),
+    2: ((2, 0),),
+    3: ((2, 0), (1, 2)),
+    4: ((4, 0),),
+    8: ((8, 0),),
+}
+
+PACK_BLOCK = 64  # K rows per packing block; kernel K-tiles must be multiples
+
+
+def plane_widths(bits: int) -> Tuple[int, ...]:
+    return tuple(p for p, _ in PLANES[bits])
+
+
+def packed_nbytes(bits: int, k: int, n: int) -> int:
+    """Exact packed byte count for a (k, n) matrix at ``bits`` width."""
+    return sum((k // (8 // p)) * n for p, _ in PLANES[bits])
+
+
+# ---------------------------------------------------------------------------
+# block-local bit-plane packing
+# ---------------------------------------------------------------------------
+
+def pack_plane(vals: jax.Array, p: int, block: int = PACK_BLOCK) -> jax.Array:
+    """Pack (K, N) uint8 p-bit values into (K//(8//p), N) bytes, block-local.
+
+    Within each K-block, chunk j (rows [j*block/c, (j+1)*block/c)) goes to
+    bit offset j*p of the block's bytes.
+    """
+    c = 8 // p
+    k, n = vals.shape[0], vals.shape[1]
+    assert k % block == 0 and block % c == 0, (k, block, c)
+    v = vals.reshape(k // block, c, block // c, n).astype(jnp.uint8)
+    out = jnp.zeros((k // block, block // c, n), jnp.uint8)
+    for j in range(c):
+        out = out | (v[:, j] << (j * p))
+    return out.reshape(k // c, n)
+
+
+def unpack_plane(packed: jax.Array, p: int, block: int = PACK_BLOCK) -> jax.Array:
+    """Inverse of :func:`pack_plane`: (K//c, N) bytes -> (K, N) uint8."""
+    c = 8 // p
+    kc, n = packed.shape
+    k = kc * c
+    mask = jnp.uint8((1 << p) - 1)
+    pk = packed.reshape(k // block, block // c, n)
+    chunks = [(pk >> (j * p)) & mask for j in range(c)]
+    return jnp.stack(chunks, axis=1).reshape(k, n)
+
+
+def pack_bits(q: jax.Array, bits: int, block: int = PACK_BLOCK
+              ) -> Tuple[jax.Array, ...]:
+    """Split b-bit codes into power-of-two planes and pack each."""
+    planes = []
+    for p, off in PLANES[bits]:
+        sub = (q >> off) & ((1 << p) - 1)
+        planes.append(pack_plane(sub.astype(jnp.uint8), p, block))
+    return tuple(planes)
+
+
+def unpack_bits(planes: Tuple[jax.Array, ...], bits: int,
+                block: int = PACK_BLOCK) -> jax.Array:
+    """Inverse of :func:`pack_bits` -> uint8 codes (K, N)."""
+    out = None
+    for (p, off), plane in zip(PLANES[bits], planes):
+        sub = unpack_plane(plane, p, block).astype(jnp.uint8) << off
+        out = sub if out is None else out | sub
+    return out
+
+
+# ---------------------------------------------------------------------------
+# QuantizedTensor container
+# ---------------------------------------------------------------------------
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("planes", "scale", "zero"),
+         meta_fields=("bits", "group_size", "shape"))
+@dataclass
+class QuantizedTensor:
+    """Packed groupwise-quantized matrix of logical ``shape`` = (K, N).
+
+    ``planes``: tuple of uint8 arrays (one per bit plane).
+    ``scale``/``zero``: (K // group_size, N) in f32.
+    """
+    planes: Tuple[jax.Array, ...]
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    group_size: int
+    shape: Tuple[int, ...]
+
+    @property
+    def nbytes_packed(self) -> int:
+        k, n = self.shape
+        w = packed_nbytes(self.bits, k, n)
+        w += 2 * (k // self.group_size) * n * 2  # bf16 scale+zero on the wire
+        return w
+
+    def astype_codes(self) -> jax.Array:
+        return unpack_bits(self.planes, self.bits)
+
+
+def _group_minmax(w: jax.Array, group_size: int):
+    k, n = w.shape
+    g = w.reshape(k // group_size, group_size, n)
+    return g, g.min(axis=1, keepdims=True), g.max(axis=1, keepdims=True)
+
+
+def quantize(w: jax.Array, bits: int, group_size: int = 64) -> QuantizedTensor:
+    """Plain (round-to-nearest) groupwise asymmetric quantization."""
+    k, n = w.shape
+    assert k % group_size == 0, (k, group_size)
+    w32 = w.astype(jnp.float32)
+    g, lo, hi = _group_minmax(w32, group_size)
+    qmax = (1 << bits) - 1
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    zero = -lo / scale
+    q = jnp.clip(jnp.round(g / scale + zero), 0, qmax)
+    q = q.reshape(k, n).astype(jnp.uint8)
+    return QuantizedTensor(
+        planes=pack_bits(q, bits),
+        scale=scale.reshape(-1, n),
+        zero=zero.reshape(-1, n),
+        bits=bits, group_size=group_size, shape=(k, n))
+
+
+def quantize_with_params(w: jax.Array, scale: jax.Array, zero: jax.Array,
+                         bits: int, group_size: int) -> QuantizedTensor:
+    """Quantize with externally-optimized (HQQ) scale/zero."""
+    k, n = w.shape
+    qmax = (1 << bits) - 1
+    g = w.astype(jnp.float32).reshape(k // group_size, group_size, n)
+    q = jnp.clip(jnp.round(g / scale[:, None, :] + zero[:, None, :]), 0, qmax)
+    q = q.reshape(k, n).astype(jnp.uint8)
+    return QuantizedTensor(pack_bits(q, bits), scale, zero, bits, group_size, (k, n))
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    k, n = qt.shape
+    q = unpack_bits(qt.planes, qt.bits).astype(jnp.float32)
+    g = q.reshape(k // qt.group_size, qt.group_size, n)
+    w = (g - qt.zero[:, None, :]) * qt.scale[:, None, :]
+    return w.reshape(k, n).astype(dtype)
+
+
+def quant_error(w: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Relative Frobenius residual ||W - Q^-1(Q(W))||_F / ||W||_F."""
+    e = w.astype(jnp.float32) - dequantize(qt)
+    return jnp.linalg.norm(e) / jnp.maximum(jnp.linalg.norm(w.astype(jnp.float32)), 1e-12)

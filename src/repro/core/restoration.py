@@ -1,0 +1,107 @@
+"""Router-guided error compensation (paper §3.2).
+
+Per token, only the top-n (n < k) experts by router score receive their
+low-rank compensators; every other activated expert runs on plain
+dequantized low-bit weights.  Under jit/SPMD the per-token selectivity is a
+0/1 mask folded into the low-rank branch:
+
+    y_e = x @ Q^-1(Q(W_e))  +  ((x * m_e) @ U_e) @ V_e
+
+which is bit-identical to reconstructing W_hat_e = Q^-1(Q(W_e)) + U_e V_e
+for selected tokens and using the plain dequantized weight otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .pipeline import CompressedExpertStack
+
+
+def compute_dtype():
+    """Dequant/compensation compute+materialization dtype.
+
+    f32 by default; REPRO_COMPENSATED_DTYPE=bf16 halves the bytes of every
+    materialized dequantized weight on the ref path (hillclimb lever —
+    the Pallas kernel never materializes at all)."""
+    import os
+    return (jnp.bfloat16 if os.environ.get("REPRO_COMPENSATED_DTYPE", "")
+            .startswith("bf") else jnp.float32)
+
+
+def topn_mask(topk_idx: jax.Array, n: int, num_experts: int) -> jax.Array:
+    """(..., k) descending-score expert ids -> (..., E) 0/1 top-n mask."""
+    n = min(n, topk_idx.shape[-1])
+    sel = topk_idx[..., :n]
+    return jax.nn.one_hot(sel, num_experts, dtype=jnp.float32).sum(axis=-2)
+
+
+def topn_mask_from_scores(router_probs: jax.Array, k: int, n: int
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router probs (..., E) -> (topk_vals, topk_idx, topn mask (..., E))."""
+    vals, idx = jax.lax.top_k(router_probs, k)
+    return vals, idx, topn_mask(idx, n, router_probs.shape[-1])
+
+
+def compensated_expert_ffn(x: jax.Array, stack_w1: CompressedExpertStack,
+                           stack_w3: Optional[CompressedExpertStack],
+                           stack_w2: CompressedExpertStack,
+                           comp_mask: jax.Array,
+                           act=jax.nn.silu,
+                           dtype=jnp.bfloat16) -> jax.Array:
+    """Gated-FFN over *expert-stacked* inputs with masked compensation.
+
+    x:         (E, C, d)   tokens dispatched per expert (capacity C)
+    comp_mask: (E, C)      1.0 where this expert is within the token's top-n
+    returns    (E, C, d)
+
+    Reference (einsum) composition; the Pallas path fuses dequant+lowrank
+    per expert (see repro.kernels.ops) and is numerically validated against
+    this in tests.
+    """
+    dt = compute_dtype()
+    x32 = x.astype(dt)
+    m = comp_mask[..., None].astype(dt)
+
+    def proj(stack: CompressedExpertStack, inp: jax.Array) -> jax.Array:
+        w = stack.dequantize_all(dt)                     # (E, K, N)
+        y = jnp.einsum("eck,ekn->ecn", inp, w,
+                       preferred_element_type=jnp.float32).astype(dt)
+        u = (stack.u.astype(jnp.float32) * stack.u_scale).astype(dt)
+        v = (stack.v.astype(jnp.float32) * stack.v_scale).astype(dt)
+        xu = jnp.einsum("eck,ekr->ecr", inp * m, u,
+                        preferred_element_type=jnp.float32).astype(dt)
+        return y + jnp.einsum("ecr,ern->ecn", xu, v,
+                              preferred_element_type=jnp.float32).astype(dt)
+
+    h1 = proj(stack_w1, x32)
+    if stack_w3 is not None:
+        h = act(h1) * proj(stack_w3, x32)
+    else:
+        h = act(h1)
+    return proj(stack_w2, h).astype(dtype)
+
+
+def restoration_wire_bytes(stacks: dict, topk_idx, n: int,
+                           top_k: int) -> dict:
+    """Bandwidth accounting for one MoE layer invocation.
+
+    Returns bytes moved under (a) fp16 offload, (b) uniform low-bit,
+    (c) BEAM-LRC low-bit + top-n compensators — used by the offload
+    simulator and the fig-7 benchmark.
+    """
+    import numpy as np
+    idx = np.asarray(topk_idx).reshape(-1, topk_idx.shape[-1])
+    any_stack = next(iter(stacks.values()))
+    E = any_stack.shape[0]
+    activated = np.unique(idx)                       # experts fetched at all
+    restored = np.unique(idx[:, :n])                 # experts needing factors
+    b_fp16 = sum(s.fp16_wire_bytes for s in stacks.values()) * len(activated)
+    b_quant = sum(s.expert_wire_bytes(int(e), False)
+                  for s in stacks.values() for e in activated)
+    b_ours = sum(s.expert_wire_bytes(int(e), bool(e in restored))
+                 for s in stacks.values() for e in activated)
+    return {"fp16": int(b_fp16), "quant": int(b_quant), "ours": int(b_ours),
+            "activated": len(activated), "restored": len(restored)}

@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic synthetic streams + packing utilities."""
+from .synthetic import SyntheticLM, SyntheticLMConfig

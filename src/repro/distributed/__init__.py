@@ -1,0 +1,1 @@
+"""Distribution layer: logical sharding rules, EP shard_map, collectives."""

@@ -1,0 +1,90 @@
+"""Expert-parallel MoE execution under shard_map.
+
+Wraps ``models.moe.moe_apply_ep_a2a`` (train/prefill: dispatch all_to_all)
+and ``moe_apply_ep_replicated`` (decode: resident-expert partials + psum)
+with the mesh specs derived from the run's ParallelConfig.  Falls back to
+the plain GSPMD path when the expert count does not divide the EP axis.
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from ..config import ModelConfig, ParallelConfig
+from ..models.moe import moe_apply, moe_apply_ep_a2a, moe_apply_ep_replicated
+from .sharding import mesh_spec
+
+EP_AXIS = "model"
+
+
+def _param_spec(path_leaf: str) -> P:
+    """Specs for MoE-layer params entering shard_map (expert dim on EP)."""
+    if re.search(r"(^|/)router$", path_leaf):
+        return P(None, None)
+    return None  # filled by ndim below
+
+
+def _moe_param_specs(mp) -> Any:
+    def one(path, leaf):
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        if p.endswith("router"):
+            return P(None, None)
+        if p.startswith("shared"):
+            return P(*([None] * leaf.ndim))
+        return P(*([EP_AXIS] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, mp)
+
+
+def make_moe_ep_fn(mesh: Mesh, pcfg: ParallelConfig) -> Callable:
+    """Returns ctx.moe_ep_fn(h, mp, cfg, ctx) -> (y, aux)."""
+    all_axes = tuple(mesh.axis_names)
+
+    def moe_ep_fn(h, mp, cfg: ModelConfig, ctx):
+        mcfg = cfg.moe
+        ep = mesh.shape.get(EP_AXIS, 1)
+        quantized = ctx.quantized and "stacks" in mp
+        mp_local = {k: v for k, v in mp.items() if k != "shared"}
+        if mcfg.num_experts % ep or ep == 1:
+            b, s, d = h.shape
+            y2, aux = moe_apply(h.reshape(-1, d), mp_local, mcfg, act=cfg.act,
+                                quantized=quantized,
+                                exact_capacity=ctx.exact_capacity)
+            return y2.reshape(b, s, d), aux
+
+        replicated = ctx.ep_mode == "replicated"
+        # a2a path: shard the seq dim over the EP axis inside the region
+        # (sequence-parallel dispatch) — otherwise every EP rank routes the
+        # same tokens and expert compute duplicates EP-fold.
+        seq_logical = "moe_seq" if (not replicated
+                                    and h.shape[1] % ep == 0) else "seq"
+        hspec = mesh_spec(mesh, ("batch", seq_logical, None), h.shape, pcfg)
+        pspecs = _moe_param_specs(mp_local)
+        inner = (moe_apply_ep_replicated if replicated else moe_apply_ep_a2a)
+
+        def body(h_l, mp_l):
+            b_l, s_l, d = h_l.shape
+            y2, aux = inner(h_l.reshape(-1, d), mp_l, mcfg, act=cfg.act,
+                            quantized=quantized, axis=EP_AXIS)
+            # replicate aux scalars across the whole mesh (pmean of values
+            # already equal along an axis is a no-op)
+            aux = jax.tree.map(lambda v: jax.lax.pmean(v, all_axes), aux)
+            return y2.reshape(b_l, s_l, d), aux
+
+        y, aux = shard_map(
+            body, mesh=mesh,
+            in_specs=(hspec, pspecs),
+            out_specs=(hspec, jax.tree.map(lambda _: P(), {"load_balance": 0,
+                                                           "router_z": 0})),
+            check_vma=False,
+        )(h, mp_local)
+        return y, aux
+
+    return moe_ep_fn

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+- quant_matmul:          x @ dequant(bit-plane packed Wq)
+- lowrank_comp_matmul:   fused dequant matmul + router-guided rank-r epilogue
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd dispatch
+wrapper in ``ops.py`` (auto-selects pallas on TPU, ref on CPU; tests run
+``pallas_interpret``).
+"""
+from . import ops, ref
+from .ops import (compensated_matmul_stack, default_impl, lowrank_comp_matmul,
+                  quant_matmul)

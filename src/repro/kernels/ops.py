@@ -1,0 +1,134 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy (``impl``):
+  'auto'              pallas on TPU, ref elsewhere (CPU dry-run lowers real
+                      einsum FLOPs rather than interpreter scaffolding)
+  'pallas'            compiled Mosaic kernel (TPU)
+  'pallas_interpret'  kernel body executed by the Pallas interpreter on CPU
+                      (used by tests to validate the kernel against ref)
+  'ref'               pure-jnp oracle
+
+Wrappers pad M to the tile size and slice back, fold the compensator factor
+scales into the rank-space activation, and expose QuantizedTensor /
+CompressedExpertStack-level entry points.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantize import QuantizedTensor
+from . import ref as ref_ops
+from .quant_matmul import lowrank_comp_matmul_pallas, quant_matmul_pallas
+
+_ENV = "REPRO_KERNEL_IMPL"
+
+
+def default_impl() -> str:
+    env = os.environ.get(_ENV)
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pick(impl: Optional[str]) -> str:
+    impl = impl or "auto"
+    return default_impl() if impl == "auto" else impl
+
+
+def _pad_m(x: jax.Array, bm: int):
+    m = x.shape[0]
+    pm = (-m) % bm
+    if pm:
+        x = jnp.pad(x, ((0, pm), (0, 0)))
+    return x, m
+
+
+def _tile_sizes(m: int, k: int, n: int, bm: int, bn: int, bk: int):
+    """Clamp tiles to the problem and keep pack/group divisibility."""
+    bm = min(bm, max(8, m))
+    bk = min(bk, k)
+    bn = min(bn, n)
+    while k % bk:
+        bk //= 2
+    while n % bn:
+        bn //= 2
+    return bm, bn, bk
+
+
+def quant_matmul(x: jax.Array, qt: QuantizedTensor, *,
+                 impl: Optional[str] = None, out_dtype=None,
+                 bm: int = 128, bn: int = 256, bk: int = 512) -> jax.Array:
+    """y = x @ dequant(qt);  x: (M, K) -> (M, N)."""
+    out_dtype = out_dtype or x.dtype
+    impl = _pick(impl)
+    if impl == "ref":
+        return ref_ops.quant_matmul_ref(x, qt.planes, qt.scale, qt.zero,
+                                        qt.bits, qt.group_size, out_dtype)
+    k, n = qt.shape
+    bm, bn, bk = _tile_sizes(x.shape[0], k, n, bm, bn, bk)
+    xp, m = _pad_m(x, bm)
+    y = quant_matmul_pallas(xp, qt.planes, qt.scale, qt.zero,
+                            bits=qt.bits, group_size=qt.group_size,
+                            bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                            interpret=(impl == "pallas_interpret"))
+    return y[:m]
+
+
+def lowrank_comp_matmul(x: jax.Array, qt: QuantizedTensor,
+                        u: jax.Array, v: jax.Array,
+                        u_scale: jax.Array, v_scale: jax.Array,
+                        mask: Optional[jax.Array] = None, *,
+                        impl: Optional[str] = None, out_dtype=None,
+                        bm: int = 128, bn: int = 256, bk: int = 512
+                        ) -> jax.Array:
+    """Router-guided compensated matmul (paper §3.2).
+
+    y = x @ dequant(qt) + ((x * mask) @ (U u_s)) diag(v_s) @ V_codes
+    """
+    out_dtype = out_dtype or x.dtype
+    impl = _pick(impl)
+    if impl == "ref":
+        return ref_ops.lowrank_comp_matmul_ref(
+            x, qt.planes, qt.scale, qt.zero, qt.bits, qt.group_size,
+            u, v, u_scale, v_scale, mask, out_dtype)
+    # rank-space activation with both factor scales folded in (rank-r cost)
+    xf = x.astype(jnp.float32)
+    if mask is not None:
+        xf = xf * mask[:, None].astype(jnp.float32)
+    ud = u.astype(jnp.float32) * u_scale          # (K, R)
+    xu = jnp.dot(xf, ud, preferred_element_type=jnp.float32)
+    xu = xu * v_scale[None, :, 0]                 # fold (R,1) v_scale
+    k, n = qt.shape
+    bm, bn, bk = _tile_sizes(x.shape[0], k, n, bm, bn, bk)
+    xp, m = _pad_m(x, bm)
+    xup, _ = _pad_m(xu, bm)
+    y = lowrank_comp_matmul_pallas(
+        xp, qt.planes, qt.scale, qt.zero, xup, v,
+        bits=qt.bits, group_size=qt.group_size, bm=bm, bn=bn, bk=bk,
+        out_dtype=out_dtype, interpret=(impl == "pallas_interpret"))
+    return y[:m]
+
+
+def compensated_matmul_stack(x: jax.Array, stack, mask: jax.Array, *,
+                             impl: Optional[str] = None, out_dtype=None
+                             ) -> jax.Array:
+    """vmap of lowrank_comp_matmul over an expert stack.
+
+    x: (E, C, K), stack: CompressedExpertStack, mask: (E, C) -> (E, C, N).
+    """
+    out_dtype = out_dtype or x.dtype
+
+    def one(xe, planes, scale, zero, u, v, us, vs, me):
+        qt = QuantizedTensor(planes, scale, zero, stack.bits,
+                             stack.group_size, stack.shape[1:])
+        return lowrank_comp_matmul(xe, qt, u, v, us, vs, me, impl=impl,
+                                   out_dtype=out_dtype)
+
+    return jax.vmap(one)(x, stack.planes, stack.scale, stack.zero,
+                         stack.u, stack.v, stack.u_scale, stack.v_scale,
+                         mask)

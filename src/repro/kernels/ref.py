@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the numerical ground truth the kernels are validated against in
+``tests/test_kernels_*.py`` and the path the multi-pod dry-run lowers (so
+cost_analysis reports real FLOPs, not interpreter scaffolding).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantize import PACK_BLOCK, unpack_bits
+
+
+def dequant_ref(planes: Tuple[jax.Array, ...], scale: jax.Array,
+                zero: jax.Array, bits: int, group_size: int,
+                dtype=jnp.float32) -> jax.Array:
+    """(planes, scale, zero) -> dense (K, N) weights."""
+    q = unpack_bits(planes, bits).astype(jnp.float32)
+    k, n = q.shape
+    g = q.reshape(k // group_size, group_size, n)
+    w = (g - zero[:, None, :]) * scale[:, None, :]
+    return w.reshape(k, n).astype(dtype)
+
+
+def quant_matmul_ref(x: jax.Array, planes: Tuple[jax.Array, ...],
+                     scale: jax.Array, zero: jax.Array, bits: int,
+                     group_size: int, out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ dequant(Wq);  x: (M, K) -> (M, N)."""
+    from ..core.restoration import compute_dtype
+    dt = compute_dtype()
+    w = dequant_ref(planes, scale, zero, bits, group_size, dtype=dt)
+    return jnp.dot(x.astype(dt), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def lowrank_comp_matmul_ref(x: jax.Array, planes: Tuple[jax.Array, ...],
+                            scale: jax.Array, zero: jax.Array, bits: int,
+                            group_size: int,
+                            u: jax.Array, v: jax.Array,
+                            u_scale: jax.Array, v_scale: jax.Array,
+                            mask: Optional[jax.Array],
+                            out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ dequant(Wq) + ((x*mask) @ U) @ V  — paper §3.2 restoration.
+
+    u: (K, R) codes, u_scale: (1, R);  v: (R, N) codes, v_scale: (R, 1);
+    mask: (M,) 0/1 per-token compensation gate (None = all tokens).
+    """
+    y = quant_matmul_ref(x, planes, scale, zero, bits, group_size)
+    xf = x.astype(jnp.float32)
+    if mask is not None:
+        xf = xf * mask[:, None].astype(jnp.float32)
+    ud = u.astype(jnp.float32) * u_scale
+    vd = v.astype(jnp.float32) * v_scale
+    y = y + jnp.dot(jnp.dot(xf, ud), vd, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices form the 16x16 (single-pod) and 2x16x16 (multi-pod)
+meshes; each cell AOT-compiles its step function from ShapeDtypeStructs
+(no allocation), prints memory/cost analysis, and derives roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..config import SHAPES
+from ..registry import ASSIGNED, get_config
+from ..configs.base import supports_shape
+from .mesh import make_production_mesh
+from .roofline import collective_wire_bytes, derive_terms, model_flops
+from .steps import (cell_abstract, cell_shardings, make_prefill_step,
+                    make_serve_step, make_train_step, parallel_for_shape)
+
+
+def count_params(tree) -> int:
+    return sum(int(jnp.prod(jnp.array(l.shape))) if l.shape else 1
+               for l in jax.tree.leaves(tree))
+
+
+def _lower_cell(cfg, shape, mesh, pcfg, use_q, scan_unroll=False):
+    """Lower + compile one cell; returns (compiled, abstract)."""
+    abstract = cell_abstract(cfg, shape, quantized=use_q)
+    shardings = cell_shardings(mesh, abstract, pcfg)
+    if shape.kind == "train":
+        from ..config import TrainConfig
+        step, _ = make_train_step(cfg, TrainConfig(), mesh=mesh, pcfg=pcfg,
+                                  scan_unroll=scan_unroll,
+                                  remat_policy=("dots" if os.environ.get(
+                                      "REPRO_REMAT_POLICY") == "dots"
+                                      else "full"))
+        args = (abstract["state"], abstract["batch"])
+        in_sh = (shardings["state"], shardings["batch"])
+        out_sh = (shardings["state"], None)
+        donate = (0,)
+    else:
+        mk = make_prefill_step if shape.kind == "prefill" else make_serve_step
+        step, _ = mk(cfg, quantized=use_q, mesh=mesh, pcfg=pcfg,
+                     scan_unroll=scan_unroll)
+        args = (abstract["params"], abstract["caches"], abstract["batch"])
+        in_sh = (shardings["params"], shardings["caches"], shardings["batch"])
+        out_sh = (None, shardings["caches"])
+        donate = (1,)
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        compiled = jitted.lower(*args).compile()
+    return compiled, abstract
+
+
+def cost_pass(cfg, shape, mesh, pcfg, use_q):
+    """XLA's cost_analysis counts loop bodies ONCE, so scanned stacks
+    undercount FLOPs/bytes by the trip count.  This pass lowers the model
+    at two reduced depths (one and two pattern groups) with every scan
+    UNROLLED and extrapolates linearly to the full depth — exact because
+    per-group cost is uniform; embed/head/encoder/loss land in the
+    intercept."""
+    import dataclasses as dc
+    p_len = len(cfg.block_pattern)
+    extra = 1 if cfg.first_layer_dense else 0
+    l1, l2 = p_len + extra, 2 * p_len + extra
+    if cfg.num_layers <= l2:  # shallow model: single exact unrolled pass
+        compiled, _ = _lower_cell(cfg, shape, mesh, pcfg, use_q,
+                                  scan_unroll=True)
+        cost = compiled.cost_analysis() or {}
+        wire = collective_wire_bytes(compiled.as_text(), 16).get("total", 0.0)
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "wire": wire, "method": "exact_unrolled"}
+    vals = []
+    for L in (l1, l2):
+        cfg_l = dc.replace(cfg, num_layers=L)
+        compiled, _ = _lower_cell(cfg_l, shape, mesh, pcfg, use_q,
+                                  scan_unroll=True)
+        cost = compiled.cost_analysis() or {}
+        wire = collective_wire_bytes(compiled.as_text(), 16).get("total", 0.0)
+        vals.append((float(cost.get("flops", 0.0)),
+                     float(cost.get("bytes accessed", 0.0)), wire))
+    out = {}
+    for i, key in enumerate(("flops", "bytes", "wire")):
+        slope = (vals[1][i] - vals[0][i]) / (l2 - l1)
+        out[key] = vals[0][i] + slope * (cfg.num_layers - l1)
+    out["method"] = f"extrapolated_L{l1}_L{l2}"
+    return out
+
+
+OPTS = ("bf16dq", "kv8", "scalesbf16", "cf1", "noq", "rematdots", "attnbf16")
+
+
+def apply_opts(cfg, opts):
+    """Hillclimb variants (EXPERIMENTS.md §Perf):
+      bf16dq     dequant/compensation materializes bf16 instead of f32
+                 (env-based; the TPU Pallas kernel never materializes)
+      kv8        int8 KV cache with fused per-slot scales
+      scalesbf16 bf16 storage for quantization scale/zero planes
+      cf1        MoE capacity factor 1.25 -> 1.0 (smaller a2a payload)
+      noq        serve on bf16 weights (paper-baseline comparison)
+    """
+    import dataclasses as dc
+    os.environ.pop("REPRO_COMPENSATED_DTYPE", None)
+    os.environ.pop("REPRO_REMAT_POLICY", None)
+    os.environ.pop("REPRO_ATTN_DTYPE", None)
+    if not opts:
+        return cfg
+    if "bf16dq" in opts:
+        os.environ["REPRO_COMPENSATED_DTYPE"] = "bf16"
+    if "rematdots" in opts:
+        os.environ["REPRO_REMAT_POLICY"] = "dots"
+    if "attnbf16" in opts:
+        os.environ["REPRO_ATTN_DTYPE"] = "bf16"
+    if "kv8" in opts:
+        cfg = dc.replace(cfg, kv_bits=8)
+    if "scalesbf16" in opts:
+        if cfg.moe:
+            cfg = dc.replace(cfg, moe=dc.replace(
+                cfg.moe, quant=dc.replace(cfg.moe.quant,
+                                          scale_dtype="bf16")))
+        cfg = dc.replace(cfg, quant=dc.replace(cfg.quant,
+                                               scale_dtype="bf16"))
+    if "cf1" in opts and cfg.moe:
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=1.0))
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             quantized: str = "auto", out_dir=None, verbose=True,
+             pcfg_override=None, tag: str = "", cost_corrected: bool = True,
+             opts=()):
+    cfg = apply_opts(get_config(arch), opts)
+    if "noq" in opts:
+        quantized = "off"
+    if opts and not tag:
+        tag = "+".join(sorted(opts))
+    shape = SHAPES[shape_name]
+    skip = supports_shape(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}|{shape_name}|{mesh_name}" + (f"|{tag}" if tag else "")
+    if skip:
+        return {"cell": cell_id, "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pcfg = pcfg_override or parallel_for_shape(shape, cfg=cfg)
+
+    # quantized serving: the paper's technique applies at inference time
+    has_q = (cfg.moe.quant.enabled if cfg.moe else cfg.quant.enabled)
+    use_q = (has_q and shape.kind != "train") if quantized == "auto" \
+        else (quantized == "on")
+
+    t0 = time.time()
+    compiled, abstract = _lower_cell(cfg, shape, mesh, pcfg, use_q)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    n_dev = mesh.size
+
+    # pass B: loop-corrected flops/bytes/wire (see cost_pass docstring)
+    t1 = time.time()
+    if cost_corrected:
+        cost = cost_pass(cfg, shape, mesh, pcfg, use_q)
+        cost_src = cost["method"]
+    else:
+        ca = compiled.cost_analysis() or {}
+        cost = {"flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "wire": collective_wire_bytes(hlo, 16).get("total", 0.0)}
+        cost_src = "scanned_uncorrected"
+    t_cost = time.time() - t1
+
+    n_params = count_params(abstract["state"].params
+                            if shape.kind == "train"
+                            else abstract["params"])
+    # quantized trees pack sub-byte planes, so leaf counts undercount
+    # logical N: use analytic counts for MoE/quantized cells
+    if cfg.moe is not None:
+        active = cfg.num_active_params
+    elif use_q:
+        active = cfg.num_params
+    else:
+        active = n_params
+    mf = model_flops(cfg, shape, active)
+    mem_dev = None
+    try:
+        mem_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+                   mem.temp_size_in_bytes)
+    except Exception:
+        pass
+    terms = derive_terms(arch, shape_name, mesh_name,
+                         cost={"flops": cost["flops"],
+                               "bytes accessed": cost["bytes"]},
+                         hlo_text="", n_devices=n_dev,
+                         model_flops_global=mf, mem_per_device=mem_dev,
+                         default_group=16, wire_override=cost["wire"])
+    terms.note = cost_src
+    coll = collective_wire_bytes(hlo, 16)
+    coll["schedule_note"] = "per-trace counts (loop bodies once); " \
+                            "wire total in roofline is loop-corrected"
+    rec = {
+        "cell": cell_id, "status": "ok", "quantized": bool(use_q),
+        "n_devices": n_dev, "params": n_params,
+        "compile_s": round(t_compile, 1), "cost_pass_s": round(t_cost, 1),
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed") if k in cost},
+        "collectives": coll,
+        "roofline": terms.to_dict(),
+    }
+    if verbose:
+        ma = rec["memory_analysis"]
+        gb = lambda x: f"{x / 2 ** 30:.2f}GiB" if x else "?"
+        print(f"[{cell_id}] OK q={int(use_q)} "
+              f"args={gb(ma['argument_bytes'])} temp={gb(ma['temp_bytes'])} "
+              f"flops/dev={terms.flops_dev:.3e} bytes/dev={terms.bytes_dev:.3e} "
+              f"wire/dev={terms.wire_bytes_dev:.3e} dom={terms.dominant} "
+              f"t=({terms.t_compute*1e3:.2f},{terms.t_memory*1e3:.2f},"
+              f"{terms.t_collective*1e3:.2f})ms "
+              f"useful={terms.useful_ratio:.2f} "
+              f"compile={t_compile:.0f}s", flush=True)
+    if out_dir:
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fn = cell_id.replace("|", "_").replace("/", "-") + \
+            ("_q" if use_q else "") + ".json"
+        (out_dir / fn).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "pod2", "both"])
+    ap.add_argument("--quantized", default="auto",
+                    choices=["auto", "on", "off"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-cost-pass", action="store_true",
+                    help="skip the loop-corrected cost pass (faster)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    ap.add_argument("--opt", default="",
+                    help="comma-separated hillclimb variants "
+                         "(bf16dq,kv8,scalesbf16,cf1,noq)")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    archs = list(ASSIGNED) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.skip_existing:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    stem = f"{arch}_{shape}_{mesh_name}".replace("/", "-")
+                    hits = list(Path(args.out).glob(stem + "*.json"))
+                    if hits:
+                        print(f"[{arch}|{shape}|{mesh_name}] exists, skip",
+                              flush=True)
+                        continue
+                try:
+                    rec = run_cell(arch, shape, mp, quantized=args.quantized,
+                                   out_dir=args.out,
+                                   cost_corrected=not args.no_cost_pass,
+                                   opts=opts)
+                    results.append(rec)
+                    if rec["status"] == "skipped":
+                        print(f"[{rec['cell']}] SKIP: {rec['reason']}",
+                              flush=True)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[{arch}|{shape}|mp={mp}] FAIL: {e}", flush=True)
+                    traceback.print_exc()
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    print(f"\ndry-run summary: {ok} ok, {sk} skipped, {len(failures)} failed")
+    if failures:
+        for f in failures:
+            print("  FAIL:", f)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

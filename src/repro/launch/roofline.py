@@ -1,0 +1,161 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Per (arch, shape, mesh) cell:
+
+    compute    = FLOPs_dev / peak_FLOPs_chip
+    memory     = bytes_dev / HBM_bw_chip
+    collective = wire_bytes_dev / ICI_bw_chip
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device, post-SPMD).
+Collective wire bytes are NOT in cost_analysis: we parse the optimized HLO
+(``compiled.as_text()``) and sum shape bytes over every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, applying the
+standard ring-transfer factors (all-reduce 2(n-1)/n, gather/scatter
+(n-1)/n, permute 1).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per chip), per the assignment
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (aggregate assumption documented)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\((.+?)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_wire_bytes(hlo_text: str, default_group: int = 16,
+                          top: Optional[list] = None) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (ring-transfer factors).
+
+    ``top`` (optional list) collects (wire_bytes, kind, shape) per op for
+    bottleneck diagnosis."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if "-start(" not in line and not re.search(
+                r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                r"collective-permute)\(", line):
+            if not any(k in line for k in
+                       ("all-reduce(", "all-gather(", "reduce-scatter(",
+                        "all-to-all(", "collective-permute(")):
+                continue
+        m = _COLL_RE.search(line)
+        shapes = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2)
+            shapes = _SHAPE_RE.findall(mt.group(1))
+        n = _group_size(line, default_group)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / max(n, 1) * nbytes
+        elif kind in ("all-gather", "all-to-all"):
+            wire = (n - 1) / max(n, 1) * nbytes
+        elif kind == "reduce-scatter":
+            wire = (n - 1) / max(n, 1) * nbytes * n  # operand = result * n
+        else:  # collective-permute
+            wire = float(nbytes)
+        out[kind] = out.get(kind, 0.0) + wire
+        out["total"] = out.get("total", 0.0) + wire
+        if top is not None:
+            top.append((wire, kind,
+                        ";".join(f"{d}[{s}]" for d, s in shapes)))
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_dev: float
+    bytes_dev: float
+    wire_bytes_dev: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_global: float
+    useful_ratio: float          # MODEL_FLOPS / global HLO FLOPs
+    mem_per_device: Optional[float] = None
+    note: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def derive_terms(arch: str, shape_name: str, mesh_name: str, *,
+                 cost: Dict, hlo_text: str, n_devices: int,
+                 model_flops_global: float,
+                 mem_per_device: Optional[float] = None,
+                 default_group: int = 16,
+                 wire_override: Optional[float] = None) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    wire = (wire_override if wire_override is not None else
+            collective_wire_bytes(hlo_text, default_group).get("total", 0.0))
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_x = wire / ICI_BW
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                   key=lambda kv: kv[1])[0]
+    hlo_global = flops * n_devices
+    ratio = model_flops_global / hlo_global if hlo_global else 0.0
+    return RooflineTerms(arch, shape_name, mesh_name, flops, nbytes, wire,
+                         t_c, t_m, t_x, dominant, model_flops_global, ratio,
+                         mem_per_device)
+
+
+def model_flops(cfg, shape, active_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens
+    tokens = shape.global_batch  # one decode step
+    return 2.0 * active_params * tokens

@@ -1,0 +1,262 @@
+"""Step-function builders: train / prefill / serve, with shardings.
+
+Everything the launcher (and the dry-run) lowers comes from here, so real
+training, serving, and the AOT dry-run share one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import (ModelConfig, ParallelConfig, QuantConfig, ShapeConfig,
+                      TrainConfig)
+from ..core.quantize import PLANES
+from ..core.pipeline import CompressedExpertStack
+from ..distributed.moe_parallel import make_moe_ep_fn
+from ..distributed.sharding import (CACHE_RULES, PARAM_RULES, constraint_fn,
+                                    mesh_spec, tree_shardings)
+from ..models import model as lm
+from ..models.transformer import ExecContext, derive_plan, init_caches, \
+    init_params
+from ..optim.adamw import OptState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+# ---------------------------------------------------------------------------
+# abstract quantized parameters (serving with the paper's technique)
+# ---------------------------------------------------------------------------
+
+def make_abstract_stack(prefix: Tuple[int, ...], e: int, k: int, n: int,
+                        qcfg: QuantConfig) -> CompressedExpertStack:
+    g = qcfg.group_size
+    r = max(qcfg.rank_budget, 1)
+    planes = tuple(jnp.zeros(prefix + (e, k // (8 // p), n), jnp.uint8)
+                   for p, _ in PLANES[qcfg.bits])
+    f_dt = jnp.bfloat16 if qcfg.factor_bits >= 16 else jnp.int8
+    s_dt = jnp.bfloat16 if qcfg.scale_dtype == "bf16" else jnp.float32
+    return CompressedExpertStack(
+        planes=planes,
+        scale=jnp.zeros(prefix + (e, k // g, n), s_dt),
+        zero=jnp.zeros(prefix + (e, k // g, n), s_dt),
+        u=jnp.zeros(prefix + (e, k, r), f_dt),
+        v=jnp.zeros(prefix + (e, r, n), f_dt),
+        u_scale=jnp.zeros(prefix + (e, 1, r), jnp.float32),
+        v_scale=jnp.zeros(prefix + (e, r, 1), jnp.float32),
+        bits=qcfg.bits, group_size=g, shape=(e, k, n),
+        ranks=(r,) * e, pad_rank=r, factor_bits=qcfg.factor_bits)
+
+
+def quantize_params_structure(params, cfg: ModelConfig):
+    """Swap raw FFN/expert weights for compressed-stack placeholders
+    (shape-true; used under eval_shape for the dry-run and by the offline
+    pipeline as the target structure)."""
+    plan = derive_plan(cfg)
+    new_segs = []
+    for si, seg in enumerate(plan):
+        pos_params = []
+        for pi, spec in enumerate(seg.layers):
+            p = dict(params["segments"][si][pi])
+            if spec.ffn == "moe" and cfg.moe.quant.enabled:
+                mp = dict(p["moe"])
+                qc = cfg.moe.quant
+                e, fe = cfg.moe.num_experts, cfg.moe.d_expert
+                prefix = tuple(mp["w1"].shape[:-3])
+                mp["stacks"] = {
+                    "w1": make_abstract_stack(prefix, e, cfg.d_model, fe, qc),
+                    "w3": make_abstract_stack(prefix, e, cfg.d_model, fe, qc),
+                    "w2": make_abstract_stack(prefix, e, fe, cfg.d_model, qc),
+                }
+                for k in ("w1", "w2", "w3"):
+                    mp.pop(k, None)
+                p["moe"] = mp
+            elif spec.ffn == "dense" and cfg.quant.enabled and cfg.d_ff:
+                qc = cfg.quant
+                prefix = tuple(p["ffn"]["w1"].shape[:-2])
+                stacks = {
+                    "w1": make_abstract_stack(prefix, 1, cfg.d_model,
+                                              cfg.d_ff, qc),
+                    "w2": make_abstract_stack(prefix, 1, cfg.d_ff,
+                                              cfg.d_model, qc),
+                }
+                if cfg.gated_ffn:
+                    stacks["w3"] = make_abstract_stack(prefix, 1, cfg.d_model,
+                                                       cfg.d_ff, qc)
+                p["ffn"] = {"stacks": stacks}
+            pos_params.append(p)
+        new_segs.append(tuple(pos_params))
+    out = dict(params)
+    out["segments"] = tuple(new_segs)
+    return out
+
+
+def abstract_serve_params(cfg: ModelConfig, quantized: bool,
+                          dtype=jnp.bfloat16):
+    def build(key):
+        params = init_params(key, cfg, dtype)
+        return quantize_params_structure(params, cfg) if quantized else params
+
+    return jax.eval_shape(build, jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# contexts & parallel config
+# ---------------------------------------------------------------------------
+
+def parallel_for_shape(shape: ShapeConfig,
+                       base: Optional[ParallelConfig] = None,
+                       cfg: Optional[ModelConfig] = None,
+                       model_axis: int = 16) -> ParallelConfig:
+    pcfg = base or ParallelConfig()
+    rules = dict(pcfg.rules)
+    rules["batch"] = ("pod", "data")
+    # KV sequence mops up whatever batch left over (long_500k: everything).
+    # When the arch's kv_heads already divide the model axis, leave model to
+    # the heads (avoids partial-softmax all-reduces); otherwise the seq dim
+    # takes it (gemma3-1b kv=1, qwen kv=4).
+    if cfg is not None and cfg.num_kv_heads % model_axis == 0:
+        rules["kv_seq"] = ("pod", "data")
+    else:
+        rules["kv_seq"] = ("pod", "data", "model")
+    rules["seq"] = ()
+    if shape.kind == "train":
+        # FSDP over the data axis on top of TP/EP over model: weights and
+        # optimizer state shard both ways (ZeRO-3-style); GSPMD inserts the
+        # per-layer all-gathers inside the scan.
+        rules["embed"] = ("data",)
+        rules["expert_mlp"] = ("data",)
+        rules["lowrank"] = ("data",)
+    return dataclasses.replace(pcfg, rules=tuple(rules.items()))
+
+
+def make_context(cfg: ModelConfig, mode: str, *, quantized: bool = False,
+                 mesh: Optional[Mesh] = None,
+                 pcfg: Optional[ParallelConfig] = None,
+                 remat: bool = False, exact_capacity: bool = False,
+                 scan_unroll: bool = False,
+                 remat_policy: str = "full") -> ExecContext:
+    pcfg = pcfg or ParallelConfig()
+    ep_mode = "none"
+    moe_fn = None
+    if mesh is not None and cfg.moe is not None:
+        ep_mode = "replicated" if mode == "step" else "a2a"
+        moe_fn = make_moe_ep_fn(mesh, pcfg)
+    heads_ok = seq_ok = False
+    if mesh is not None and "model" in mesh.shape:
+        mp = mesh.shape["model"]
+        heads_ok = cfg.num_heads % mp == 0 and cfg.num_kv_heads % mp == 0
+        seq_ok = not heads_ok
+    return ExecContext(mode=mode, quantized=quantized, ep_mode=ep_mode,
+                       mesh=mesh, constrain=constraint_fn(mesh, pcfg),
+                       moe_ep_fn=moe_fn, remat=remat,
+                       exact_capacity=exact_capacity,
+                       scan_unroll=scan_unroll,
+                       remat_policy=remat_policy,
+                       attn_heads_sharded=heads_ok,
+                       attn_seq_sharded=seq_ok)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    mesh: Optional[Mesh] = None,
+                    pcfg: Optional[ParallelConfig] = None,
+                    param_dtype=jnp.bfloat16, scan_unroll: bool = False,
+                    remat_policy: str = "full"):
+    ctx = make_context(cfg, "train", mesh=mesh, pcfg=pcfg, remat=True,
+                       scan_unroll=scan_unroll, remat_policy=remat_policy)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        def loss_fn(p):
+            return lm.lm_loss(p, batch, cfg, ctx, z_loss=tcfg.z_loss,
+                              loss_chunk=tcfg.loss_chunk)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        params, opt, om = adamw_update(grads, state.opt, tcfg, param_dtype)
+        return TrainState(params, opt), {**metrics, **om}
+
+    return train_step, ctx
+
+
+def make_prefill_step(cfg: ModelConfig, *, quantized: bool = False,
+                      mesh: Optional[Mesh] = None,
+                      pcfg: Optional[ParallelConfig] = None,
+                      scan_unroll: bool = False):
+    ctx = make_context(cfg, "prefill", quantized=quantized, mesh=mesh,
+                       pcfg=pcfg, scan_unroll=scan_unroll)
+
+    def prefill_step(params, caches, batch):
+        out = lm.forward(params, batch["tokens"], cfg, ctx, caches=caches,
+                         mrope_pos=batch.get("mrope_pos"),
+                         enc_embeds=batch.get("enc_embeds"))
+        return out.logits[:, -1], out.caches
+
+    return prefill_step, ctx
+
+
+def make_serve_step(cfg: ModelConfig, *, quantized: bool = False,
+                    mesh: Optional[Mesh] = None,
+                    pcfg: Optional[ParallelConfig] = None,
+                    scan_unroll: bool = False):
+    ctx = make_context(cfg, "step", quantized=quantized, mesh=mesh, pcfg=pcfg,
+                       scan_unroll=scan_unroll)
+
+    def serve_step(params, caches, batch):
+        out = lm.decode_step(params, batch["tokens"], caches, cfg, ctx,
+                             mrope_pos=batch.get("mrope_pos"))
+        return out.logits[:, 0], out.caches
+
+    return serve_step, ctx
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs + shardings per (arch, shape) cell
+# ---------------------------------------------------------------------------
+
+def cell_abstract(cfg: ModelConfig, shape: ShapeConfig, *,
+                  quantized: bool = False, tcfg: Optional[TrainConfig] = None,
+                  param_dtype=jnp.bfloat16):
+    """(abstract args tree, step builder kwargs) for one dry-run cell."""
+    specs = lm.input_specs(cfg, shape)
+    if shape.kind == "train":
+        params = jax.eval_shape(lambda k: init_params(k, cfg, param_dtype),
+                                jax.random.key(0))
+        opt = jax.eval_shape(adamw_init, params)
+        return {"state": TrainState(params, opt), "batch": specs["batch"]}
+    params = abstract_serve_params(cfg, quantized, param_dtype)
+    max_len = shape.seq_len
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, max_len, jnp.bfloat16))
+    return {"params": params, "caches": caches, "batch": specs["batch"]}
+
+
+def cell_shardings(mesh: Mesh, abstract: Dict, pcfg: ParallelConfig):
+    """NamedSharding tree matching cell_abstract output."""
+    out = {}
+    for k, v in abstract.items():
+        if k == "batch":
+            def batch_shard(path, leaf):
+                name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+                if name == "mrope_pos":
+                    logical = (None, "batch") + (None,) * (leaf.ndim - 2)
+                else:
+                    logical = ("batch",) + (None,) * (leaf.ndim - 1)
+                return NamedSharding(
+                    mesh, mesh_spec(mesh, logical, leaf.shape, pcfg))
+            out[k] = jax.tree_util.tree_map_with_path(batch_shard, v)
+        elif k == "caches":
+            out[k] = tree_shardings(mesh, v, pcfg, CACHE_RULES + PARAM_RULES)
+        else:
+            out[k] = tree_shardings(mesh, v, pcfg, PARAM_RULES)
+    return out

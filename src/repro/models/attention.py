@@ -1,0 +1,162 @@
+"""GQA attention: blockwise-banded prefill, ring-buffer decode, cross-attn.
+
+Prefill/train uses a query-block scan so the score matrix never fully
+materializes; sliding-window ('local') layers additionally restrict each
+query block to a fixed-size KV *band* via dynamic_slice, cutting FLOPs and
+bytes from O(S^2) to O(S * window) — the reason gemma3/recurrentgemma long
+contexts stay sub-quadratic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softcap
+
+NEG_INF = -2.0 ** 30  # large-but-finite; keeps softmax NaN-free on empty rows
+
+
+def _bulk_dtype():
+    """Dtype for bulk attention tensors (q/k/v inputs and PV outputs).
+
+    f32 by default; REPRO_ATTN_DTYPE=bf16 keeps softmax statistics in f32
+    but moves the big operands (and therefore the partial-sum all-reduces
+    and gathers GSPMD inserts around sharded attention) in bf16 — halves
+    the collective payloads at prefill/train (hillclimb lever, Cell B/C).
+    """
+    return (jnp.bfloat16 if os.environ.get("REPRO_ATTN_DTYPE", "")
+            .startswith("bf") else jnp.float32)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, out_dtype=jnp.float32
+                ) -> jax.Array:
+    """q: (B, Sq, KV, G, hd), k: (B, Skv, KV, hd) -> (B, KV, G, Sq, Skv)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=out_dtype)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B, KV, G, Sq, Skv), v: (B, Skv, KV, hd) -> (B, Sq, KV, G, hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(p.dtype))
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: Optional[int]):
+    """(B?, Sq) x (B?, Skv) position grids -> additive bias (…, Sq, Skv)."""
+    valid = kv_pos[..., None, :] >= 0
+    if causal:
+        valid &= kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None and window > 0:
+        valid &= kv_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, kv_pos: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              q_block: int = 1024, attn_softcap: float = 0.0,
+              scale: Optional[float] = None,
+              unroll: bool = False) -> jax.Array:
+    """Batched GQA attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KVH, hd); q_pos/kv_pos: (B, S*) int32
+    absolute positions (-1 marks an empty KV slot).  Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    dt = _bulk_dtype()
+    qg = (q.reshape(b, sq, kvh, g, hd).astype(jnp.float32) * scale).astype(dt)
+    k32, v32 = k.astype(dt), v.astype(dt)
+
+    def block_attn(qi, qpi, ki, vi, kpi):
+        # the S_q x S_kv score and probability buffers are the dominant
+        # HBM traffic of long-context prefill: in bf16 mode they are
+        # MATERIALIZED at half width while max/exp/sum run in f32 inside
+        # the fusion (flash-style numerics; the Pallas kernel keeps them
+        # in VMEM entirely)
+        s = _gqa_scores(qi, ki, out_dtype=dt)
+        s = softcap(s, attn_softcap)
+        bias = _mask_bias(qpi, kpi, causal, window).astype(dt)
+        s = s + bias[:, None, None, :, :]
+        if dt == jnp.float32:
+            p = jax.nn.softmax(s, axis=-1)
+        else:
+            m = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
+            p = jnp.exp(s.astype(jnp.float32) - m).astype(dt)
+            denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+            p = (p.astype(jnp.float32) / jnp.maximum(denom, 1e-30)).astype(dt)
+        return _gqa_out(p, vi).astype(dt)
+
+    if sq <= q_block or sq % q_block:
+        out = block_attn(qg, q_pos, k32, v32, kv_pos)
+        return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+    nq = sq // q_block
+    band = None
+    if window is not None and window > 0 and skv > (window + q_block):
+        band = min(skv, _round_up(window + q_block, 128))
+
+    def step(carry, i):
+        q0 = i * q_block
+        qi = jax.lax.dynamic_slice_in_dim(qg, q0, q_block, axis=1)
+        qpi = jax.lax.dynamic_slice_in_dim(q_pos, q0, q_block, axis=-1)
+        if band is None:
+            ki, vi, kpi = k32, v32, kv_pos
+        else:
+            # fixed-size KV band ending at this query block (sliding window)
+            s0 = jnp.clip(q0 + q_block - band, 0, skv - band)
+            ki = jax.lax.dynamic_slice_in_dim(k32, s0, band, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v32, s0, band, axis=1)
+            kpi = jax.lax.dynamic_slice_in_dim(kv_pos, s0, band, axis=-1)
+        return carry, block_attn(qi, qpi, ki, vi, kpi)
+
+    _, blocks = jax.lax.scan(step, 0, jnp.arange(nq), unroll=unroll)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, sq, kvh, g, hd)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_pos: jax.Array, cur_pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     attn_softcap: float = 0.0,
+                     scale: Optional[float] = None,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None) -> jax.Array:
+    """One-token attention against a (possibly ring) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, Sc, KVH, hd); kv_pos: (B, Sc) absolute
+    positions with -1 for unwritten slots; cur_pos: (B,) current position.
+
+    int8 KV: when k_scale/v_scale (B, Sc, KVH) are given, the caches hold
+    int8 codes; the per-slot scales fold into the score matrix and the
+    softmax weights — the dequantized KV never materializes, so HBM reads
+    stay at the packed byte count.
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32) * scale
+    s = _gqa_scores(qg, k_cache.astype(jnp.float32))
+    if k_scale is not None:   # (B, Sc, KVH) -> (B, KVH, 1, 1, Sc)
+        s = s * jnp.moveaxis(k_scale.astype(jnp.float32), 1, -1)[:, :, None,
+                                                                 None, :]
+    s = softcap(s, attn_softcap)
+    bias = _mask_bias(cur_pos[:, None], kv_pos, True, window)
+    s = s + bias[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:   # fold V scales into the softmax weights
+        p = p * jnp.moveaxis(v_scale.astype(jnp.float32), 1, -1)[:, :, None,
+                                                                 None, :]
+    out = _gqa_out(p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,51 @@
+"""Dense FFN (gated SwiGLU / plain GELU MLP) and its quantized-compensated
+form — the degenerate static (E=1) case of the paper's technique used for
+the dense assigned archs (DESIGN.md §5)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pipeline import CompressedExpertStack
+from ..kernels import ops
+from .layers import activation
+
+
+def ffn_apply(x: jax.Array, p: Dict[str, jax.Array], act: str = "silu",
+              gated: bool = True) -> jax.Array:
+    """x: (..., d); params w1 (d, ff), [w3 (d, ff)], w2 (ff, d)."""
+    f = activation(act)
+    h = jnp.einsum("...d,df->...f", x, p["w1"])
+    h = f(h) * jnp.einsum("...d,df->...f", x, p["w3"]) if gated else f(h)
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+def ffn_apply_quantized(x: jax.Array, stacks: Dict[str, CompressedExpertStack],
+                        act: str = "silu", gated: bool = True,
+                        compensate: bool = True,
+                        impl: Optional[str] = None) -> jax.Array:
+    """Static quantize-then-compensate FFN (single-expert stacks, E=1).
+
+    ``compensate=False`` gives the uniform-quantization baseline.
+    """
+    shp = x.shape
+    xf = x.reshape(-1, shp[-1])
+    m = xf.shape[0]
+    mask = jnp.ones((m,), jnp.float32) if compensate else jnp.zeros((m,), jnp.float32)
+
+    def proj(name, inp):
+        st = stacks[name]
+        from ..core.quantize import QuantizedTensor
+        qt = QuantizedTensor(tuple(p[0] for p in st.planes), st.scale[0],
+                             st.zero[0], st.bits, st.group_size, st.shape[1:])
+        return ops.lowrank_comp_matmul(
+            inp, qt, st.u[0], st.v[0], st.u_scale[0], st.v_scale[0],
+            mask, impl=impl, out_dtype=x.dtype)
+
+    f = activation(act)
+    h = proj("w1", xf)
+    h = f(h) * proj("w3", xf) if gated else f(h)
+    y = proj("w2", h.astype(x.dtype))
+    return y.reshape(*shp[:-1], y.shape[-1])

@@ -1,0 +1,104 @@
+"""Shared primitive layers: norms, embeddings, rotary variants, inits."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (default, gemma dual-theta, M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd), positions: (B, S) absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, ...] = (16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal rotary: positions3 (3, B, S) = (t, h, w) ids.
+
+    head_dim/2 frequency slots are partitioned into ``sections`` (t,h,w);
+    each section rotates by its own position stream.  Text tokens carry
+    t == h == w so this degrades exactly to 1-D RoPE for pure text.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    sec = jnp.cumsum(jnp.asarray((0,) + sections))
+    slot = jnp.arange(hd // 2)
+    which = jnp.searchsorted(sec[1:], slot, side="right")   # (hd/2,) in {0,1,2}
+    pos = positions3[which]                                 # (hd/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table (length, dim)."""
+    log_timescale = math.log(10_000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size: Optional[int] = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

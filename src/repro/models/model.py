@@ -1,0 +1,245 @@
+"""Top-level language model: embed -> stack -> head, plus the three
+entry points the launcher lowers (train loss, prefill, decode step) and
+``input_specs`` (ShapeDtypeStruct stand-ins for the dry-run)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, ShapeConfig
+from .layers import softcap
+from .transformer import (ExecContext, apply_encoder, apply_stack,
+                          derive_plan, init_caches, init_params)
+
+
+class LMOutput(NamedTuple):
+    logits: jax.Array
+    aux: Dict[str, jax.Array]
+    caches: Optional[Dict]
+
+
+def embed_tokens(params, tokens_or_embeds, cfg: ModelConfig,
+                 positions=None):
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        x = params["embed"]["tok"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds  # modality frontend stub: precomputed embeddings
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.abs_pos_embed and positions is not None:
+        from .layers import sinusoidal_positions
+        table = sinusoidal_positions(cfg.max_position, cfg.d_model)
+        x = x + table[positions].astype(x.dtype)
+    return x
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["tok"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"])
+    return softcap(logits, cfg.logit_softcap)
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: ExecContext, *,
+            positions=None, caches=None, mrope_pos=None,
+            enc_embeds=None) -> LMOutput:
+    """Full-sequence forward (train / prefill)."""
+    b, s = tokens.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, tokens, cfg, positions)
+    x = ctx.constrain(x, ("batch", "seq", None))
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = apply_encoder(params, enc_embeds, cfg, ctx)
+    x, aux, new_caches = apply_stack(params, x, cfg, ctx, positions,
+                                     caches=caches, mrope_pos=mrope_pos,
+                                     enc_out=enc_out)
+    from .layers import rms_norm
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x, cfg)
+    return LMOutput(logits, aux, new_caches)
+
+
+def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
+                *, mrope_pos=None) -> LMOutput:
+    """One-token serve step against the KV/recurrent caches."""
+    b = tokens.shape[0]
+    positions = caches["pos"][:, None]        # (B, 1) absolute position
+    x = embed_tokens(params, tokens, cfg, positions)
+    x, aux, new_caches = apply_stack(params, x, cfg, ctx, positions,
+                                     caches=caches, mrope_pos=mrope_pos)
+    from .layers import rms_norm
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x, cfg)
+    return LMOutput(logits, aux, new_caches)
+
+
+def _xent_terms_plain(params, x, targets, cfg: ModelConfig):
+    """(lse, target-logit) for a chunk of hidden states (no full logits
+    retained outside the chunk)."""
+    logits = lm_head(params, x, cfg).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse, tgt
+
+
+@jax.custom_vjp
+def _fused_xent(w, x, targets):
+    """(lse, tgt) with bf16 cotangents.
+
+    The plain path's ``logits.astype(f32)`` makes every gradient flowing
+    into the (tied) embedding and the hidden states f32 — on the 2×16×16
+    mesh those are the LARGEST all-reduces of the whole train step (the
+    Cell-B HLO histogram: fused f32[vocab/16, d] buckets).  The custom VJP
+    recomputes the chunk's logits in the backward pass and emits
+    d_x / d_W in bf16 — halving those collectives and the logits'
+    memory traffic, with softmax statistics still in f32.
+    """
+    logits = jnp.einsum("bsd,vd->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse, tgt
+
+
+def _fused_xent_fwd(w, x, targets):
+    out = _fused_xent(w, x, targets)
+    return out, (w, x, targets, out[0])
+
+
+def _fused_xent_bwd(res, g):
+    w, x, targets, lse = res
+    g_lse, g_tgt = g
+    logits = jnp.einsum("bsd,vd->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    p = jnp.exp(logits - lse[..., None])
+    onehot = jax.nn.one_hot(targets, w.shape[0], dtype=jnp.float32)
+    # d_logits = g_lse * softmax + g_tgt * onehot, carried in bf16
+    d_logits = (g_lse[..., None] * p + g_tgt[..., None] * onehot
+                ).astype(jnp.bfloat16)
+    d_x = jnp.einsum("bsv,vd->bsd", d_logits,
+                     w.astype(jnp.bfloat16)).astype(x.dtype)
+    d_w = jnp.einsum("bsv,bsd->vd", d_logits,
+                     x.astype(jnp.bfloat16)).astype(w.dtype)
+    return d_w, d_x, None
+
+
+_fused_xent.defvjp(_fused_xent_fwd, _fused_xent_bwd)
+
+
+def _xent_terms(params, x, targets, cfg: ModelConfig):
+    import os
+    fused = (os.environ.get("REPRO_XENT", "fused") == "fused"
+             and cfg.logit_softcap == 0.0)
+    if fused and cfg.tie_embeddings:
+        return _fused_xent(params["embed"]["tok"], x, targets)
+    if fused:
+        return _fused_xent(params["head"]["w"].T, x, targets)
+    return _xent_terms_plain(params, x, targets, cfg)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, ctx: ExecContext,
+            z_loss: float = 1e-4, loss_chunk: int = 0
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy + router aux + z-loss.
+
+    ``loss_chunk`` > 0 computes the xent in sequence chunks so the peak
+    logits buffer is (B, chunk, V) instead of (B, S, V) — essential for
+    262k-vocab archs at 4k sequence.
+    """
+    b, s = batch["tokens"].shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_tokens(params, batch["tokens"], cfg, positions)
+    x = ctx.constrain(x, ("batch", "seq", None))
+    enc_out = None
+    if cfg.encoder is not None:
+        from .transformer import apply_encoder
+        enc_out = apply_encoder(params, batch["enc_embeds"], cfg, ctx)
+    from .transformer import apply_stack
+    from .layers import rms_norm
+    x, aux, _ = apply_stack(params, x, cfg, ctx, positions,
+                            mrope_pos=batch.get("mrope_pos"),
+                            enc_out=enc_out)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    x = x[:, :-1]
+    targets = batch["tokens"][:, 1:]
+    mask = batch.get("mask")
+    mask = (jnp.ones_like(targets, jnp.float32) if mask is None
+            else mask[:, 1:].astype(jnp.float32))
+    sl = s - 1
+    if loss_chunk and sl > loss_chunk:
+        pad = (-sl) % loss_chunk
+        if pad:  # pad to a whole number of chunks; padded slots are masked
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        nch = (sl + pad) // loss_chunk
+        xc = x.reshape(b, nch, loss_chunk, -1).swapaxes(0, 1)
+        tc = targets.reshape(b, nch, loss_chunk).swapaxes(0, 1)
+        _, (lse, tgt) = jax.lax.scan(
+            lambda c, args: (c, _xent_terms(params, args[0], args[1], cfg)),
+            0, (xc, tc), unroll=ctx.scan_unroll)
+        lse = lse.swapaxes(0, 1).reshape(b, sl + pad)
+        tgt = tgt.swapaxes(0, 1).reshape(b, sl + pad)
+    else:
+        lse, tgt = _xent_terms(params, x, targets, cfg)
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    zl = z_loss * ((lse * mask) ** 2).sum() / denom
+    total = loss + zl + sum(aux.values())
+    metrics = {"loss": loss, "z_loss": zl, **aux, "total_loss": total}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s))}
+        if cfg.encoder is not None:
+            batch["enc_embeds"] = sds((b, cfg.encoder.source_len,
+                                       cfg.encoder.d_model), jnp.bfloat16)
+        if cfg.rope_kind == "mrope":
+            batch["mrope_pos"] = sds((3, b, s))
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s))}
+        if cfg.encoder is not None:
+            batch["enc_embeds"] = sds((b, cfg.encoder.source_len,
+                                       cfg.encoder.d_model), jnp.bfloat16)
+        if cfg.rope_kind == "mrope":
+            batch["mrope_pos"] = sds((3, b, s))
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": sds((b, 1))}
+    if cfg.rope_kind == "mrope":
+        batch["mrope_pos"] = sds((3, b, 1))
+    return {"batch": batch}
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Parameter ShapeDtypeStructs without allocating (dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.key(0))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len, dtype))

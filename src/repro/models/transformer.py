@@ -1,0 +1,661 @@
+"""Layer-stack engine: plan derivation, parameter init, scanned forward.
+
+A model is a sequence of *segments*; each segment is a short pattern of
+heterogeneous layers (e.g. gemma3's 5 local + 1 global) repeated ``repeat``
+times via ``lax.scan`` — one trace per distinct layer kind regardless of
+depth, which keeps dry-run compiles of 62-layer models fast and HLO small.
+Remainder layers that don't fill a pattern become repeat-1 segments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from .attention import attention, decode_attention
+from .ffn import ffn_apply, ffn_apply_quantized
+from .kvcache import (init_attn_cache, init_mlstm_cache, init_rglru_cache,
+                      init_slstm_cache, prefill_attn_cache, update_attn_cache)
+from .layers import (apply_mrope, apply_rope, dense_init, embed_init,
+                     rms_norm, softcap)
+from .moe import moe_apply
+from .rglru import rglru_seq, rglru_step
+from .xlstm import mlstm_chunkwise, mlstm_step, slstm_seq
+
+
+class LayerSpec(NamedTuple):
+    mixer: str          # global | local | recurrent | mlstm | slstm
+    ffn: str            # dense | moe | none
+    cross: bool = False # enc-dec decoder cross-attention
+
+
+class Segment(NamedTuple):
+    layers: Tuple[LayerSpec, ...]
+    repeat: int
+
+
+@dataclasses.dataclass
+class ExecContext:
+    """Runtime execution knobs threaded through the forward pass."""
+    mode: str = "train"              # train | prefill | step
+    quantized: bool = False          # serve on compressed experts/FFNs
+    ep_mode: str = "none"            # none | a2a | replicated
+    mesh: Any = None
+    constrain: Callable = staticmethod(lambda x, axes: x)
+    moe_ep_fn: Optional[Callable] = None   # injected by distributed layer
+    remat: bool = False
+    q_block: int = 1024
+    mlstm_chunk: int = 256
+    exact_capacity: bool = False     # drop-free MoE (tests / tiny batches)
+    scan_unroll: bool = False        # unroll every scan (cost-analysis pass)
+    # prefill/train attention parallelism: shard q heads over `model` when
+    # they divide; otherwise shard fresh K/V along seq (partial-softmax) so
+    # attention FLOPs never replicate across the model axis
+    attn_heads_sharded: bool = False
+    attn_seq_sharded: bool = False
+    remat_policy: str = "full"       # full | dots (save matmul outputs)
+
+
+# ---------------------------------------------------------------------------
+# plan derivation
+# ---------------------------------------------------------------------------
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    cross = cfg.encoder is not None
+    specs = []
+    for i in range(cfg.num_layers):
+        mixer = cfg.layer_kind(i)
+        if mixer in ("mlstm", "slstm"):
+            ffn = "none"
+        elif cfg.moe is not None and cfg.is_moe_layer(i) and not (
+                i == 0 and cfg.first_layer_dense):
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        specs.append(LayerSpec(mixer, ffn, cross))
+    return specs
+
+
+def derive_plan(cfg: ModelConfig) -> Tuple[Segment, ...]:
+    specs = layer_specs(cfg)
+    if cfg.force_unroll_plan:
+        return tuple(Segment((s,), 1) for s in specs)
+    p = len(cfg.block_pattern)
+    segments: List[Segment] = []
+    i = 0
+    n = len(specs)
+    while i < n:
+        # try the full block pattern first
+        if p > 1 and i + p <= n:
+            pat = tuple(specs[i:i + p])
+            r = 1
+            while i + (r + 1) * p <= n and tuple(specs[i + r * p:i + (r + 1) * p]) == pat:
+                r += 1
+            if r >= 1 and all(specs[i + j * p:i + (j + 1) * p] == list(pat)
+                              for j in range(r)):
+                segments.append(Segment(pat, r))
+                i += r * p
+                continue
+        # fall back to run-length of identical single layers
+        r = 1
+        while i + r < n and specs[i + r] == specs[i]:
+            r += 1
+        segments.append(Segment((specs[i],), r))
+        i += r
+    return tuple(segments)
+
+
+# ---------------------------------------------------------------------------
+# parameter init (single layer, then vmapped stacks)
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, cross: bool, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), d, dtype),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    if cross:
+        p["cross_wq"] = dense_init(ks[4], (d, h, hd), d, dtype)
+        p["cross_wk"] = dense_init(ks[5], (cfg.encoder.d_model, h, hd),
+                                   cfg.encoder.d_model, dtype)
+        p["cross_wv"] = dense_init(ks[6], (cfg.encoder.d_model, h, hd),
+                                   cfg.encoder.d_model, dtype)
+        p["cross_wo"] = dense_init(ks[7], (h, hd, d), h * hd, dtype)
+        p["cross_norm"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _init_ffn(key, d: int, ff: int, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, ff), d, dtype),
+         "w2": dense_init(ks[1], (ff, d), ff, dtype)}
+    if gated:
+        p["w3"] = dense_init(ks[2], (d, ff), d, dtype)
+    return p
+
+
+def _init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.num_experts), d, jnp.float32),
+        "w1": dense_init(ks[1], (m.num_experts, d, fe), d, dtype),
+        "w3": dense_init(ks[2], (m.num_experts, d, fe), d, dtype),
+        "w2": dense_init(ks[3], (m.num_experts, fe, d), fe, dtype),
+    }
+    if m.num_shared_experts:
+        fs = (m.d_shared or m.d_expert) * m.num_shared_experts
+        p["shared"] = _init_ffn(ks[4], d, fs, True, dtype)
+    return p
+
+
+def _init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, w), d, dtype),
+        "wgate": dense_init(ks[1], (d, w), d, dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv1d_width, w), cfg.conv1d_width,
+                             jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "rg_wa": dense_init(ks[3], (w, w), w, jnp.float32),
+        "rg_ba": jnp.zeros((w,), jnp.float32),
+        "rg_wx": dense_init(ks[4], (w, w), w, jnp.float32),
+        "rg_bx": jnp.zeros((w,), jnp.float32),
+        # init recurrence a^c in (0.9, 0.999): lam = softplus^-1(-log a)
+        "lam": jnp.full((w,), 0.65, jnp.float32),
+        "wo": dense_init(ks[5], (w, d), w, dtype),
+    }
+
+
+def _init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.num_heads
+    hd = di // nh
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), d, dtype),      # (u, z gate)
+        "wq": dense_init(ks[1], (di, nh, hd), di, dtype),
+        "wk": dense_init(ks[2], (di, nh, hd), di, dtype),
+        "wv": dense_init(ks[3], (di, nh, hd), di, dtype),
+        "w_if": dense_init(ks[4], (di, 2 * nh), di, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]),
+        "w_down": dense_init(ks[5], (di, d), di, dtype),
+        "out_norm": jnp.zeros((di,), dtype),
+    }
+
+
+def _init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 7)
+    ff = int(d * 4 / 3 / 64 + 1) * 64
+    return {
+        "w_zifo": dense_init(ks[0], (d, 4, nh, hd), d, dtype),
+        "b_zifo": jnp.zeros((4, nh, hd), jnp.float32),
+        "rz": dense_init(ks[1], (nh, hd, hd), hd, jnp.float32),
+        "ri": dense_init(ks[2], (nh, hd, hd), hd, jnp.float32),
+        "rf": dense_init(ks[3], (nh, hd, hd), hd, jnp.float32),
+        "ro": dense_init(ks[4], (nh, hd, hd), hd, jnp.float32),
+        "out_norm": jnp.zeros((d,), dtype),
+        "ffn": _init_ffn(ks[5], d, ff, True, dtype),
+        "ffn_norm": jnp.zeros((d,), dtype),
+    }
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"pre_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.post_attn_norm:
+        p["post_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if spec.mixer in ("global", "local"):
+        p["attn"] = _init_attn(ks[0], cfg, spec.cross, dtype)
+    elif spec.mixer == "recurrent":
+        p["rglru"] = _init_rglru(ks[0], cfg, dtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = _init_mlstm(ks[0], cfg, dtype)
+        return p  # self-contained block
+    elif spec.mixer == "slstm":
+        p["slstm"] = _init_slstm(ks[0], cfg, dtype)
+        return p
+    if spec.ffn != "none":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.post_attn_norm:
+            p["post_ffn_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if spec.ffn == "dense":
+        p["ffn"] = _init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn,
+                             dtype)
+    elif spec.ffn == "moe":
+        p["moe"] = _init_moe(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict:
+    plan = derive_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 4)
+    params: Dict[str, Any] = {
+        "embed": {"tok": embed_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                                    dtype)},
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(keys[1], (cfg.d_model,
+                                                    cfg.vocab_size),
+                                          cfg.d_model, dtype)}
+    segs = []
+    for si, seg in enumerate(plan):
+        skeys = jax.random.split(keys[2 + si], seg.repeat)
+        pos_params = []
+        for pi, spec in enumerate(seg.layers):
+            def one(k, spec=spec):
+                return init_layer(jax.random.fold_in(k, pi), spec, cfg, dtype)
+            if seg.repeat == 1:
+                pos_params.append(one(skeys[0]))
+            else:
+                pos_params.append(jax.vmap(one)(skeys))
+        segs.append(tuple(pos_params))
+    params["segments"] = tuple(segs)
+    if cfg.encoder is not None:
+        params["encoder"] = init_encoder_params(keys[-1], cfg, dtype)
+    return params
+
+
+def init_encoder_params(key, cfg: ModelConfig, dtype) -> Dict:
+    e = cfg.encoder
+    ks = jax.random.split(key, e.num_layers + 1)
+
+    def one(k):
+        kk = jax.random.split(k, 2)
+        return {
+            "pre_norm": jnp.zeros((e.d_model,), dtype),
+            "attn": {
+                "wq": dense_init(kk[0], (e.d_model, e.num_heads,
+                                         e.d_model // e.num_heads),
+                                 e.d_model, dtype),
+                "wk": dense_init(jax.random.fold_in(kk[0], 1),
+                                 (e.d_model, e.num_heads,
+                                  e.d_model // e.num_heads), e.d_model, dtype),
+                "wv": dense_init(jax.random.fold_in(kk[0], 2),
+                                 (e.d_model, e.num_heads,
+                                  e.d_model // e.num_heads), e.d_model, dtype),
+                "wo": dense_init(jax.random.fold_in(kk[0], 3),
+                                 (e.num_heads, e.d_model // e.num_heads,
+                                  e.d_model), e.d_model, dtype),
+            },
+            "ffn_norm": jnp.zeros((e.d_model,), dtype),
+            "ffn": _init_ffn(kk[1], e.d_model, e.d_ff, False, dtype),
+        }
+
+    stacked = jax.vmap(one)(ks[:e.num_layers])
+    return {"layers": stacked, "final_norm": jnp.zeros((e.d_model,), dtype)}
+
+
+def unstack_params(params, cfg: ModelConfig):
+    """Convert scanned (stacked) segment params into the unrolled per-layer
+    layout matching ``force_unroll_plan=True`` — required before offline
+    compression, whose per-layer compensator ranks break scan homogeneity."""
+    plan = derive_plan(cfg)
+    new_segs = []
+    for si, seg in enumerate(plan):
+        seg_params = params["segments"][si]
+        for r in range(seg.repeat):
+            for pi in range(len(seg.layers)):
+                lp = seg_params[pi]
+                if seg.repeat > 1:
+                    lp = jax.tree.map(lambda x: x[r], lp)
+                new_segs.append((lp,))
+    out = dict(params)
+    out["segments"] = tuple(new_segs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Dict:
+    plan = derive_plan(cfg)
+
+    def one_cache(spec: LayerSpec):
+        if spec.mixer in ("global", "local"):
+            length = (min(cfg.window_size, max_len)
+                      if spec.mixer == "local" else max_len)
+            c = init_attn_cache(batch, length, cfg.num_kv_heads, cfg.head_dim,
+                                dtype, kv_bits=cfg.kv_bits)
+            if spec.cross:
+                e = cfg.encoder
+                c["cross_k"] = jnp.zeros((batch, e.source_len, cfg.num_heads,
+                                          cfg.head_dim), dtype)
+                c["cross_v"] = jnp.zeros((batch, e.source_len, cfg.num_heads,
+                                          cfg.head_dim), dtype)
+            return c
+        if spec.mixer == "recurrent":
+            return init_rglru_cache(batch, cfg.lru_width or cfg.d_model,
+                                    cfg.conv1d_width)
+        if spec.mixer == "mlstm":
+            di = 2 * cfg.d_model
+            return init_mlstm_cache(batch, cfg.num_heads, di // cfg.num_heads)
+        if spec.mixer == "slstm":
+            return init_slstm_cache(batch, cfg.num_heads,
+                                    cfg.d_model // cfg.num_heads)
+        raise ValueError(spec.mixer)
+
+    segs = []
+    for seg in plan:
+        pos = []
+        for spec in seg.layers:
+            c = one_cache(spec)
+            if seg.repeat > 1:
+                c = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (seg.repeat,) + x.shape), c)
+            pos.append(c)
+        segs.append(tuple(pos))
+    return {"segments": tuple(segs), "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _project_qkv(x, ap, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    if "bq" in ap:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    return q, k, v
+
+
+def _rope(q, k, cfg: ModelConfig, kind: str, positions, mrope_pos):
+    if cfg.rope_kind == "none":
+        return q, k
+    theta = cfg.rope_theta
+    if kind == "local" and cfg.rope_local_theta:
+        theta = cfg.rope_local_theta
+    if cfg.rope_kind == "mrope" and mrope_pos is not None:
+        return (apply_mrope(q, mrope_pos, theta),
+                apply_mrope(k, mrope_pos, theta))
+    return apply_rope(q, positions, theta), apply_rope(k, positions, theta)
+
+
+def _attn_layer(x, ap, cfg: ModelConfig, ctx: ExecContext, spec: LayerSpec,
+                positions, cache, mrope_pos, enc_out):
+    window = cfg.window_size if spec.mixer == "local" else None
+    q, k, v = _project_qkv(x, ap, cfg)
+    q, k = _rope(q, k, cfg, spec.mixer, positions, mrope_pos)
+    if ctx.mode != "step":
+        if ctx.attn_heads_sharded:
+            q = ctx.constrain(q, ("batch", None, "heads", None))
+            k = ctx.constrain(k, ("batch", None, "kv_heads", None))
+            v = ctx.constrain(v, ("batch", None, "kv_heads", None))
+        elif ctx.attn_seq_sharded:
+            k = ctx.constrain(k, ("batch", "kv_seq", None, None))
+            v = ctx.constrain(v, ("batch", "kv_seq", None, None))
+    new_cache = cache
+    if ctx.mode == "step":
+        new_cache = dict(cache)
+        kv_keys = ("k", "v", "pos") + (("k_scale", "v_scale")
+                                       if "k_scale" in cache else ())
+        upd = update_attn_cache({kk: cache[kk] for kk in kv_keys},
+                                k, v, positions)
+        new_cache.update(upd)
+        out = decode_attention(q, upd["k"], upd["v"], upd["pos"],
+                               positions[:, 0], window=window,
+                               k_scale=upd.get("k_scale"),
+                               v_scale=upd.get("v_scale"))
+    else:
+        out = attention(q, k, v, positions, positions, causal=True,
+                        window=window, q_block=ctx.q_block,
+                        unroll=ctx.scan_unroll)
+        if ctx.mode == "prefill" and cache is not None:
+            new_cache = dict(cache)
+            kv_keys = ("k", "v", "pos") + (("k_scale", "v_scale")
+                                           if "k_scale" in cache else ())
+            upd = prefill_attn_cache({kk: cache[kk] for kk in kv_keys},
+                                     k, v, positions)
+            new_cache.update(upd)
+    y = jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+    # cross-attention (enc-dec decoder)
+    if spec.cross:
+        xc = rms_norm(x + y, ap["cross_norm"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhk->bshk", xc, ap["cross_wq"])
+        if ctx.mode == "step":
+            ck, cv = cache["cross_k"], cache["cross_v"]
+        else:
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, ap["cross_wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, ap["cross_wv"])
+            if ctx.mode == "prefill" and new_cache is not None:
+                new_cache["cross_k"] = ck.astype(new_cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(new_cache["cross_v"].dtype)
+        src = ck.shape[1]
+        src_pos = jnp.broadcast_to(jnp.arange(src), (ck.shape[0], src))
+        co = attention(qc, ck, cv,
+                       jnp.zeros_like(positions) + src,  # no causal masking
+                       src_pos, causal=False, q_block=ctx.q_block,
+                       unroll=ctx.scan_unroll)
+        y = y + jnp.einsum("bshk,hkd->bsd", co, ap["cross_wo"])
+    return y, new_cache
+
+
+def _mlstm_block(x, p, cfg: ModelConfig, ctx: ExecContext, cache):
+    mp = p["mlstm"]
+    h_in = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    u, z = jnp.split(jnp.einsum("bsd,de->bse", h_in, mp["w_up"]), 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", u, mp["wq"])
+    k = jnp.einsum("bse,ehk->bshk", u, mp["wk"])
+    v = jnp.einsum("bse,ehk->bshk", u, mp["wv"])
+    gates = jnp.einsum("bse,eg->bsg", u.astype(jnp.float32), mp["w_if"])
+    gates = gates + mp["b_if"]
+    nh = cfg.num_heads
+    log_i, log_f = gates[..., :nh], jax.nn.log_sigmoid(gates[..., nh:])
+    state = cache
+    if ctx.mode == "step":
+        h, new_state = mlstm_step(q, k, v, log_i, log_f, state)
+    else:
+        h, new_state = mlstm_chunkwise(q, k, v, log_i, log_f,
+                                       state if ctx.mode == "prefill" else None,
+                                       chunk=ctx.mlstm_chunk,
+                                       unroll=ctx.scan_unroll)
+    b, s = x.shape[0], x.shape[1]
+    h = h.reshape(b, s, -1)
+    h = rms_norm(h, mp["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, mp["w_down"])
+    return x + out, (new_state if ctx.mode in ("prefill", "step") else cache)
+
+
+def _slstm_block(x, p, cfg: ModelConfig, ctx: ExecContext, cache):
+    sp = p["slstm"]
+    h_in = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    pre = jnp.einsum("bsd,dghk->bsghk", h_in, sp["w_zifo"]) + sp["b_zifo"]
+    rec = {k: sp[k] for k in ("rz", "ri", "rf", "ro")}
+    state = cache if ctx.mode in ("prefill", "step") else None
+    h, new_state = slstm_seq(pre, rec, state)
+    b, s = x.shape[0], x.shape[1]
+    h = h.reshape(b, s, -1)
+    h = rms_norm(h, sp["out_norm"], cfg.norm_eps)
+    x = x + h
+    # post-cell gated FFN
+    hf = rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+    x = x + ffn_apply(hf, sp["ffn"], cfg.act, True)
+    return x, (new_state if ctx.mode in ("prefill", "step") else cache)
+
+
+def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
+                positions, cache, mrope_pos=None, enc_out=None):
+    """One transformer layer.  Returns (x, aux, new_cache)."""
+    aux = {}
+    if spec.mixer == "mlstm":
+        x, nc = _mlstm_block(x, p, cfg, ctx, cache)
+        return x, aux, nc
+    if spec.mixer == "slstm":
+        x, nc = _slstm_block(x, p, cfg, ctx, cache)
+        return x, aux, nc
+
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if spec.mixer in ("global", "local"):
+        y, nc = _attn_layer(h, p["attn"], cfg, ctx, spec, positions, cache,
+                            mrope_pos, enc_out)
+    elif spec.mixer == "recurrent":
+        if ctx.mode == "step":
+            y, new_state = rglru_step(h, p["rglru"], cache)
+        else:
+            y, new_state = rglru_seq(
+                h, p["rglru"],
+                h0=cache["h"] if (ctx.mode == "prefill" and cache) else None,
+                conv_state=cache["conv"] if (ctx.mode == "prefill" and cache)
+                else None)
+        nc = new_state if ctx.mode in ("prefill", "step") else cache
+    if cfg.post_attn_norm:
+        y = rms_norm(y, p["post_norm"], cfg.norm_eps)
+    x = x + y
+
+    if spec.ffn == "none":
+        return x, aux, nc
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if spec.ffn == "dense":
+        if ctx.quantized and "stacks" in p.get("ffn", {}):
+            y = ffn_apply_quantized(h, p["ffn"]["stacks"], cfg.act,
+                                    cfg.gated_ffn)
+        else:
+            y = ffn_apply(h, p["ffn"], cfg.act, cfg.gated_ffn)
+    else:  # moe
+        mp = p["moe"]
+        if ctx.moe_ep_fn is not None and ctx.ep_mode != "none":
+            y, aux = ctx.moe_ep_fn(h, mp, cfg, ctx)
+        else:
+            b, s, d = h.shape
+            y2, aux = moe_apply(h.reshape(-1, d), mp, cfg.moe, act=cfg.act,
+                                quantized=ctx.quantized and "stacks" in mp,
+                                exact_capacity=ctx.exact_capacity)
+            y = y2.reshape(b, s, d)
+        if "shared" in mp:
+            y = y + ffn_apply(h, mp["shared"], cfg.act, True)
+    if cfg.post_attn_norm:
+        y = rms_norm(y, p["post_ffn_norm"], cfg.norm_eps)
+    return x + y, aux, nc
+
+
+# ---------------------------------------------------------------------------
+# stack application (scan over segment repeats)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, ctx: ExecContext):
+    if not ctx.remat:
+        return fn
+    if ctx.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _zero_aux():
+    return {"load_balance": jnp.zeros((), jnp.float32),
+            "router_z": jnp.zeros((), jnp.float32)}
+
+
+def _merge_aux(a, b):
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0.0) + v
+    return out
+
+
+def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
+                caches=None, mrope_pos=None, enc_out=None):
+    """Run all segments.  Returns (x, aux, new_caches)."""
+    plan = derive_plan(cfg)
+    aux = _zero_aux()
+    new_segs = []
+    use_cache = caches is not None and ctx.mode in ("prefill", "step")
+
+    for si, seg in enumerate(plan):
+        seg_params = params["segments"][si]
+        seg_caches = (caches["segments"][si] if use_cache
+                      else tuple(None for _ in seg.layers))
+
+        def group(x, gp, gc):
+            dtype0 = x.dtype
+            ga = _zero_aux()
+            ncs = []
+            for pi, spec in enumerate(seg.layers):
+                x, a, nc = apply_layer(x, gp[pi], spec, cfg, ctx, positions,
+                                       gc[pi] if use_cache else None,
+                                       mrope_pos, enc_out)
+                x = x.astype(dtype0)  # keep scan carry dtype stable
+                ga = _merge_aux(ga, a)
+                ncs.append(nc if use_cache else 0)
+            return x, ga, tuple(ncs)
+
+        if seg.repeat == 1:
+            x, ga, nc = group(x, seg_params, seg_caches)
+            aux = _merge_aux(aux, ga)
+            new_segs.append(nc)
+        elif use_cache:
+            def body_c(carry, xs):
+                gp, gc = xs
+                fn = _remat(group, ctx)
+                xo, ga, nc = fn(carry, gp, gc)
+                return xo, (ga, nc)
+
+            x, (gas, ncs) = jax.lax.scan(body_c, x, (seg_params, seg_caches),
+                                         unroll=ctx.scan_unroll)
+            aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
+            new_segs.append(ncs)
+        else:
+            dummy = tuple(None for _ in seg.layers)
+
+            def body(carry, gp):
+                fn = _remat(group, ctx)
+                xo, ga, _ = fn(carry, gp, dummy)
+                return xo, ga
+
+            x, gas = jax.lax.scan(body, x, seg_params,
+                                  unroll=ctx.scan_unroll)
+            aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
+            new_segs.append(0)
+
+    new_caches = None
+    if use_cache:
+        new_caches = {"segments": tuple(new_segs), "pos": positions[:, -1] + 1}
+    return x, aux, new_caches
+
+
+def apply_encoder(params, embeds, cfg: ModelConfig, ctx: ExecContext):
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    e = cfg.encoder
+    dtype = params["encoder"]["layers"]["ffn"]["w1"].dtype
+    x = embeds.astype(dtype)
+    src = x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(src), (x.shape[0], src))
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["pre_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        o = attention(q, k, v, pos, pos, causal=False, q_block=ctx.q_block,
+                      unroll=ctx.scan_unroll)
+        carry = carry + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        h = rms_norm(carry, lp["ffn_norm"], cfg.norm_eps)
+        carry = carry + ffn_apply(h, lp["ffn"], "gelu", False)
+        return carry.astype(dtype), 0
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"],
+                        unroll=ctx.scan_unroll)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)

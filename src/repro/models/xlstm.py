@@ -1,0 +1,150 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM keeps a matrix memory C (hd x hd per head) with exponential gating;
+train/prefill uses the chunkwise-recurrent form (intra-chunk quadratic,
+inter-chunk O(1) state carry) in stabilized log space, decode a single
+fused update.  sLSTM has true hidden-to-hidden recurrence (block-diagonal
+per head) and is evaluated with lax.scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk: int = 256,
+                    unroll: bool = False):
+    """q/k/v: (B, S, H, hd); log_i/log_f: (B, S, H).
+
+    Returns h: (B, S, H, hd) and final state {c, n, m}.
+    State convention: true_C = c * exp(m) (per batch/head).
+    """
+    b, s, h, hd = q.shape
+    if s % chunk:
+        chunk = s  # degenerate single chunk for odd smoke shapes
+    nc = s // chunk
+    scale = hd ** -0.5
+
+    def rs(x):  # (B, S, ...) -> (nc, B, chunk, ...)
+        return jnp.moveaxis(x.reshape(b, nc, chunk, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs = rs(q * scale), rs(k), rs(v)
+    lis, lfs = rs(log_i.astype(jnp.float32)), rs(log_f.astype(jnp.float32))
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32) if state is None else state["c"]
+    n0 = jnp.zeros((b, h, hd), jnp.float32) if state is None else state["n"]
+    m0 = jnp.full((b, h), NEG, jnp.float32) if state is None else state["m"]
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        c, n, m = carry
+        qc, kc, vc, li, lf = xs          # (B, chunk, H, ...)
+        bcum = jnp.cumsum(lf, axis=1)                    # (B, chunk, H)
+        # intra-chunk log weights W[t, j] = bcum_t - bcum_j + li_j  (j <= t)
+        wij = (bcum[:, :, None] - bcum[:, None, :] + li[:, None, :])
+        wij = jnp.where(tri[None, :, :, None], wij, NEG)  # (B, t, j, H)
+        a_t = bcum + m[:, None]                           # inter log scale
+        m_t = jnp.maximum(a_t, wij.max(axis=2))           # (B, chunk, H)
+        inter = jnp.exp(a_t - m_t)                        # (B, chunk, H)
+        intra = jnp.exp(wij - m_t[:, :, None])            # (B, t, j, H)
+        # numerator / normalizer
+        sc = jnp.einsum("bthd,bjhd->btjh", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+        num = jnp.einsum("btjh,btjh,bjhd->bthd", sc, intra,
+                         vc.astype(jnp.float32))
+        num += inter[..., None] * jnp.einsum(
+            "bthd,bhde->bthe", qc.astype(jnp.float32), c)
+        nvec = jnp.einsum("btjh,bjhd->bthd", intra, kc.astype(jnp.float32))
+        nvec += inter[..., None] * n[:, None]
+        qn = jnp.einsum("bthd,bthd->bth", qc.astype(jnp.float32), nvec)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        hout = num / denom[..., None]
+        # chunk-end state update
+        btot = bcum[:, -1]                                # (B, H)
+        wj = btot[:, None] - bcum + li                    # (B, chunk, H)
+        m_new = jnp.maximum(btot + m, wj.max(axis=1))
+        cd = jnp.exp(btot + m - m_new)
+        wj = jnp.exp(wj - m_new[:, None])
+        c_new = cd[:, :, None, None] * c + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj, kc.astype(jnp.float32),
+            vc.astype(jnp.float32))
+        n_new = cd[:, :, None] * n + jnp.einsum(
+            "bjh,bjhd->bhd", wj, kc.astype(jnp.float32))
+        return (c_new, n_new, m_new), hout
+
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), (qs, ks, vs, lis, lfs),
+                                 unroll=unroll)
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, s, h, hd)
+    return hout.astype(q.dtype), {"c": c, "n": n, "m": m}
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step.  q/k/v: (B, 1, H, hd); log gates (B, 1, H)."""
+    b, _, h, hd = q.shape
+    scale = hd ** -0.5
+    q1 = q[:, 0].astype(jnp.float32) * scale
+    k1, v1 = k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+    li, lf = log_i[:, 0].astype(jnp.float32), log_f[:, 0].astype(jnp.float32)
+    m_new = jnp.maximum(lf + state["m"], li)
+    cd = jnp.exp(lf + state["m"] - m_new)
+    iw = jnp.exp(li - m_new)
+    c = cd[..., None, None] * state["c"] + iw[..., None, None] * (
+        k1[..., :, None] * v1[..., None, :])
+    n = cd[..., None] * state["n"] + iw[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, c)
+    qn = jnp.einsum("bhd,bhd->bh", q1, n)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    hout = (num / denom[..., None])[:, None]
+    return hout.astype(q.dtype), {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell — sequential scan with block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(x_zifo, h_prev, c_prev, n_prev, m_prev, rec):
+    """One step.  x_zifo: (B, 4, H, hd) pre-activations from the input;
+    rec: {rz, ri, rf, ro}: (H, hd, hd) recurrent block-diag weights."""
+    def r(name):
+        return jnp.einsum("bhd,hde->bhe", h_prev, rec[name])
+    z = jnp.tanh(x_zifo[:, 0] + r("rz"))
+    li = x_zifo[:, 1] + r("ri")                      # log input gate
+    lf = jax.nn.log_sigmoid(x_zifo[:, 2] + r("rf"))  # log forget gate
+    o = jax.nn.sigmoid(x_zifo[:, 3] + r("ro"))
+    m_new = jnp.maximum(lf + m_prev, li)
+    c = jnp.exp(lf + m_prev - m_new) * c_prev + jnp.exp(li - m_new) * z
+    n = jnp.exp(lf + m_prev - m_new) * n_prev + jnp.exp(li - m_new)
+    h = o * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m_new
+
+
+def slstm_seq(x_zifo: jax.Array, rec: Dict[str, jax.Array],
+              state: Optional[Dict[str, jax.Array]] = None
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x_zifo: (B, S, 4, H, hd) -> h: (B, S, H, hd), final state."""
+    b, s, _, h, hd = x_zifo.shape
+    if state is None:
+        zeros = jnp.zeros((b, h, hd), jnp.float32)
+        state = {"c": zeros, "n": zeros, "h": zeros,
+                 "m": jnp.full((b, h, hd), NEG, jnp.float32)}
+
+    def step(carry, xt):
+        hp, cp, np_, mp = carry
+        hn, cn, nn, mn = _slstm_cell(xt.astype(jnp.float32), hp, cp, np_,
+                                     mp, rec)
+        return (hn, cn, nn, mn), hn
+
+    (hf, cf, nf, mf), hs = jax.lax.scan(
+        step, (state["h"], state["c"], state["n"], state["m"]),
+        jnp.moveaxis(x_zifo, 1, 0))
+    return (jnp.moveaxis(hs, 0, 1).astype(x_zifo.dtype),
+            {"c": cf, "n": nf, "h": hf, "m": mf})

@@ -1,0 +1,7 @@
+"""Offloading emulation: expert store, LRU cache, bandwidth cost models,
+layer-ahead prefetch, and the fig-7 event-driven throughput simulator."""
+from .bandwidth import GPU_NDP, GPU_ONLY, TPU_V5E_OFFLOAD, HardwareProfile
+from .cache import *  # noqa
+from .prefetch import LayerAheadPrefetcher, PrefetchStats
+from .simulator import LayerSpecSim, SimResult, make_router_trace, simulate_decode
+from .store import ExpertCache, ExpertStore, FetchStats

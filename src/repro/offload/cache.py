@@ -1,0 +1,4 @@
+"""Re-export of the device-resident expert LRU (lives with the store)."""
+from .store import ExpertCache, FetchStats
+
+__all__ = ["ExpertCache", "FetchStats"]

@@ -1,0 +1,45 @@
+"""Layer-ahead expert prefetcher (related-work systems [5,19,33,42]).
+
+While layer l computes, predict layer l+1's experts and issue their
+fetches.  Prediction uses the previous token's routing at l+1 (decode-time
+temporal locality) — the cheap predictor HOBBIT-class systems use; accuracy
+and the wasted-fetch ratio are metered so benchmarks can quantify the
+prediction-miss penalty the paper's related-work section describes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    issued: int = 0
+    useful: int = 0
+    wasted: int = 0
+
+    @property
+    def accuracy(self) -> float:
+        return self.useful / self.issued if self.issued else 0.0
+
+
+class LayerAheadPrefetcher:
+    """Predicts layer l+1 experts = previous token's experts at l+1."""
+
+    def __init__(self, num_layers: int, top_k: int):
+        self.prev_token: List[Optional[np.ndarray]] = [None] * num_layers
+        self.stats = PrefetchStats()
+
+    def predict(self, layer: int) -> Optional[np.ndarray]:
+        return self.prev_token[layer]
+
+    def observe(self, layer: int, experts: np.ndarray):
+        pred = self.prev_token[layer]
+        if pred is not None:
+            hit = len(np.intersect1d(pred, experts))
+            self.stats.issued += len(pred)
+            self.stats.useful += hit
+            self.stats.wasted += len(pred) - hit
+        self.prev_token[layer] = np.asarray(experts).copy()

@@ -1,0 +1,100 @@
+"""Expert store + device cache for offloaded serving (paper §2.1, §4.3).
+
+``ExpertStore`` keeps compressed experts in *host* memory (numpy) and
+fetches them on demand; ``ExpertCache`` is the device-resident LRU that
+Mixtral-Offloading/HOBBIT-style systems maintain.  Every fetch is metered
+in bytes so benchmarks can report exact PCIe/host-link traffic for
+fp16 / uniform-quant / BEAM-LRC policies.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.pipeline import CompressedExpertStack
+
+
+@dataclasses.dataclass
+class FetchStats:
+    bytes_moved: int = 0
+    fetches: int = 0
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class ExpertCache:
+    """Per-layer LRU over expert ids with byte-metered misses."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._lru: "collections.OrderedDict[int, int]" = collections.OrderedDict()
+        self.stats = FetchStats()
+
+    def access(self, expert: int, nbytes: int) -> bool:
+        """True on hit; on miss, meters ``nbytes`` and inserts."""
+        if expert in self._lru:
+            self._lru.move_to_end(expert)
+            self.stats.hits += 1
+            return True
+        self.stats.misses += 1
+        self.stats.fetches += 1
+        self.stats.bytes_moved += nbytes
+        self._lru[expert] = nbytes
+        if len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+        return False
+
+
+class ExpertStore:
+    """Host-side store of one MoE layer's compressed projections.
+
+    ``fetch_policy``:
+      'fp16'   — move full-precision experts (Mixtral-Offloading baseline)
+      'quant'  — uniform low-bit, no compensators (HQQ/GPTQ baseline)
+      'ours'   — low-bit + compensators for the top-n experts (BEAM-LRC)
+    """
+
+    def __init__(self, stacks: Dict[str, CompressedExpertStack],
+                 cache_capacity: int = 4):
+        self.stacks = stacks
+        self.num_experts = next(iter(stacks.values())).scale.shape[0]
+        self.cache = ExpertCache(cache_capacity)
+        self.comp_bytes_moved = 0
+
+    def expert_bytes(self, e: int, policy: str) -> int:
+        if policy == "fp16":
+            return sum(s.fp16_wire_bytes for s in self.stacks.values())
+        return sum(s.expert_wire_bytes(e, compensated=False)
+                   for s in self.stacks.values())
+
+    def compensator_bytes(self, e: int) -> int:
+        return sum(int(s.ranks[e] * (s.shape[1] + s.shape[2])
+                       * s.factor_bits / 8) + 4 * s.ranks[e]
+                   for s in self.stacks.values())
+
+    def access_token(self, topk: np.ndarray, top_n: int, policy: str
+                     ) -> int:
+        """Meter one token's expert fetches; returns bytes moved."""
+        before = self.cache.stats.bytes_moved + self.comp_bytes_moved
+        for rank, e in enumerate(topk):
+            e = int(e)
+            self.cache.access(e, self.expert_bytes(e, policy))
+            if policy == "ours" and rank < top_n:
+                # compensators ride along only for the top-n experts
+                self.comp_bytes_moved += self.compensator_bytes(e)
+        return (self.cache.stats.bytes_moved + self.comp_bytes_moved
+                - before)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.cache.stats.bytes_moved + self.comp_bytes_moved

@@ -1,0 +1,3 @@
+"""Sharded optimization: AdamW + schedules + clipping + grad compression."""
+from .adamw import (OptState, adamw_init, adamw_update, clip_by_global_norm,
+                    global_norm, warmup_cosine)

@@ -1,0 +1,87 @@
+"""Sharded AdamW with f32 master weights over bf16 compute params.
+
+Optimizer state is a pytree mirroring the parameter tree (same logical
+sharding), so pjit shards it with the same rules — no separate bookkeeping.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    master: Any      # f32 master copy of params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> OptState:
+    # copy=True: master must never alias the compute params (donation)
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(f32, params),
+                    jax.tree.map(zeros, params),
+                    jax.tree.map(zeros, params))
+
+
+def warmup_cosine(tcfg: TrainConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(tcfg.warmup_steps, 1)
+    total = jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1)
+    prog = jnp.clip((s - tcfg.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.lr * jnp.where(s < tcfg.warmup_steps, warm,
+                               jnp.maximum(cos, 0.02))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, state: OptState, tcfg: TrainConfig,
+                 param_dtype=jnp.bfloat16) -> Tuple[Any, OptState, Dict]:
+    """Returns (new compute params, new state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if tcfg.clip_norm:
+        grads, gn = clip_by_global_norm(grads, tcfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+    step = state.step + 1
+    lr = warmup_cosine(tcfg, step)
+    b1, b2, eps, wd = tcfg.b1, tcfg.b2, tcfg.eps, tcfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, m, v):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        p = p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+        return p, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    new = [upd(g, p, m, v) for g, p, m, v in
+           zip(flat_g, flat_p, flat_m, flat_v)]
+    master = treedef.unflatten([t[0] for t in new])
+    m = treedef.unflatten([t[1] for t in new])
+    v = treedef.unflatten([t[2] for t in new])
+    params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    return params, OptState(step, master, m, v), {"grad_norm": gn, "lr": lr}

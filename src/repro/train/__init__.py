@@ -1,0 +1,2 @@
+"""Training loop with checkpoint/restart, failure injection, stragglers."""
+from .loop import (FailureInjector, StragglerMonitor, TrainResult, train)

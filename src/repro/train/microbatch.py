@@ -1,0 +1,53 @@
+"""Gradient accumulation: split the global batch into microbatches and
+accumulate grads in f32 via lax.scan — peak activation memory scales with
+the microbatch, not the global batch (the standard large-model trick; the
+dry-run's train cells can trade memory term for step latency with it).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatched_value_and_grad(loss_fn: Callable, num_micro: int):
+    """loss_fn(params, batch) -> (loss, metrics).  Returns a function with
+    the same signature as jax.value_and_grad(loss_fn, has_aux=True) that
+    scans over ``num_micro`` slices of the batch's leading dim."""
+    if num_micro <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split(batch):
+        def one(x):
+            b = x.shape[0]
+            assert b % num_micro == 0, (b, num_micro)
+            return x.reshape(num_micro, b // num_micro, *x.shape[1:])
+        return jax.tree.map(one, batch)
+
+    def vg(params, batch):
+        micro = split(batch)
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def step(carry, mb):
+            acc, loss_acc, metrics_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / num_micro,
+                acc, grads)
+            metrics_acc = jax.tree.map(
+                lambda a, m: a + m / num_micro, metrics_acc, metrics)
+            return (acc, loss_acc + loss / num_micro, metrics_acc), 0
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        first = jax.tree.map(lambda x: x[0], micro)
+        (_, m0), _ = jax.eval_shape(grad_fn, params, first), None
+        metrics0 = jax.tree.map(lambda s: jnp.zeros((), jnp.float32),
+                                jax.eval_shape(grad_fn, params,
+                                               first)[0][1])
+        (grads, loss, metrics), _ = jax.lax.scan(
+            step, (zeros, jnp.zeros((), jnp.float32), metrics0), micro)
+        return (loss, metrics), grads
+
+    return vg

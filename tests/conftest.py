@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# applied ONLY inside launch/dryrun.py, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

@@ -1,0 +1,110 @@
+"""Core compression pipeline: packing, HQQ, kurtosis allocation, SVD
+compensation, restoration math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig, RANK_BUCKETS
+from repro.core import (allocate_ranks, compress_expert_stack, dequantize,
+                        hqq_quantize, kurtosis, pack_bits, quant_error,
+                        quantize, topn_mask, uniform_ranks, unpack_bits)
+
+
+def test_pack_roundtrip_all_widths():
+    rng = np.random.default_rng(0)
+    for bits in (1, 2, 3, 4, 8):
+        q = jnp.asarray(rng.integers(0, 1 << bits, (256, 64)).astype(np.uint8))
+        planes = pack_bits(q, bits)
+        back = unpack_bits(planes, bits)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+        nbytes = sum(p.size for p in planes)
+        assert nbytes * 8 == bits * q.size  # exact sub-byte storage
+
+
+def test_quant_error_decreases_with_bits():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((512, 256)).astype(np.float32))
+    errs = [float(quant_error(w, quantize(w, b, 64))) for b in (2, 3, 4, 8)]
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 0.01
+
+
+def test_hqq_beats_rtn_on_heavy_tails():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_t(2.5, (512, 256)).astype(np.float32))
+    for bits in (2, 3):
+        e_rtn = float(quant_error(w, quantize(w, bits, 64)))
+        e_hqq = float(quant_error(w, hqq_quantize(w, bits, 64, iters=20)))
+        assert e_hqq < e_rtn
+
+
+def test_kurtosis_matches_scipy_definition():
+    rng = np.random.default_rng(3)
+    x = rng.standard_t(4, size=(64, 32)).astype(np.float32)
+    k = float(kurtosis(jnp.asarray(x)))
+    mu, sd = x.mean(), x.std()
+    expect = float(np.mean((x - mu) ** 4) / sd ** 4)
+    assert abs(k - expect) / expect < 1e-3
+
+
+def test_greedy_allocation_respects_budget_and_order():
+    kurt = [10.0, 50.0, 5.0, 20.0]
+    ranks = allocate_ranks(kurt, rank_budget=32, buckets=RANK_BUCKETS)
+    assert ranks.sum() <= 4 * 32
+    # highest kurtosis expert gets the largest allocation
+    assert ranks[1] == max(ranks)
+    assert set(ranks) <= set(RANK_BUCKETS)
+
+
+def test_uniform_allocation():
+    r = uniform_ranks(8, 32)
+    assert (r == 32).all()
+
+
+def test_compensation_reduces_residual():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(np.stack([
+        rng.standard_t(2.2 + e, (256, 128)).astype(np.float32)
+        for e in range(4)]))
+    qcfg = QuantConfig(enabled=True, bits=2, rank_budget=32, hqq_iters=5)
+    stack, rep = compress_expert_stack(w, qcfg)
+    # compensated experts improve strictly; uncompensated unchanged
+    comp = rep["ranks"] > 0
+    assert comp.any()
+    assert (rep["rel_err_comp"][comp] < rep["rel_err_quant"][comp]).all()
+    assert np.allclose(rep["rel_err_comp"][~comp],
+                       rep["rel_err_quant"][~comp], rtol=1e-5)
+
+
+def test_kurtosis_error_correlation():
+    """Paper Fig 4b: kurtosis positively correlates with quant error."""
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(np.stack([
+        rng.standard_t(df, (256, 128)).astype(np.float32)
+        for df in (2.1, 2.5, 3.0, 4.0, 6.0, 10.0, 20.0, 50.0)]))
+    qcfg = QuantConfig(enabled=True, bits=2, hqq_iters=3)
+    _, rep = compress_expert_stack(w, qcfg)
+    corr = np.corrcoef(rep["kurtosis"], rep["rel_err_quant"])[0, 1]
+    assert corr > 0.6
+
+
+def test_topn_mask():
+    topk = jnp.asarray([[3, 1, 0], [2, 5, 4]])
+    m = topn_mask(topk, n=2, num_experts=6)
+    assert m.shape == (2, 6)
+    np.testing.assert_array_equal(
+        np.asarray(m),
+        [[0, 1, 0, 1, 0, 0], [0, 0, 1, 0, 0, 1]])
+
+
+def test_wire_bytes_accounting():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.standard_normal((2, 256, 128)).astype(np.float32))
+    qcfg = QuantConfig(enabled=True, bits=2, rank_budget=16, hqq_iters=2)
+    stack, _ = compress_expert_stack(w, qcfg)
+    b_plain = stack.expert_wire_bytes(0, compensated=False)
+    b_comp = stack.expert_wire_bytes(0, compensated=True)
+    assert b_plain < stack.fp16_wire_bytes / 4     # >4x compression at 2-bit
+    r = stack.ranks[0]
+    assert b_comp - b_plain == r * (256 + 128) + 4 * r or r == 0

@@ -1,0 +1,137 @@
+"""Distribution layer on a small in-process mesh.
+
+Runs in a SUBPROCESS with 8 host devices (the conftest keeps the main
+test process at 1 device, per the assignment's instruction not to set the
+override globally)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.config import ModelConfig, MoEConfig, ParallelConfig, \\
+        QuantConfig, TrainConfig
+    from repro.distributed.sharding import (PARAM_RULES, mesh_spec,
+                                            tree_shardings)
+    from repro.distributed.collectives import compressed_psum_grads
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch.steps import TrainState, make_context, make_train_step
+    from repro.models import forward, init_params
+    from repro.models.transformer import ExecContext
+    from repro.optim.adamw import adamw_init
+
+    results = {}
+    mesh = make_debug_mesh(data=2, model=4)
+    pcfg = ParallelConfig()
+
+    cfg = ModelConfig(
+        name="tiny-moe", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=0, vocab_size=256,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=8, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2,
+                                        rank_budget=8, hqq_iters=2)))
+
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 256, (4, 16)), jnp.int32)
+
+    # 1) single-device reference (no mesh)
+    ref = forward(params, tokens, cfg,
+                  make_context(cfg, "train", exact_capacity=True))
+
+    # 2) EP a2a path under the mesh must match numerically
+    ctx = make_context(cfg, "train", mesh=mesh, pcfg=pcfg,
+                       exact_capacity=True)
+    shardings = tree_shardings(mesh, jax.eval_shape(lambda: params), pcfg)
+    params_sh = jax.device_put(params, shardings)
+    with mesh:
+        out = jax.jit(lambda p, t: forward(p, t, cfg, ctx).logits)(
+            params_sh, tokens)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.logits.astype(jnp.float32))))
+    results["ep_vs_single_max_err"] = err
+
+    # 3) sharding rules: expert dim actually sharded over 'model'
+    spec = shardings["segments"][0][0]["moe"]["w1"].spec
+    results["moe_w1_spec"] = str(spec)
+
+    # 4) train step end-to-end on the mesh
+    tcfg = TrainConfig(total_steps=2, loss_chunk=0)
+    step_fn, _ = make_train_step(cfg, tcfg, mesh=mesh, pcfg=pcfg,
+                                 param_dtype=jnp.float32)
+    state = TrainState(params_sh, adamw_init(params_sh))
+    with mesh:
+        state, m = jax.jit(step_fn)(state, {"tokens": tokens})
+    results["train_loss"] = float(m["loss"])
+    results["train_grad_norm"] = float(m["grad_norm"])
+
+    # 5) compressed int8 psum vs exact psum
+    grads = {"a": jnp.full((64, 64), 0.5, jnp.float32),
+             "b": jnp.arange(-8.0, 8.0)}
+    comp = compressed_psum_grads(grads, mesh, ("data", "model"), seed=0)
+    rel = float(jnp.max(jnp.abs(comp["a"] - 0.5) / 0.5))
+    results["psum_rel_err"] = rel
+
+    # 6) decode path: EP-replicated (psum combine) must match single-device
+    from repro.models import decode_step, init_caches
+    from repro.models import forward as fwd
+    caches = init_caches(cfg, 4, max_len=24, dtype=jnp.float32)
+    pre_ctx = make_context(cfg, "prefill", exact_capacity=True)
+    pre = fwd(params, tokens[:, :-1], cfg, pre_ctx, caches=caches)
+    ref_step = decode_step(params, tokens[:, -1:], pre.caches, cfg,
+                           make_context(cfg, "step", exact_capacity=True))
+    step_ctx = make_context(cfg, "step", mesh=mesh, pcfg=pcfg,
+                            exact_capacity=True)
+    with mesh:
+        got = jax.jit(lambda p, c, t: decode_step(
+            p, t, c, cfg, step_ctx).logits)(params_sh, pre.caches,
+                                            tokens[:, -1:])
+    results["decode_ep_max_err"] = float(jnp.max(jnp.abs(
+        got.astype(jnp.float32) - ref_step.logits.astype(jnp.float32))))
+    print("RESULTS:" + json.dumps(results))
+""")
+
+
+@pytest.fixture(scope="module")
+def mesh_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={**__import__("os").environ, "PYTHONPATH": "src",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=__import__("pathlib").Path(__file__).parent.parent, timeout=500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULTS:")][0]
+    return json.loads(line[len("RESULTS:"):])
+
+
+def test_ep_matches_single_device(mesh_results):
+    assert mesh_results["ep_vs_single_max_err"] < 5e-3
+
+
+def test_expert_dim_sharded(mesh_results):
+    assert "model" in mesh_results["moe_w1_spec"]
+
+
+def test_train_step_on_mesh(mesh_results):
+    assert mesh_results["train_loss"] > 0
+    assert mesh_results["train_grad_norm"] > 0
+
+
+def test_compressed_psum_accuracy(mesh_results):
+    assert mesh_results["psum_rel_err"] < 0.02
+
+
+def test_decode_ep_replicated_matches_single(mesh_results):
+    assert mesh_results["decode_ep_max_err"] < 5e-3

@@ -1,0 +1,98 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import RANK_BUCKETS
+from repro.core import (allocate_ranks, pack_bits, quantize, dequantize,
+                        unpack_bits)
+from repro.core.kurtosis import uniform_ranks
+from repro.models.moe import (Dispatch, RoutingInfo, combine_tokens,
+                              dispatch_tokens, make_dispatch, route)
+from repro.config import MoEConfig
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(bits=st.sampled_from([1, 2, 3, 4, 8]),
+       k=st.integers(1, 8).map(lambda x: x * 64),
+       n=st.integers(1, 4).map(lambda x: x * 8),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_pack_unpack_is_identity(bits, k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 1 << bits, (k, n)).astype(np.uint8))
+    assert np.array_equal(np.asarray(unpack_bits(pack_bits(q, bits), bits)),
+                          np.asarray(q))
+
+
+@given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_dequant_within_group_range(bits, seed):
+    """Dequantized values never leave the [min, max] of their group."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((128, 32)).astype(np.float32))
+    qt = quantize(w, bits, 64)
+    deq = np.asarray(dequantize(qt))
+    wg = np.asarray(w).reshape(2, 64, 32)
+    dg = deq.reshape(2, 64, 32)
+    lo = wg.min(1, keepdims=True) - 1e-4
+    hi = wg.max(1, keepdims=True) + 1e-4
+    assert ((dg >= lo) & (dg <= hi)).all()
+
+
+@given(n=st.integers(1, 64), budget=st.sampled_from([0, 16, 32, 64, 128]),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_rank_allocation_invariants(n, budget, seed):
+    rng = np.random.default_rng(seed)
+    kurt = rng.uniform(1, 100, n)
+    ranks = allocate_ranks(kurt, budget)
+    assert ranks.sum() <= n * budget
+    assert all(r in RANK_BUCKETS for r in ranks)
+    # monotone: a higher-kurtosis expert never gets less rank than a lower
+    # one *when traversal order is unambiguous* (strictly sorted kurtosis)
+    order = np.argsort(-kurt, kind="stable")
+    sorted_ranks = ranks[order]
+    assert all(sorted_ranks[i] >= sorted_ranks[i + 1]
+               for i in range(n - 1))
+
+
+@given(t=st.integers(1, 40), e=st.sampled_from([4, 8, 16]),
+       k=st.integers(1, 4), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_moe_dispatch_combine_no_drop_is_lossless(t, e, k, seed):
+    """At capacity >= T the dispatch/combine round trip equals the dense
+    gate-weighted sum of expert outputs (identity experts)."""
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    d = 16
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    w_router = jnp.asarray(rng.standard_normal((d, e)).astype(np.float32))
+    mcfg = MoEConfig(num_experts=e, top_k=k, d_expert=8)
+    info = route(x, w_router, mcfg)
+    disp = make_dispatch(info, e, capacity=t, top_n=1)
+    xe, me = dispatch_tokens(x, disp, e)
+    y = combine_tokens(xe, disp, t)          # identity experts
+    expect = x * np.asarray(info.gates.sum(-1))[:, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+    # top-n mask covers exactly t slots (one per token, n=1)
+    assert float(me.sum()) == t
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_router_gates_normalized(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((12, 16)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    mcfg = MoEConfig(num_experts=8, top_k=2, d_expert=8,
+                     router_norm_topk=True)
+    info = route(x, w, mcfg)
+    np.testing.assert_allclose(np.asarray(info.gates.sum(-1)),
+                               np.ones(12), rtol=1e-5)
+    # descending order
+    g = np.asarray(info.gates)
+    assert (g[:, :-1] >= g[:, 1:] - 1e-6).all()
