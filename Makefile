@@ -1,0 +1,18 @@
+# Repo verification targets.
+#
+#   make tier1   fast correctness gate (excludes @pytest.mark.slow)
+#   make test    full suite, including slow/benchmarks-adjacent tests
+#   make serve-example   live-decode offload report from the serve engine
+
+PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: tier1 test serve-example
+
+tier1:
+	$(PY) -m pytest -x -q -m "not slow"
+
+test:
+	$(PY) -m pytest -q
+
+serve-example:
+	$(PY) examples/serve_offload.py

@@ -15,7 +15,7 @@ from repro.core.quantize import packed_nbytes
 from repro.offload import (GPU_NDP, GPU_ONLY, LayerSpecSim,
                            make_router_trace, simulate_decode)
 from repro.registry import get_config
-from repro.serve import router_trace
+from repro.serve import ServeEngine
 
 from .common import trained_moe
 
@@ -39,9 +39,13 @@ def _trace(arch: str, tokens: int, quick: bool) -> np.ndarray:
     cfg = get_config(arch)
     e, k = cfg.moe.num_experts, cfg.moe.top_k
     layers = MODELS[arch]["layers"]
-    # real routing skew from the trained bench model, remapped to e experts
+    # real DECODE-time routing skew from the trained bench model's live
+    # serving loop (unified engine interface), remapped to e experts
     bcfg, params = trained_moe(steps=60 if quick else 200)
-    tr = router_trace(bcfg, params, np.zeros((1, min(tokens, 64)), np.int32))
+    eng = ServeEngine(bcfg, params)
+    out = eng.generate(np.zeros((1, 8), np.int32),
+                       max_new=min(tokens, 64), seed=0)
+    tr = out.request_trace(0)                    # (steps, layers, k)
     t, l, kk = tr.shape
     reps_t = -(-tokens // t)
     reps_l = -(-layers // l)

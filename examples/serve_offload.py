@@ -1,10 +1,12 @@
-"""Serving example: batched generation with offloading emulation.
+"""Serving example: batched generation with live offloading metering.
 
 Loads the quickstart-style compressed MoE, serves batched requests with the
-router-guided restoration path, replays the real router trace through the
-metered ExpertStore (LRU cache + layer-ahead prefetcher), and prints the
-tokens/s each offload policy achieves under the paper's GPU-only and
-GPU-NDP hardware profiles.
+router-guided restoration path through the jitted streaming decode loop,
+and meters the engine's OWN routing decisions through the per-layer
+``ExpertStore`` (LRU cache + layer-ahead prefetcher) — bytes/token, cache
+hit rate, and prefetch accuracy come from live decode, not a replayed
+simulator trace.  The fig-7 event-driven simulator then projects that live
+trace onto the paper's GPU-only and GPU-NDP hardware profiles.
 
 Run:  PYTHONPATH=src python examples/serve_offload.py
 """
@@ -18,10 +20,8 @@ from repro.core import compress_ffn_weights
 from repro.core.quantize import packed_nbytes
 from repro.models import init_params
 from repro.models.transformer import unstack_params
-from repro.offload import (GPU_NDP, GPU_ONLY, ExpertStore,
-                           LayerAheadPrefetcher, LayerSpecSim,
-                           simulate_decode)
-from repro.serve import ServeEngine, router_trace
+from repro.offload import (GPU_NDP, GPU_ONLY, LayerSpecSim, simulate_decode)
+from repro.serve import ServeEngine
 from repro.train import train
 
 
@@ -56,8 +56,11 @@ def main():
     qparams = dict(up)
     qparams["segments"] = tuple(segs)
 
-    # --- batched generation on the compensated path ----------------------
+    # --- batched generation + live offload metering ----------------------
+    # the engine's jitted decode loop returns the per-step router trace;
+    # attach_offload feeds it straight into the metered per-layer stores
     eng = ServeEngine(cfg_q, qparams, quantized=True)
+    eng.attach_offload(stacks_by_layer, policy="ours", cache_capacity=2)
     prompts = np.random.default_rng(0).integers(0, 512, (4, 16),
                                                 dtype=np.int32)
     out = eng.generate(prompts, max_new=16)
@@ -65,19 +68,15 @@ def main():
           f"prefill {out.prefill_s * 1e3:.0f}ms  "
           f"decode {out.decode_tokens_per_s:.1f} tok/s (CPU emulation)")
 
-    # --- offload metering with the real router trace ---------------------
-    trace = router_trace(cfg, params, prompts[:1])
-    store = ExpertStore(stacks_by_layer[0], cache_capacity=2)
-    pf = LayerAheadPrefetcher(cfg.num_layers, cfg.moe.top_k)
-    for t in range(trace.shape[0]):
-        for l in range(trace.shape[1]):
-            store.access_token(trace[t, l], top_n=1, policy="ours")
-            pf.observe(l, trace[t, l])
-    print(f"offload bytes (ours): {store.total_bytes / 2**20:.2f} MiB, "
-          f"cache hit {store.cache.stats.hit_rate:.0%}, "
-          f"prefetch accuracy {pf.stats.accuracy:.0%}")
+    rep = out.offload_report
+    print(f"live offload ({rep['policy']}): "
+          f"{rep['bytes_per_token'] / 2**20:.2f} MiB/token, "
+          f"cache hit {rep['hit_rate']:.0%}, "
+          f"prefetch accuracy {rep['prefetch_accuracy']:.0%}")
 
     # --- projected device throughput (paper fig-7 hardware profiles) -----
+    # feed the simulator the LIVE decode trace of one request stream
+    trace = out.request_trace(0)                      # (steps, layers, k)
     d, fe, e = 4096, 14336, 8   # Mixtral-8x7B expert dims
     spec = LayerSpecSim(
         d, fe, e, 2,

@@ -1,0 +1,47 @@
+"""jax version shims, collected in one leaf module (imports jax only).
+
+The repo targets current jax but must run on 0.4.x; every API whose
+name/location moved between those lives here so version fixes happen in
+exactly one place.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+_SM_CHECK_KW = ("check_vma" if "check_vma"
+                in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-tolerant ``shard_map`` wrapper (check_vma/check_rep rename)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_SM_CHECK_KW: check_vma})
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis (jax.lax.axis_size is newer jax;
+    jax.core.axis_frame returns the int size on 0.4.x)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    fr = jax.core.axis_frame(axis)
+    return fr if isinstance(fr, int) else fr.size
+
+
+# Pallas TPU compiler params were renamed TPUCompilerParams -> CompilerParams
+if hasattr(_pltpu, "CompilerParams"):
+    PallasCompilerParams = _pltpu.CompilerParams
+elif hasattr(_pltpu, "TPUCompilerParams"):
+    PallasCompilerParams = _pltpu.TPUCompilerParams
+else:  # pragma: no cover - fail eagerly with a clear message
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")

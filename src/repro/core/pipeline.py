@@ -8,6 +8,7 @@ DESIGN.md §5).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Dict, Optional, Tuple
@@ -105,7 +106,7 @@ def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
     # group_size <= 0 means per-channel (one group spanning all of K) —
     # the coarse granularity at which RTN/GPTQ-class int2 collapses
     if qcfg.group_size <= 0 or qcfg.group_size > K:
-        qcfg = __import__("dataclasses").replace(qcfg, group_size=K)
+        qcfg = dataclasses.replace(qcfg, group_size=K)
 
     # 1. per-expert kurtosis (paper §3.1 step 1)
     kurt = np.array([float(kurtosis(w32[e])) for e in range(E)])

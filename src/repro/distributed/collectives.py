@@ -15,7 +15,8 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from ..compat import axis_size, shard_map
 
 
 def _quantize_grad(g: jax.Array, key) -> tuple[jax.Array, jax.Array]:
@@ -42,7 +43,7 @@ def compressed_psum(g: jax.Array, axes: Sequence[str], key) -> jax.Array:
     acc = jax.lax.psum(q.astype(jnp.int32), axes)
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= axis_size(a)
     return acc.astype(jnp.float32) * s / n
 
 

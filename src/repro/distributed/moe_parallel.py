@@ -14,11 +14,10 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
 from ..config import ModelConfig, ParallelConfig
 from ..models.moe import moe_apply, moe_apply_ep_a2a, moe_apply_ep_replicated
-from .sharding import mesh_spec
+from .sharding import mesh_spec, shard_map
 
 EP_AXIS = "model"
 
@@ -44,20 +43,27 @@ def _moe_param_specs(mp) -> Any:
 
 
 def make_moe_ep_fn(mesh: Mesh, pcfg: ParallelConfig) -> Callable:
-    """Returns ctx.moe_ep_fn(h, mp, cfg, ctx) -> (y, aux)."""
+    """Returns ctx.moe_ep_fn(h, mp, cfg, ctx) -> (y, aux, topk).
+
+    ``topk`` is the (b, s, k) router decision — first-class trace output
+    matching the single-shard path, so the serve engine and offload
+    metering see identical routing regardless of the execution path.
+    """
     all_axes = tuple(mesh.axis_names)
 
     def moe_ep_fn(h, mp, cfg: ModelConfig, ctx):
         mcfg = cfg.moe
         ep = mesh.shape.get(EP_AXIS, 1)
         quantized = ctx.quantized and "stacks" in mp
+        impl = getattr(ctx, "kernel_impl", None)
         mp_local = {k: v for k, v in mp.items() if k != "shared"}
         if mcfg.num_experts % ep or ep == 1:
             b, s, d = h.shape
-            y2, aux = moe_apply(h.reshape(-1, d), mp_local, mcfg, act=cfg.act,
-                                quantized=quantized,
-                                exact_capacity=ctx.exact_capacity)
-            return y2.reshape(b, s, d), aux
+            y2, aux, info = moe_apply(h.reshape(-1, d), mp_local, mcfg,
+                                      act=cfg.act, quantized=quantized,
+                                      exact_capacity=ctx.exact_capacity,
+                                      impl=impl)
+            return y2.reshape(b, s, d), aux, info.topk_idx.reshape(b, s, -1)
 
         replicated = ctx.ep_mode == "replicated"
         # a2a path: shard the seq dim over the EP axis inside the region
@@ -66,25 +72,30 @@ def make_moe_ep_fn(mesh: Mesh, pcfg: ParallelConfig) -> Callable:
         seq_logical = "moe_seq" if (not replicated
                                     and h.shape[1] % ep == 0) else "seq"
         hspec = mesh_spec(mesh, ("batch", seq_logical, None), h.shape, pcfg)
+        tspec = mesh_spec(mesh, ("batch", seq_logical, None),
+                          (h.shape[0], h.shape[1], mcfg.top_k), pcfg)
         pspecs = _moe_param_specs(mp_local)
         inner = (moe_apply_ep_replicated if replicated else moe_apply_ep_a2a)
 
         def body(h_l, mp_l):
             b_l, s_l, d = h_l.shape
-            y2, aux = inner(h_l.reshape(-1, d), mp_l, mcfg, act=cfg.act,
-                            quantized=quantized, axis=EP_AXIS)
+            y2, aux, info = inner(h_l.reshape(-1, d), mp_l, mcfg, act=cfg.act,
+                                  quantized=quantized, axis=EP_AXIS,
+                                  impl=impl)
             # replicate aux scalars across the whole mesh (pmean of values
             # already equal along an axis is a no-op)
             aux = jax.tree.map(lambda v: jax.lax.pmean(v, all_axes), aux)
-            return y2.reshape(b_l, s_l, d), aux
+            topk = info.topk_idx.reshape(b_l, s_l, -1)
+            return y2.reshape(b_l, s_l, d), aux, topk
 
-        y, aux = shard_map(
+        y, aux, topk = shard_map(
             body, mesh=mesh,
             in_specs=(hspec, pspecs),
             out_specs=(hspec, jax.tree.map(lambda _: P(), {"load_balance": 0,
-                                                           "router_z": 0})),
+                                                           "router_z": 0}),
+                       tspec),
             check_vma=False,
         )(h, mp_local)
-        return y, aux
+        return y, aux, topk
 
     return moe_ep_fn

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import PallasCompilerParams
+
 NEG = -2.0 ** 30
 
 
@@ -114,7 +116,7 @@ def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=PallasCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="flash_decode" + ("_kv8" if use_scales else ""),

@@ -30,14 +30,30 @@ _ENV = "REPRO_KERNEL_IMPL"
 
 def default_impl() -> str:
     env = os.environ.get(_ENV)
-    if env:
+    if env and env != "auto":           # 'auto' = platform-based selection
         return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def _pick(impl: Optional[str]) -> str:
+IMPLS = ("pallas", "pallas_interpret", "ref")
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """Resolve an ``impl`` request ('auto'/None, 'pallas', 'pallas_interpret',
+    'ref') to the concrete implementation that will run, honouring the
+    ``REPRO_KERNEL_IMPL`` env override.  This is the single dispatch policy
+    shared by the kernel wrappers below and the model-level ExpertBackend."""
     impl = impl or "auto"
-    return default_impl() if impl == "auto" else impl
+    resolved = default_impl() if impl == "auto" else impl
+    if resolved not in IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {resolved!r} (from "
+            f"{'$' + _ENV if impl == 'auto' else 'impl argument'}); "
+            f"expected one of {('auto',) + IMPLS}")
+    return resolved
+
+
+_pick = resolve_impl
 
 
 def _pad_m(x: jax.Array, bm: int):

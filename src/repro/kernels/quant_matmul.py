@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import PallasCompilerParams
+
 from ..core.quantize import PACK_BLOCK, PLANES
 
 
@@ -113,7 +115,7 @@ def _pallas_qmm(x, planes, scale, zero, xu, v, *, bits, group_size,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=PallasCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name=f"quant_matmul_b{bits}" + ("_lowrank" if fuse else ""),

@@ -66,6 +66,16 @@ def _lower_cell(cfg, shape, mesh, pcfg, use_q, scan_unroll=False):
     return compiled, abstract
 
 
+
+def _cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on new jax, a per-computation
+    list of dicts on 0.4.x — normalize to one dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def cost_pass(cfg, shape, mesh, pcfg, use_q):
     """XLA's cost_analysis counts loop bodies ONCE, so scanned stacks
     undercount FLOPs/bytes by the trip count.  This pass lowers the model
@@ -80,7 +90,7 @@ def cost_pass(cfg, shape, mesh, pcfg, use_q):
     if cfg.num_layers <= l2:  # shallow model: single exact unrolled pass
         compiled, _ = _lower_cell(cfg, shape, mesh, pcfg, use_q,
                                   scan_unroll=True)
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_analysis(compiled)
         wire = collective_wire_bytes(compiled.as_text(), 16).get("total", 0.0)
         return {"flops": float(cost.get("flops", 0.0)),
                 "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -90,7 +100,7 @@ def cost_pass(cfg, shape, mesh, pcfg, use_q):
         cfg_l = dc.replace(cfg, num_layers=L)
         compiled, _ = _lower_cell(cfg_l, shape, mesh, pcfg, use_q,
                                   scan_unroll=True)
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_analysis(compiled)
         wire = collective_wire_bytes(compiled.as_text(), 16).get("total", 0.0)
         vals.append((float(cost.get("flops", 0.0)),
                      float(cost.get("bytes accessed", 0.0)), wire))
@@ -178,7 +188,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
         cost = cost_pass(cfg, shape, mesh, pcfg, use_q)
         cost_src = cost["method"]
     else:
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         cost = {"flops": float(ca.get("flops", 0.0)),
                 "bytes": float(ca.get("bytes accessed", 0.0)),
                 "wire": collective_wire_bytes(hlo, 16).get("total", 0.0)}

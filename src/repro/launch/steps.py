@@ -142,7 +142,9 @@ def make_context(cfg: ModelConfig, mode: str, *, quantized: bool = False,
                  pcfg: Optional[ParallelConfig] = None,
                  remat: bool = False, exact_capacity: bool = False,
                  scan_unroll: bool = False,
-                 remat_policy: str = "full") -> ExecContext:
+                 remat_policy: str = "full",
+                 kernel_impl: Optional[str] = None,
+                 collect_trace: bool = False) -> ExecContext:
     pcfg = pcfg or ParallelConfig()
     ep_mode = "none"
     moe_fn = None
@@ -161,7 +163,9 @@ def make_context(cfg: ModelConfig, mode: str, *, quantized: bool = False,
                        scan_unroll=scan_unroll,
                        remat_policy=remat_policy,
                        attn_heads_sharded=heads_ok,
-                       attn_seq_sharded=seq_ok)
+                       attn_seq_sharded=seq_ok,
+                       kernel_impl=kernel_impl,
+                       collect_trace=collect_trace)
 
 
 # ---------------------------------------------------------------------------

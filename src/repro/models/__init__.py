@@ -1,4 +1,6 @@
 """Model zoo: composable blocks + LM wrapper for all assigned families."""
+from .expert_backend import (DenseBackend, ExpertBackend, PallasQuantBackend,
+                             RefQuantBackend, select_backend)
 from .model import (LMOutput, abstract_caches, abstract_params, decode_step,
                     forward, input_specs, lm_loss)
 from .transformer import (ExecContext, derive_plan, init_caches, init_params)

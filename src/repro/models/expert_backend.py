@@ -1,0 +1,124 @@
+"""Unified expert-execution backend: one place that owns the expert FFN.
+
+All three MoE paths (``moe_apply``, ``moe_apply_ep_a2a``,
+``moe_apply_ep_replicated``) dispatch the (E, C, d) expert-stacked buffers
+through a single :func:`select_backend` decision instead of inlining the
+dense/quantized branch.  Backends:
+
+  ``dense``   reference einsum over full-precision (E, d, f) stacks
+  ``ref``     quantized + router-guided compensation via the batched einsum
+              oracle (``core.restoration.compensated_expert_ffn``)
+  ``pallas``  fused dequant+low-rank Pallas kernel per projection
+              (``kernels.ops.compensated_matmul_stack``); also runs under
+              the Pallas interpreter on CPU (``pallas_interpret``)
+
+Selection follows the kernel dispatch policy in ``kernels.ops``
+(``REPRO_KERNEL_IMPL`` env / ``impl`` argument: auto | pallas |
+pallas_interpret | ref), so the Pallas kernels are reachable from the
+model rather than dead code behind the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pipeline import CompressedExpertStack
+from ..core.restoration import compensated_expert_ffn
+from ..kernels import ops
+from .layers import activation
+
+
+def expert_ffn_dense(xe: jax.Array, w1, w3, w2, act: str) -> jax.Array:
+    """xe: (E, C, d); w1/w3: (E, d, f); w2: (E, f, d)."""
+    f = activation(act)
+    h = jnp.einsum("ecd,edf->ecf", xe, w1)
+    h = f(h) * jnp.einsum("ecd,edf->ecf", xe, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+class ExpertBackend:
+    """Executes the expert FFN over dispatched (E, C, d) buffers.
+
+    ``me`` is the (E, C) 0/1 router-guided compensation mask (ignored by
+    the dense backend).
+    """
+
+    name = "base"
+
+    def __call__(self, xe: jax.Array, params: Dict, me: jax.Array,
+                 act: str) -> jax.Array:
+        raise NotImplementedError
+
+
+class DenseBackend(ExpertBackend):
+    """Full-precision einsum experts (training / uncompressed serving)."""
+
+    name = "dense"
+
+    def __call__(self, xe, params, me, act):
+        return expert_ffn_dense(xe, params["w1"], params["w3"], params["w2"],
+                                act)
+
+
+class RefQuantBackend(ExpertBackend):
+    """Quantized experts with masked compensation — batched einsum oracle."""
+
+    name = "ref"
+
+    def __call__(self, xe, params, me, act):
+        stacks = params["stacks"]
+        return compensated_expert_ffn(
+            xe, stacks["w1"], stacks.get("w3"), stacks["w2"], me,
+            act=activation(act), dtype=xe.dtype)
+
+
+class PallasQuantBackend(ExpertBackend):
+    """Fused dequant + router-guided low-rank epilogue per projection.
+
+    ``impl`` is the *resolved* kernel implementation ('pallas' or
+    'pallas_interpret'); each projection runs
+    ``kernels.ops.compensated_matmul_stack`` so no dequantized weight is
+    ever materialized.
+    """
+
+    name = "pallas"
+
+    def __init__(self, impl: str = "pallas"):
+        self.impl = impl
+
+    def __call__(self, xe, params, me, act):
+        stacks: Dict[str, CompressedExpertStack] = params["stacks"]
+        f = activation(act)
+        h1 = ops.compensated_matmul_stack(xe, stacks["w1"], me,
+                                          impl=self.impl,
+                                          out_dtype=jnp.float32)
+        if "w3" in stacks:
+            h3 = ops.compensated_matmul_stack(xe, stacks["w3"], me,
+                                              impl=self.impl,
+                                              out_dtype=jnp.float32)
+            h = f(h1) * h3
+        else:
+            h = f(h1)
+        ye = ops.compensated_matmul_stack(h.astype(xe.dtype), stacks["w2"],
+                                          me, impl=self.impl,
+                                          out_dtype=jnp.float32)
+        return ye.astype(xe.dtype)
+
+
+def select_backend(params: Dict, quantized: bool,
+                   impl: Optional[str] = None) -> ExpertBackend:
+    """Pick the expert backend for one MoE layer invocation.
+
+    Dense weights (or ``quantized=False``) always run the einsum path;
+    compressed stacks dispatch on the resolved kernel impl policy
+    (``REPRO_KERNEL_IMPL`` / ``impl``): 'ref' uses the batched einsum
+    oracle, 'pallas'/'pallas_interpret' the fused kernel.
+    """
+    if not quantized or "stacks" not in params:
+        return DenseBackend()
+    resolved = ops.resolve_impl(impl)
+    if resolved == "ref":
+        return RefQuantBackend()
+    return PallasQuantBackend(resolved)

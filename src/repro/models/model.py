@@ -19,6 +19,8 @@ class LMOutput(NamedTuple):
     logits: jax.Array
     aux: Dict[str, jax.Array]
     caches: Optional[Dict]
+    # (moe_layers, T, k) router top-k ids when ctx.collect_trace (else None)
+    trace: Optional[jax.Array] = None
 
 
 def embed_tokens(params, tokens_or_embeds, cfg: ModelConfig,
@@ -56,13 +58,14 @@ def forward(params, tokens, cfg: ModelConfig, ctx: ExecContext, *,
     enc_out = None
     if cfg.encoder is not None:
         enc_out = apply_encoder(params, enc_embeds, cfg, ctx)
-    x, aux, new_caches = apply_stack(params, x, cfg, ctx, positions,
-                                     caches=caches, mrope_pos=mrope_pos,
-                                     enc_out=enc_out)
+    x, aux, new_caches, trace = apply_stack(params, x, cfg, ctx, positions,
+                                            caches=caches,
+                                            mrope_pos=mrope_pos,
+                                            enc_out=enc_out)
     from .layers import rms_norm
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(params, x, cfg)
-    return LMOutput(logits, aux, new_caches)
+    return LMOutput(logits, aux, new_caches, trace)
 
 
 def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
@@ -71,12 +74,13 @@ def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
     b = tokens.shape[0]
     positions = caches["pos"][:, None]        # (B, 1) absolute position
     x = embed_tokens(params, tokens, cfg, positions)
-    x, aux, new_caches = apply_stack(params, x, cfg, ctx, positions,
-                                     caches=caches, mrope_pos=mrope_pos)
+    x, aux, new_caches, trace = apply_stack(params, x, cfg, ctx, positions,
+                                            caches=caches,
+                                            mrope_pos=mrope_pos)
     from .layers import rms_norm
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(params, x, cfg)
-    return LMOutput(logits, aux, new_caches)
+    return LMOutput(logits, aux, new_caches, trace)
 
 
 def _xent_terms_plain(params, x, targets, cfg: ModelConfig):
@@ -162,9 +166,9 @@ def lm_loss(params, batch, cfg: ModelConfig, ctx: ExecContext,
         enc_out = apply_encoder(params, batch["enc_embeds"], cfg, ctx)
     from .transformer import apply_stack
     from .layers import rms_norm
-    x, aux, _ = apply_stack(params, x, cfg, ctx, positions,
-                            mrope_pos=batch.get("mrope_pos"),
-                            enc_out=enc_out)
+    x, aux, _, _ = apply_stack(params, x, cfg, ctx, positions,
+                               mrope_pos=batch.get("mrope_pos"),
+                               enc_out=enc_out)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
 
     x = x[:, :-1]

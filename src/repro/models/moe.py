@@ -12,8 +12,12 @@ Three execution paths share one routing/dispatch core:
 
 The paper's technique rides the same dispatch: when expert weights are
 ``CompressedExpertStack``s, each (expert, slot) carries a 0/1 top-n mask
-and the expert FFN applies the low-rank compensator only where masked
-(core.restoration / kernels.ops).
+and the expert FFN applies the low-rank compensator only where masked.
+Execution of the expert FFN itself (dense einsum / reference quantized /
+fused Pallas kernel) is owned by ``models.expert_backend`` and selected
+via the ``kernels.ops`` impl policy.  Every path also returns its
+``RoutingInfo`` so callers (serve engine, offload metering) get the
+router trace as a first-class output instead of hooking ``route``.
 """
 from __future__ import annotations
 
@@ -24,10 +28,10 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
 from ..config import MoEConfig
-from ..core.pipeline import CompressedExpertStack
-from ..core.restoration import compensated_expert_ffn
-from .layers import activation
+from .expert_backend import (ExpertBackend, expert_ffn_dense,
+                             select_backend)
 
 
 class RoutingInfo(NamedTuple):
@@ -108,26 +112,6 @@ def combine_tokens(ye: jax.Array, d: Dispatch, num_tokens: int) -> jax.Array:
     return y.at[d.t_idx].add(ya)
 
 
-# ---------------------------------------------------------------------------
-# expert FFN over stacked buffers
-# ---------------------------------------------------------------------------
-
-def expert_ffn_dense(xe: jax.Array, w1, w3, w2, act: str) -> jax.Array:
-    """xe: (E, C, d); w1/w3: (E, d, f); w2: (E, f, d)."""
-    f = activation(act)
-    h = jnp.einsum("ecd,edf->ecf", xe, w1)
-    h = f(h) * jnp.einsum("ecd,edf->ecf", xe, w3)
-    return jnp.einsum("ecf,efd->ecd", h, w2)
-
-
-def expert_ffn_quant(xe: jax.Array, stacks: Dict[str, CompressedExpertStack],
-                     me: jax.Array, act: str) -> jax.Array:
-    """Quantized experts with router-guided masked compensation (§3.2)."""
-    return compensated_expert_ffn(
-        xe, stacks["w1"], stacks.get("w3"), stacks["w2"], me,
-        act=activation(act), dtype=xe.dtype)
-
-
 def _capacity(tokens: int, mcfg: MoEConfig, exact: bool) -> int:
     if exact:
         return tokens
@@ -142,21 +126,21 @@ def _capacity(tokens: int, mcfg: MoEConfig, exact: bool) -> int:
 
 def moe_apply(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
               act: str = "silu", quantized: bool = False,
-              exact_capacity: bool = False
-              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """x2: (T, d) -> (T, d), aux losses.  Runs on one shard."""
+              exact_capacity: bool = False,
+              impl: Optional[str] = None,
+              backend: Optional[ExpertBackend] = None
+              ) -> Tuple[jax.Array, Dict[str, jax.Array], RoutingInfo]:
+    """x2: (T, d) -> (T, d), aux losses, routing info.  Runs on one shard."""
     t = x2.shape[0]
+    backend = backend or select_backend(params, quantized, impl)
     info = route(x2, params["router"], mcfg)
     cap = _capacity(t, mcfg, exact_capacity)
     disp = make_dispatch(info, mcfg.num_experts, cap,
                          mcfg.quant.top_n_restore if quantized else 0)
     xe, me = dispatch_tokens(x2, disp, mcfg.num_experts)
-    if quantized:
-        ye = expert_ffn_quant(xe, params["stacks"], me, act)
-    else:
-        ye = expert_ffn_dense(xe, params["w1"], params["w3"], params["w2"], act)
+    ye = backend(xe, params, me, act)
     y = combine_tokens(ye, disp, t)
-    return y.astype(x2.dtype), aux_losses(info, mcfg)
+    return y.astype(x2.dtype), aux_losses(info, mcfg), info
 
 
 # ---------------------------------------------------------------------------
@@ -165,15 +149,17 @@ def moe_apply(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
 
 def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
                      act: str = "silu", quantized: bool = False,
-                     axis: str = "model"
-                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                     axis: str = "model", impl: Optional[str] = None,
+                     backend: Optional[ExpertBackend] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array], RoutingInfo]:
     """Tokens local, experts sharded on ``axis``: dispatch via all_to_all.
 
     params['w*'] / stack leaves carry the LOCAL expert slice (E_local, ...).
     """
     t = x2.shape[0]
-    ep = jax.lax.axis_size(axis)
+    ep = axis_size(axis)
     e_total = mcfg.num_experts
+    backend = backend or select_backend(params, quantized, impl)
     info = route(x2, params["router"], mcfg)
     cap = _capacity(t, mcfg, False)
     disp = make_dispatch(info, e_total, cap,
@@ -182,28 +168,28 @@ def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
     # -> (E_local, C * ep, d): every shard receives its experts' slots
     xe = jax.lax.all_to_all(xe, axis, split_axis=0, concat_axis=1, tiled=True)
     me = jax.lax.all_to_all(me, axis, split_axis=0, concat_axis=1, tiled=True)
-    if quantized:
-        ye = expert_ffn_quant(xe, params["stacks"], me, act)
-    else:
-        ye = expert_ffn_dense(xe, params["w1"], params["w3"], params["w2"], act)
+    ye = backend(xe, params, me, act)
     ye = jax.lax.all_to_all(ye, axis, split_axis=1, concat_axis=0, tiled=True)
     y = combine_tokens(ye, disp, t)
     aux = jax.tree.map(lambda v: jax.lax.pmean(v, axis),
                        aux_losses(info, mcfg))
-    return y.astype(x2.dtype), aux
+    return y.astype(x2.dtype), aux, info
 
 
 def moe_apply_ep_replicated(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
                             act: str = "silu", quantized: bool = False,
-                            axis: str = "model"
-                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                            axis: str = "model", impl: Optional[str] = None,
+                            backend: Optional[ExpertBackend] = None
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array],
+                                       RoutingInfo]:
     """Decode path: tokens replicated over ``axis``; each shard runs its
     resident experts at exact capacity and a psum combines partials."""
     t = x2.shape[0]
-    ep = jax.lax.axis_size(axis)
+    ep = axis_size(axis)
     m = jax.lax.axis_index(axis)
     e_total = mcfg.num_experts
     e_local = e_total // ep
+    backend = backend or select_backend(params, quantized, impl)
     info = route(x2, params["router"], mcfg)
     # map global expert ids into the local slice; foreign ids -> OOB (drop)
     topi_local = info.topk_idx - m * e_local
@@ -215,11 +201,8 @@ def moe_apply_ep_replicated(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
                          mcfg.quant.top_n_restore if quantized else 0)
     xe, me = dispatch_tokens(x2, disp, e_local + 1)
     xe, me = xe[:e_local], me[:e_local]
-    if quantized:
-        ye = expert_ffn_quant(xe, params["stacks"], me, act)
-    else:
-        ye = expert_ffn_dense(xe, params["w1"], params["w3"], params["w2"], act)
+    ye = backend(xe, params, me, act)
     ye = jnp.concatenate([ye, jnp.zeros_like(ye[:1])], axis=0)
     y = combine_tokens(ye, disp, t)
     y = jax.lax.psum(y, axis)
-    return y.astype(x2.dtype), aux_losses(info, mcfg)
+    return y.astype(x2.dtype), aux_losses(info, mcfg), info

@@ -57,6 +57,11 @@ class ExecContext:
     attn_heads_sharded: bool = False
     attn_seq_sharded: bool = False
     remat_policy: str = "full"       # full | dots (save matmul outputs)
+    # expert-backend dispatch: None/'auto' -> REPRO_KERNEL_IMPL policy;
+    # 'ref' | 'pallas' | 'pallas_interpret' force an implementation
+    kernel_impl: Optional[str] = None
+    # return per-MoE-layer top-k routing as a first-class forward output
+    collect_trace: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -498,14 +503,18 @@ def _slstm_block(x, p, cfg: ModelConfig, ctx: ExecContext, cache):
 
 def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
                 positions, cache, mrope_pos=None, enc_out=None):
-    """One transformer layer.  Returns (x, aux, new_cache)."""
+    """One transformer layer.  Returns (x, aux, new_cache, trace).
+
+    ``trace`` is the (T, k) top-k expert ids of this layer's router when
+    ``ctx.collect_trace`` is set and the layer is MoE, else None (static).
+    """
     aux = {}
     if spec.mixer == "mlstm":
         x, nc = _mlstm_block(x, p, cfg, ctx, cache)
-        return x, aux, nc
+        return x, aux, nc, None
     if spec.mixer == "slstm":
         x, nc = _slstm_block(x, p, cfg, ctx, cache)
-        return x, aux, nc
+        return x, aux, nc, None
 
     h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
     if spec.mixer in ("global", "local"):
@@ -526,29 +535,34 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
     x = x + y
 
     if spec.ffn == "none":
-        return x, aux, nc
+        return x, aux, nc, None
+    trace = None
     h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     if spec.ffn == "dense":
         if ctx.quantized and "stacks" in p.get("ffn", {}):
             y = ffn_apply_quantized(h, p["ffn"]["stacks"], cfg.act,
-                                    cfg.gated_ffn)
+                                    cfg.gated_ffn, impl=ctx.kernel_impl)
         else:
             y = ffn_apply(h, p["ffn"], cfg.act, cfg.gated_ffn)
     else:  # moe
         mp = p["moe"]
         if ctx.moe_ep_fn is not None and ctx.ep_mode != "none":
-            y, aux = ctx.moe_ep_fn(h, mp, cfg, ctx)
+            y, aux, topk = ctx.moe_ep_fn(h, mp, cfg, ctx)   # topk: (b, s, k)
         else:
             b, s, d = h.shape
-            y2, aux = moe_apply(h.reshape(-1, d), mp, cfg.moe, act=cfg.act,
-                                quantized=ctx.quantized and "stacks" in mp,
-                                exact_capacity=ctx.exact_capacity)
+            y2, aux, info = moe_apply(
+                h.reshape(-1, d), mp, cfg.moe, act=cfg.act,
+                quantized=ctx.quantized and "stacks" in mp,
+                exact_capacity=ctx.exact_capacity, impl=ctx.kernel_impl)
             y = y2.reshape(b, s, d)
+            topk = info.topk_idx.reshape(b, s, -1)
+        if ctx.collect_trace:
+            trace = topk.reshape(-1, topk.shape[-1]).astype(jnp.int32)
         if "shared" in mp:
             y = y + ffn_apply(h, mp["shared"], cfg.act, True)
     if cfg.post_attn_norm:
         y = rms_norm(y, p["post_ffn_norm"], cfg.norm_eps)
-    return x + y, aux, nc
+    return x + y, aux, nc, trace
 
 
 # ---------------------------------------------------------------------------
@@ -578,10 +592,16 @@ def _merge_aux(a, b):
 
 def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
                 caches=None, mrope_pos=None, enc_out=None):
-    """Run all segments.  Returns (x, aux, new_caches)."""
+    """Run all segments.  Returns (x, aux, new_caches, trace).
+
+    ``trace`` is the stacked (moe_layers, T, k) router top-k ids in global
+    layer order when ``ctx.collect_trace`` is set (None otherwise) — the
+    first-class replacement for hooking ``moe.route``.
+    """
     plan = derive_plan(cfg)
     aux = _zero_aux()
     new_segs = []
+    traces: List[jax.Array] = []
     use_cache = caches is not None and ctx.mode in ("prefill", "step")
 
     for si, seg in enumerate(plan):
@@ -593,47 +613,70 @@ def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
             dtype0 = x.dtype
             ga = _zero_aux()
             ncs = []
+            trs = []
             for pi, spec in enumerate(seg.layers):
-                x, a, nc = apply_layer(x, gp[pi], spec, cfg, ctx, positions,
-                                       gc[pi] if use_cache else None,
-                                       mrope_pos, enc_out)
+                x, a, nc, tr = apply_layer(x, gp[pi], spec, cfg, ctx,
+                                           positions,
+                                           gc[pi] if use_cache else None,
+                                           mrope_pos, enc_out)
                 x = x.astype(dtype0)  # keep scan carry dtype stable
                 ga = _merge_aux(ga, a)
                 ncs.append(nc if use_cache else 0)
-            return x, ga, tuple(ncs)
+                if tr is not None:
+                    trs.append(tr)
+            return x, ga, tuple(ncs), tuple(trs)
 
         if seg.repeat == 1:
-            x, ga, nc = group(x, seg_params, seg_caches)
+            x, ga, nc, trs = group(x, seg_params, seg_caches)
             aux = _merge_aux(aux, ga)
             new_segs.append(nc)
+            traces.extend(trs)
         elif use_cache:
             def body_c(carry, xs):
                 gp, gc = xs
                 fn = _remat(group, ctx)
-                xo, ga, nc = fn(carry, gp, gc)
-                return xo, (ga, nc)
+                xo, ga, nc, trs = fn(carry, gp, gc)
+                return xo, (ga, nc, trs)
 
-            x, (gas, ncs) = jax.lax.scan(body_c, x, (seg_params, seg_caches),
-                                         unroll=ctx.scan_unroll)
+            x, (gas, ncs, trs) = jax.lax.scan(body_c, x,
+                                              (seg_params, seg_caches),
+                                              unroll=ctx.scan_unroll)
             aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
             new_segs.append(ncs)
+            traces.extend(_unstack_scan_traces(trs))
         else:
             dummy = tuple(None for _ in seg.layers)
 
             def body(carry, gp):
                 fn = _remat(group, ctx)
-                xo, ga, _ = fn(carry, gp, dummy)
-                return xo, ga
+                xo, ga, _, trs = fn(carry, gp, dummy)
+                return xo, (ga, trs)
 
-            x, gas = jax.lax.scan(body, x, seg_params,
-                                  unroll=ctx.scan_unroll)
+            x, (gas, trs) = jax.lax.scan(body, x, seg_params,
+                                         unroll=ctx.scan_unroll)
             aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
             new_segs.append(0)
+            traces.extend(_unstack_scan_traces(trs))
 
     new_caches = None
     if use_cache:
         new_caches = {"segments": tuple(new_segs), "pos": positions[:, -1] + 1}
-    return x, aux, new_caches
+    trace = jnp.stack(traces, axis=0) if traces else None
+    return x, aux, new_caches, trace
+
+
+def _unstack_scan_traces(trs) -> List[jax.Array]:
+    """Scan-stacked per-position traces -> flat global layer order.
+
+    ``trs`` is a tuple (one per MoE position in the segment pattern) of
+    (repeat, T, k) arrays; global order interleaves positions within each
+    repeat: [rep0/pos0, rep0/pos1, ..., rep1/pos0, ...].
+    """
+    if not trs:
+        return []
+    stacked = jnp.stack(trs, axis=1)          # (repeat, npos, T, k)
+    r, p, t, k = stacked.shape
+    return list(stacked.reshape(r * p, t, k))
 
 
 def apply_encoder(params, embeds, cfg: ModelConfig, ctx: ExecContext):

@@ -4,4 +4,5 @@ from .bandwidth import GPU_NDP, GPU_ONLY, TPU_V5E_OFFLOAD, HardwareProfile
 from .cache import *  # noqa
 from .prefetch import LayerAheadPrefetcher, PrefetchStats
 from .simulator import LayerSpecSim, SimResult, make_router_trace, simulate_decode
-from .store import ExpertCache, ExpertStore, FetchStats
+from .store import (ExpertCache, ExpertStore, FetchStats,
+                    meter_decode_trace)

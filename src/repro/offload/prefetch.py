@@ -36,10 +36,14 @@ class LayerAheadPrefetcher:
         return self.prev_token[layer]
 
     def observe(self, layer: int, experts: np.ndarray):
+        """Score the pending prediction against this step's experts and
+        remember them for the next step.  ``experts`` may be any shape
+        (batched decode passes the whole step's ids); it is flattened."""
+        experts = np.unique(np.asarray(experts).reshape(-1))
         pred = self.prev_token[layer]
         if pred is not None:
             hit = len(np.intersect1d(pred, experts))
             self.stats.issued += len(pred)
             self.stats.useful += hit
             self.stats.wasted += len(pred) - hit
-        self.prev_token[layer] = np.asarray(experts).copy()
+        self.prev_token[layer] = experts.copy()

@@ -98,3 +98,53 @@ class ExpertStore:
     @property
     def total_bytes(self) -> int:
         return self.cache.stats.bytes_moved + self.comp_bytes_moved
+
+
+def meter_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
+                       policy: str = "ours", top_n: int = 1,
+                       prefetcher=None) -> Dict:
+    """Replay a live decode trace through per-layer stores.
+
+    ``trace``: (steps, moe_layers, B, k) routed expert ids, exactly the
+    ``GenerationResult.router_trace`` the serve engine's jitted decode
+    loop emits — so the wire bytes / hit rates below are measured from
+    real serving decisions, not the synthetic simulator.
+
+    The stores keep their cumulative lifetime stats (and cache state warm
+    across calls); the returned report covers THIS replay only, so
+    repeated ``generate`` calls don't double-count earlier traffic.
+
+    Returns a report dict: bytes/token, cache hit rate, prefetch accuracy.
+    """
+    trace = np.asarray(trace)
+    steps, layers, b, _ = trace.shape
+    if layers != len(stores):
+        raise ValueError(f"trace has {layers} MoE layers but "
+                         f"{len(stores)} stores attached")
+    bytes0 = sum(s.total_bytes for s in stores)
+    hits0 = sum(s.cache.stats.hits for s in stores)
+    misses0 = sum(s.cache.stats.misses for s in stores)
+    pf0 = (prefetcher.stats.issued, prefetcher.stats.useful) \
+        if prefetcher is not None else (0, 0)
+    for t in range(steps):
+        for l in range(layers):
+            experts = trace[t, l]                     # (B, k)
+            if prefetcher is not None:
+                prefetcher.observe(l, experts)  # observe flattens + uniques
+            for row in experts:
+                stores[l].access_token(row, top_n=top_n, policy=policy)
+    total = sum(s.total_bytes for s in stores) - bytes0
+    hits = sum(s.cache.stats.hits for s in stores) - hits0
+    misses = sum(s.cache.stats.misses for s in stores) - misses0
+    issued = (prefetcher.stats.issued - pf0[0]) if prefetcher else 0
+    useful = (prefetcher.stats.useful - pf0[1]) if prefetcher else 0
+    tokens = steps * b
+    return {
+        "policy": policy,
+        "tokens": tokens,
+        "total_bytes": int(total),
+        "bytes_per_token": total / max(tokens, 1),
+        "hit_rate": hits / max(hits + misses, 1),
+        "prefetch_accuracy": (useful / max(issued, 1)
+                              if prefetcher is not None else None),
+    }

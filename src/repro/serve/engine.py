@@ -1,13 +1,21 @@
-"""Batched serving engine: chunked prefill + decode loop + sampling.
+"""Batched serving engine: chunked prefill + jitted streaming decode loop.
 
-Runs the same ``make_prefill_step``/``make_serve_step`` functions the
-dry-run lowers, so what we benchmark is what we'd deploy.  Supports the
-paper's quantized+compensated serving path and (optionally) a metered
-offload emulation that replays the router trace into an ExpertStore.
+The decode loop is a single ``lax.scan`` over steps compiled once per
+``max_new``: sampling happens on-device (no per-token host round-trip),
+cache buffers are donated into the loop, and the per-step router trace is
+a first-class output of the forward pass (``ExecContext.collect_trace``)
+— no ``disable_jit`` + ``moe.route`` monkey-patching.
+
+When expert stores are attached (``attach_offload``), every generated
+step's routing decisions are replayed into the per-layer metered
+``ExpertStore`` + ``LayerAheadPrefetcher``, so wire bytes / cache hits /
+prefetch accuracy come from live serving rather than only the synthetic
+simulator.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -28,12 +36,23 @@ class GenerationResult:
     prefill_s: float
     decode_s: float
     steps: int
-    router_trace: Optional[np.ndarray] = None   # (steps, layers, k)
+    # (steps, moe_layers, B, k) decode-time router decisions (None when the
+    # model has no MoE layers)
+    router_trace: Optional[np.ndarray] = None
+    # live offload metering (attach_offload): bytes/token, hit rate, ...
+    offload_report: Optional[Dict[str, float]] = None
 
     @property
     def decode_tokens_per_s(self) -> float:
         b = self.tokens.shape[0]
         return b * self.steps / self.decode_s if self.decode_s else 0.0
+
+    def request_trace(self, b: int = 0) -> Optional[np.ndarray]:
+        """(steps, layers, k) routing of one request stream — the shape the
+        offload simulator and fig-7 benchmarks consume."""
+        if self.router_trace is None:
+            return None
+        return self.router_trace[:, :, b, :]
 
 
 def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
@@ -45,16 +64,30 @@ def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = None,
-                 quantized: bool = False, collect_router_trace: bool = False):
+                 quantized: bool = False, collect_router_trace: bool = True,
+                 kernel_impl: Optional[str] = None):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.params = params
         self.quantized = quantized
-        self.collect_router_trace = collect_router_trace
+        self.kernel_impl = kernel_impl
+        # trace collection is free inside the scan (a few int32s per step);
+        # it feeds GenerationResult.router_trace and the offload meter.
+        # Gate on the PLAN's MoE layers (cfg.moe alone isn't enough: e.g.
+        # first_layer_dense or recurrent-only patterns yield no MoE FFNs)
+        from ..models.transformer import layer_specs
+        has_moe = any(s.ffn == "moe" for s in layer_specs(cfg))
+        self.collect_router_trace = collect_router_trace and has_moe
+        self._stores = None            # per-MoE-layer ExpertStore
+        self._prefetcher = None
+        self._offload_policy = "ours"
         self._prefill_ctx = make_context(cfg, "prefill", quantized=quantized,
-                                         exact_capacity=True)
-        self._step_ctx = make_context(cfg, "step", quantized=quantized,
-                                      exact_capacity=True)
+                                         exact_capacity=True,
+                                         kernel_impl=kernel_impl)
+        self._step_ctx = make_context(
+            cfg, "step", quantized=quantized, exact_capacity=True,
+            kernel_impl=kernel_impl,
+            collect_trace=self.collect_router_trace)
 
         @jax.jit
         def prefill(params, caches, tokens):
@@ -62,17 +95,67 @@ class ServeEngine:
                              caches=caches)
             return out.logits[:, -1], out.caches
 
-        @jax.jit
-        def step(params, caches, tokens):
-            out = lm.decode_step(params, tokens, caches, cfg, self._step_ctx)
-            return out.logits[:, 0], out.caches
+        @functools.partial(jax.jit,
+                           static_argnames=("max_new", "temperature"),
+                           donate_argnums=(1,))
+        def decode_loop(params, caches, logits0, key, max_new, temperature):
+            """scan over decode steps: sample on device, step, stack trace.
+
+            ``temperature`` is static (it selects the greedy/categorical
+            branch in ``sample``) and read per call, so mutating
+            ``scfg.temperature`` between generates takes effect."""
+
+            def body(carry, _):
+                logits, caches, key = carry
+                key, k2 = jax.random.split(key)
+                nxt = sample(logits, k2, temperature)
+                out = lm.decode_step(params, nxt[:, None], caches, cfg,
+                                     self._step_ctx)
+                lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+                lp_tok = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
+                ys = (nxt, lp_tok)
+                if self.collect_router_trace:
+                    ys = ys + (out.trace,)        # (moe_layers, B, k)
+                return (out.logits[:, 0], out.caches, key), ys
+
+            (logits, caches, _), ys = jax.lax.scan(
+                body, (logits0, caches, key), xs=None, length=max_new)
+            return logits, caches, ys
 
         self._prefill = prefill
-        self._step = step
+        self._decode_loop = decode_loop
 
+    # -- offload wiring ----------------------------------------------------
+    def attach_offload(self, stacks_by_layer: List[Dict],
+                       policy: str = "ours",
+                       cache_capacity: Optional[int] = None,
+                       prefetch: bool = True):
+        """Meter every generated token's expert fetches through per-layer
+        host-side ``ExpertStore``s (LRU device cache + compensator bytes)."""
+        from ..offload.store import ExpertStore
+        from ..offload.prefetch import LayerAheadPrefetcher
+        cap = (self.scfg.cache_experts if cache_capacity is None
+               else cache_capacity)
+        self._stores = [ExpertStore(stacks, cache_capacity=cap)
+                        for stacks in stacks_by_layer]
+        self._offload_policy = policy
+        if prefetch:
+            self._prefetcher = LayerAheadPrefetcher(
+                len(stacks_by_layer), self.cfg.moe.top_k)
+        return self
+
+    def _meter_offload(self, trace: np.ndarray) -> Dict[str, float]:
+        """Feed decode routing (steps, layers, B, k) into the stores."""
+        from ..offload.store import meter_decode_trace
+        return meter_decode_trace(
+            self._stores, trace, policy=self._offload_policy,
+            top_n=self.cfg.moe.quant.top_n_restore,
+            prefetcher=self._prefetcher)
+
+    # -- generation --------------------------------------------------------
     def generate(self, prompt_tokens: np.ndarray, max_new: int = 32,
                  seed: int = 0) -> GenerationResult:
-        cfg, scfg = self.cfg, self.scfg
+        cfg = self.cfg
         b, plen = prompt_tokens.shape
         caches = init_caches(cfg, b, max_len=plen + max_new + 8,
                              dtype=jnp.float32)
@@ -82,23 +165,27 @@ class ServeEngine:
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
-        key = jax.random.key(seed)
-        outs: List[np.ndarray] = []
         t1 = time.time()
-        for i in range(max_new):
-            key, k2 = jax.random.split(key)
-            nxt = sample(logits, k2, scfg.temperature)
-            outs.append(np.asarray(nxt))
-            logits, caches = self._step(self.params, caches, nxt[:, None])
+        logits, caches, ys = self._decode_loop(
+            self.params, caches, logits, jax.random.key(seed), max_new,
+            self.scfg.temperature)
         logits.block_until_ready()
         t_decode = time.time() - t1
-        return GenerationResult(np.stack(outs, axis=1), None, t_prefill,
-                                t_decode, max_new)
+
+        toks = np.asarray(ys[0]).T                    # (B, max_new)
+        logprobs = np.asarray(ys[1]).T                # (B, max_new)
+        trace = (np.asarray(ys[2])
+                 if self.collect_router_trace and ys[2] is not None else None)
+        report = (self._meter_offload(trace)
+                  if trace is not None and self._stores else None)
+        return GenerationResult(toks, logprobs, t_prefill, t_decode, max_new,
+                                router_trace=trace, offload_report=report)
 
     def score(self, tokens: np.ndarray) -> float:
         """Mean next-token NLL (perplexity proxy) under the serving path."""
         ctx = make_context(self.cfg, "train", quantized=self.quantized,
-                           exact_capacity=True)
+                           exact_capacity=True,
+                           kernel_impl=self.kernel_impl)
         out = lm.forward(self.params, jnp.asarray(tokens), self.cfg, ctx)
         logits = out.logits[:, :-1].astype(jnp.float32)
         tgt = jnp.asarray(tokens)[:, 1:]
@@ -108,31 +195,18 @@ class ServeEngine:
 
 
 def router_trace(cfg: ModelConfig, params, tokens: np.ndarray,
-                 quantized: bool = False) -> np.ndarray:
-    """Export the per-token routing decisions (tokens, moe_layers, k) for
-    the offload simulator — real traces, not synthetic skew."""
-    from ..models.transformer import derive_plan, apply_layer
-    from ..models.moe import route
-    cfg_local = cfg
+                 quantized: bool = False,
+                 kernel_impl: Optional[str] = None) -> np.ndarray:
+    """Export per-token routing decisions (tokens, moe_layers, k).
+
+    Runs the jitted forward pass with ``collect_trace`` — the trace is a
+    first-class model output, so this works under jit/scan with no
+    ``disable_jit`` or ``moe.route`` hook.
+    """
     ctx = make_context(cfg, "train", quantized=quantized,
-                       exact_capacity=True)
-    # capture router inputs by re-running the stack and hooking MoE layers
-    traces: List[np.ndarray] = []
-
-    import repro.models.moe as moe_mod
-    orig = moe_mod.route
-
-    def hooked(x2, w, mcfg):
-        info = orig(x2, w, mcfg)
-        traces.append(np.asarray(info.topk_idx))
-        return info
-
-    moe_mod.route = hooked
-    try:
-        with jax.disable_jit():   # eager so the hook sees concrete values
-            lm.forward(params, jnp.asarray(tokens), cfg, ctx)
-    finally:
-        moe_mod.route = orig
-    # traces: list over layers of (T, k) -> (T, layers, k)
-    arr = np.stack(traces, axis=1)
-    return arr
+                       exact_capacity=True, collect_trace=True,
+                       kernel_impl=kernel_impl)
+    out = jax.jit(lambda p, t: lm.forward(p, t, cfg, ctx).trace)(
+        params, jnp.asarray(tokens))
+    # (moe_layers, T, k) -> (T, layers, k)
+    return np.asarray(out).transpose(1, 0, 2)

@@ -1,0 +1,113 @@
+"""ExpertBackend dispatch: policy resolution + numerical equivalence of the
+fused Pallas path (interpreter on CPU) against the reference quantized
+path, reached *through the model's MoE layer* — the kernels are live code
+on the serving path, not benchmark-only."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, MoEConfig, QuantConfig
+from repro.core import compress_ffn_weights
+from repro.launch.steps import make_context
+from repro.models import forward, init_params
+from repro.models.expert_backend import (DenseBackend, PallasQuantBackend,
+                                         RefQuantBackend, select_backend)
+from repro.models.moe import moe_apply
+from repro.models.transformer import unstack_params
+
+
+def _quant_params(e=4, d=64, fe=128, seed=0, **qkw):
+    rng = np.random.default_rng(seed)
+    qcfg = QuantConfig(enabled=True, bits=2, rank_budget=8,
+                       top_n_restore=1, hqq_iters=2, **qkw)
+    mcfg = MoEConfig(num_experts=e, top_k=2, d_expert=fe, quant=qcfg)
+    w1 = jnp.asarray(rng.standard_normal((e, d, fe)), jnp.float32) * 0.05
+    w3 = jnp.asarray(rng.standard_normal((e, d, fe)), jnp.float32) * 0.05
+    w2 = jnp.asarray(rng.standard_normal((e, fe, d)), jnp.float32) * 0.05
+    stacks, _ = compress_ffn_weights(w1, w2, w3, qcfg)
+    params = {"router": jnp.asarray(rng.standard_normal((d, e)),
+                                    jnp.float32),
+              "stacks": stacks, "w1": w1, "w3": w3, "w2": w2}
+    return params, mcfg
+
+
+def test_select_backend_policy(monkeypatch):
+    params, _ = _quant_params()
+    assert isinstance(select_backend(params, quantized=False),
+                      DenseBackend)
+    dense_only = {k: v for k, v in params.items() if k != "stacks"}
+    assert isinstance(select_backend(dense_only, quantized=True),
+                      DenseBackend)
+    assert isinstance(select_backend(params, True, "ref"), RefQuantBackend)
+    be = select_backend(params, True, "pallas_interpret")
+    assert isinstance(be, PallasQuantBackend)
+    assert be.impl == "pallas_interpret"
+    # env override drives the 'auto' resolution (kernels.ops policy)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas_interpret")
+    be = select_backend(params, True)          # impl=None -> auto
+    assert isinstance(be, PallasQuantBackend)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+    assert isinstance(select_backend(params, True), RefQuantBackend)
+
+
+def test_moe_apply_pallas_interpret_matches_ref():
+    """Quantized moe_apply must reach kernels.ops dispatch: the fused
+    Pallas kernel (interpreter) and the reference einsum composition give
+    the same compensated output and identical routing."""
+    params, mcfg = _quant_params()
+    x2 = jnp.asarray(np.random.default_rng(1).standard_normal((24, 64)),
+                     jnp.float32)
+    y_ref, _, i_ref = moe_apply(x2, params, mcfg, quantized=True,
+                                exact_capacity=True, impl="ref")
+    y_pl, _, i_pl = moe_apply(x2, params, mcfg, quantized=True,
+                              exact_capacity=True, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(i_ref.topk_idx),
+                                  np.asarray(i_pl.topk_idx))
+    assert float(jnp.max(jnp.abs(y_ref - y_pl))) < 1e-4
+    # and the quantized path actually differs from dense (it dispatched
+    # through the compressed stacks, not the fp weights)
+    y_dense, _, _ = moe_apply(x2, params, mcfg, quantized=False,
+                              exact_capacity=True)
+    assert float(jnp.max(jnp.abs(y_dense - y_ref))) > 1e-4
+
+
+@pytest.mark.slow
+def test_full_forward_kernel_impl_dispatch():
+    """End-to-end: a compressed model's forward under ctx.kernel_impl =
+    'pallas_interpret' matches the 'ref' backend logits."""
+    cfg = ModelConfig(
+        name="tiny-moe", family="moe", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=128,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2,
+                                        rank_budget=16, top_n_restore=1,
+                                        hqq_iters=2)))
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    up = unstack_params(params, cfg)
+    cfg_q = dataclasses.replace(cfg, force_unroll_plan=True)
+    segs = []
+    for seg in up["segments"]:
+        p = dict(seg[0])
+        mp = dict(p["moe"])
+        stacks, _ = compress_ffn_weights(mp["w1"], mp["w2"], mp["w3"],
+                                         cfg.moe.quant)
+        mp["stacks"] = stacks
+        for k in ("w1", "w2", "w3"):
+            mp.pop(k)
+        p["moe"] = mp
+        segs.append((p,))
+    qparams = dict(up)
+    qparams["segments"] = tuple(segs)
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, 128, (2, 8)),
+                         jnp.int32)
+    outs = {}
+    for impl in ("ref", "pallas_interpret"):
+        ctx = make_context(cfg_q, "train", quantized=True,
+                           exact_capacity=True, kernel_impl=impl)
+        outs[impl] = forward(qparams, tokens, cfg_q, ctx).logits
+    err = float(jnp.max(jnp.abs(outs["ref"] - outs["pallas_interpret"])))
+    assert err < 1e-3, err

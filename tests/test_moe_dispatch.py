@@ -1,0 +1,175 @@
+"""Dispatch/combine round-trip invariants + three-path MoE consistency.
+
+In-process: dropped assignments (slot >= capacity) contribute exactly
+zero, and the dispatch ``comp`` mask matches ``topn_mask`` semantics.
+Subprocess (4 host devices): ``moe_apply`` / ``moe_apply_ep_a2a`` /
+``moe_apply_ep_replicated`` produce the same outputs and the same router
+trace, dense and quantized."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoEConfig, QuantConfig
+from repro.core.restoration import topn_mask
+from repro.models.moe import (Dispatch, combine_tokens, dispatch_tokens,
+                              make_dispatch, route)
+
+
+def _info(t=16, d=32, e=8, k=2, seed=0):
+    rng = np.random.default_rng(seed)
+    mcfg = MoEConfig(num_experts=e, top_k=k, d_expert=d)
+    x2 = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, e)), jnp.float32)
+    return x2, route(x2, w, mcfg), mcfg
+
+
+def test_dispatch_combine_roundtrip_identity():
+    """Identity expert + exact capacity: combine(dispatch(x)) == x (the
+    normalized gates sum to 1, nothing is dropped)."""
+    x2, info, mcfg = _info()
+    t = x2.shape[0]
+    disp = make_dispatch(info, mcfg.num_experts, t, top_n=1)
+    xe, _ = dispatch_tokens(x2, disp, mcfg.num_experts)
+    y = combine_tokens(xe, disp, t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dropped_assignments_contribute_zero():
+    """With capacity < demand, every assignment whose slot >= C must add
+    exactly zero to the combined output."""
+    x2, info, mcfg = _info(t=16, e=4)
+    t, k = info.topk_idx.shape
+    cap = 2  # far below demand: 16*2/4 = 8 avg assignments per expert
+    disp = make_dispatch(info, mcfg.num_experts, cap, top_n=1)
+    ye = jnp.ones((mcfg.num_experts, cap, x2.shape[1]), jnp.float32)
+    y = np.asarray(combine_tokens(ye, disp, t))
+    # expected: each token accumulates gate * 1 for its KEPT assignments
+    slot = np.asarray(disp.slot)
+    gates = np.asarray(disp.gates)
+    expect = np.zeros((t,), np.float32)
+    kept = 0
+    for a in range(t * k):
+        if slot[a] < cap:
+            expect[a // k] += gates[a]
+            kept += 1
+    assert 0 < kept < t * k          # some kept, some genuinely dropped
+    np.testing.assert_allclose(y[:, 0], expect, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("top_n", [0, 1, 2])
+def test_comp_mask_matches_topn_mask(top_n):
+    """The per-(expert, slot) comp mask scattered by dispatch must agree
+    with ``topn_mask`` over (token, expert): an assignment is compensated
+    iff its expert is within the token's top-n."""
+    x2, info, mcfg = _info(t=24, e=8)
+    t, k = info.topk_idx.shape
+    disp = make_dispatch(info, mcfg.num_experts, t, top_n=top_n)
+    _, me = dispatch_tokens(x2, disp, mcfg.num_experts)
+    tm = np.asarray(topn_mask(info.topk_idx, top_n, mcfg.num_experts))
+    me, e_idx = np.asarray(me), np.asarray(disp.e_idx)
+    slot, t_idx = np.asarray(disp.slot), np.asarray(disp.t_idx)
+    for a in range(t * k):
+        assert me[e_idx[a], slot[a]] == tm[t_idx[a], e_idx[a]]
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.config import MoEConfig, QuantConfig
+    from repro.core import compress_ffn_weights
+    from repro.distributed.sharding import shard_map
+    from repro.models.moe import (moe_apply, moe_apply_ep_a2a,
+                                  moe_apply_ep_replicated)
+
+    E, D, FE, T = 8, 64, 128, 32
+    mcfg = MoEConfig(num_experts=E, top_k=2, d_expert=FE,
+                     capacity_factor=4.0,
+                     quant=QuantConfig(enabled=True, bits=2, rank_budget=8,
+                                       top_n_restore=1, hqq_iters=2))
+    rng = np.random.default_rng(0)
+    router = jnp.asarray(rng.standard_normal((D, E)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((E, D, FE)), jnp.float32) * 0.1
+    w3 = jnp.asarray(rng.standard_normal((E, D, FE)), jnp.float32) * 0.1
+    w2 = jnp.asarray(rng.standard_normal((E, FE, D)), jnp.float32) * 0.1
+    stacks, _ = compress_ffn_weights(w1, w2, w3, mcfg.quant)
+    x2 = jnp.asarray(rng.standard_normal((T, D)), jnp.float32)
+
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(4), ("model",))
+
+    def pspec(leaf):
+        return P(*(["model"] + [None] * (leaf.ndim - 1)))
+
+    results = {}
+    for name, quantized in (("dense", False), ("quant", True)):
+        params = {"router": router}
+        if quantized:
+            params["stacks"] = stacks
+        else:
+            params.update(w1=w1, w3=w3, w2=w2)
+        y_ref, _, info = moe_apply(x2, params, mcfg, quantized=quantized,
+                                   exact_capacity=True)
+        topk_ref = np.asarray(info.topk_idx)
+
+        pspecs = jax.tree.map(pspec, params)
+        pspecs["router"] = P(None, None)
+
+        def a2a(x, p):
+            y, _, i = moe_apply_ep_a2a(x, p, mcfg, quantized=quantized)
+            return y, i.topk_idx
+        y_a, topk_a = shard_map(
+            a2a, mesh=mesh, in_specs=(P("model", None), pspecs),
+            out_specs=(P("model", None), P("model", None)),
+            check_vma=False)(x2, params)
+
+        def rep(x, p):
+            y, _, i = moe_apply_ep_replicated(x, p, mcfg,
+                                              quantized=quantized)
+            return y, i.topk_idx
+        y_r, topk_r = shard_map(
+            rep, mesh=mesh, in_specs=(P(None, None), pspecs),
+            out_specs=(P(None, None), P(None, None)),
+            check_vma=False)(x2, params)
+
+        results[name] = {
+            "a2a_err": float(jnp.max(jnp.abs(y_a - y_ref))),
+            "rep_err": float(jnp.max(jnp.abs(y_r - y_ref))),
+            "a2a_topk_equal": bool((np.asarray(topk_a) == topk_ref).all()),
+            "rep_topk_equal": bool((np.asarray(topk_r) == topk_ref).all()),
+        }
+    print("RESULTS:" + json.dumps(results))
+""")
+
+
+@pytest.fixture(scope="module")
+def three_path_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={**__import__("os").environ, "PYTHONPATH": "src",
+             "JAX_PLATFORMS": "cpu"},
+        cwd=__import__("pathlib").Path(__file__).parent.parent, timeout=500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULTS:")][0]
+    return json.loads(line[len("RESULTS:"):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["dense", "quant"])
+def test_three_paths_agree(three_path_results, kind):
+    r = three_path_results[kind]
+    assert r["a2a_err"] < 5e-4, r
+    assert r["rep_err"] < 5e-4, r
+    assert r["a2a_topk_equal"] and r["rep_topk_equal"]

@@ -1,0 +1,187 @@
+"""Streaming decode runtime: jitted scan loop, first-class router trace,
+live offload metering — plus the regression pinning the trace-returning
+forward against the old eager ``moe.route`` hook."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, MoEConfig, QuantConfig, ServeConfig
+from repro.core import compress_ffn_weights
+from repro.launch.steps import make_context
+from repro.models import forward, init_params
+from repro.models.transformer import unstack_params
+from repro.serve import ServeEngine, router_trace
+
+
+def moe_cfg(layers=2):
+    return ModelConfig(
+        name="tiny-moe", family="moe", num_layers=layers, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=128,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2, rank_budget=16,
+                                        top_n_restore=1, hqq_iters=3)))
+
+
+def _hooked_trace(cfg, params, tokens):
+    """The OLD router-trace implementation (monkey-patch ``moe.route``
+    under ``disable_jit``), kept inline as the regression oracle for the
+    first-class trace output that replaced it."""
+    import repro.models.moe as moe_mod
+    from repro.models import model as lm
+    traces = []
+    orig = moe_mod.route
+
+    def hooked(x2, w, mcfg):
+        info = orig(x2, w, mcfg)
+        traces.append(np.asarray(info.topk_idx))
+        return info
+
+    moe_mod.route = hooked
+    try:
+        with jax.disable_jit():
+            ctx = make_context(cfg, "train", exact_capacity=True)
+            lm.forward(params, jnp.asarray(tokens), cfg, ctx)
+    finally:
+        moe_mod.route = orig
+    return np.stack(traces, axis=1)          # (T, layers, k)
+
+
+def test_trace_matches_old_hook():
+    """First-class (jitted) trace must be identical to the old hook."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(2), cfg, jnp.float32)
+    tokens = np.random.default_rng(0).integers(0, 128, (2, 8),
+                                               dtype=np.int32)
+    new = router_trace(cfg, params, tokens)
+    old = _hooked_trace(cfg, params, tokens)
+    assert new.shape == old.shape == (16, 2, 2)
+    np.testing.assert_array_equal(new, old)
+
+
+def test_trace_scanned_segments_layer_order():
+    """Scanned (repeat > 1) segments must unstack into global layer order:
+    per-layer traces differ, and each must match its unrolled twin."""
+    cfg = moe_cfg(layers=4)
+    params = init_params(jax.random.key(3), cfg, jnp.float32)
+    tokens = np.random.default_rng(1).integers(0, 128, (1, 12),
+                                               dtype=np.int32)
+    tr_scanned = router_trace(cfg, params, tokens)
+    # unrolled plan = ground-truth ordering (one segment per layer)
+    cfg_u = dataclasses.replace(cfg, force_unroll_plan=True)
+    params_u = unstack_params(params, cfg)
+    tr_unrolled = router_trace(cfg_u, params_u, tokens)
+    assert tr_scanned.shape == (12, 4, 2)
+    np.testing.assert_array_equal(tr_scanned, tr_unrolled)
+
+
+def test_engine_decode_loop_streams_trace():
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(1), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params)
+    res = eng.generate(np.zeros((2, 4), np.int32), max_new=6)
+    assert res.tokens.shape == (2, 6)
+    assert res.logprobs.shape == (2, 6)
+    assert res.router_trace.shape == (6, 2, 2, 2)  # (steps, L, B, k)
+    assert res.router_trace.min() >= 0
+    assert res.router_trace.max() < cfg.moe.num_experts
+    assert res.request_trace(0).shape == (6, 2, 2)
+    assert res.decode_tokens_per_s > 0
+
+
+def test_engine_greedy_decode_deterministic():
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(5), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params, ServeConfig(temperature=0.0))
+    prompts = np.random.default_rng(2).integers(0, 128, (2, 4),
+                                                dtype=np.int32)
+    a = eng.generate(prompts, max_new=5, seed=0)
+    b = eng.generate(prompts, max_new=5, seed=7)  # greedy: seed-independent
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    np.testing.assert_array_equal(a.router_trace, b.router_trace)
+
+
+def test_engine_moe_config_without_moe_layers():
+    """cfg.moe set but the plan has no MoE FFN layers (first_layer_dense
+    on a 1-layer model): trace must be None, not a garbage object array."""
+    cfg = dataclasses.replace(moe_cfg(), num_layers=1,
+                              first_layer_dense=True)
+    params = init_params(jax.random.key(6), cfg, jnp.float32)
+    res = ServeEngine(cfg, params).generate(np.zeros((1, 4), np.int32),
+                                            max_new=3)
+    assert res.tokens.shape == (1, 3)
+    assert res.router_trace is None
+    assert res.request_trace(0) is None
+
+
+def test_engine_temperature_change_takes_effect():
+    """scfg.temperature is read per generate call (static jit arg), not
+    baked into the first compile."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(7), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params, ServeConfig(temperature=0.0))
+    prompts = np.random.default_rng(3).integers(0, 128, (2, 4),
+                                                dtype=np.int32)
+    greedy = eng.generate(prompts, max_new=8, seed=0)
+    eng.scfg = dataclasses.replace(eng.scfg, temperature=1.5)
+    s0 = eng.generate(prompts, max_new=8, seed=0)
+    s1 = eng.generate(prompts, max_new=8, seed=1)
+    # sampled decodes vary with seed; greedy did not (same engine instance)
+    assert not np.array_equal(s0.tokens, s1.tokens)
+    assert not np.array_equal(greedy.tokens, s0.tokens)
+
+
+@pytest.mark.slow
+def test_engine_live_offload_report():
+    """Quantized serving with attached stores: the engine's own decode
+    routing produces the wire-bytes / hit-rate / prefetch report."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(4), cfg, jnp.float32)
+    up = unstack_params(params, cfg)
+    cfg_q = dataclasses.replace(cfg, force_unroll_plan=True)
+    segs, stacks_by_layer = [], []
+    for seg in up["segments"]:
+        p = dict(seg[0])
+        mp = dict(p["moe"])
+        stacks, _ = compress_ffn_weights(mp["w1"], mp["w2"], mp["w3"],
+                                         cfg.moe.quant)
+        stacks_by_layer.append(stacks)
+        mp["stacks"] = stacks
+        for k in ("w1", "w2", "w3"):
+            mp.pop(k)
+        p["moe"] = mp
+        segs.append((p,))
+    qparams = dict(up)
+    qparams["segments"] = tuple(segs)
+
+    eng = ServeEngine(cfg_q, qparams, quantized=True)
+    eng.attach_offload(stacks_by_layer, policy="ours", cache_capacity=2)
+    res = eng.generate(np.zeros((2, 4), np.int32), max_new=8)
+    rep = res.offload_report
+    assert rep is not None
+    assert rep["tokens"] == 16                   # steps * batch
+    assert rep["total_bytes"] > 0
+    assert rep["bytes_per_token"] > 0
+    assert 0.0 <= rep["hit_rate"] <= 1.0
+    assert 0.0 <= rep["prefetch_accuracy"] <= 1.0
+    # a second generate on the SAME engine must report only its own
+    # traffic (stores stay warm, but no double-counting of call 1)
+    rep_again = eng.generate(np.zeros((2, 4), np.int32),
+                             max_new=8).offload_report
+    assert rep_again["tokens"] == 16
+    # warm cache: second call moves at most the first call's bytes
+    assert rep_again["bytes_per_token"] <= rep["bytes_per_token"]
+    # same decode, fp16 policy: every miss moves the full-precision expert,
+    # so it must beat uniform low-bit ('quant') on bytes — same access
+    # pattern, strictly larger per-miss payload
+    def rerun(policy):
+        e = ServeEngine(cfg_q, qparams, quantized=True)
+        e.attach_offload(list(stacks_by_layer), policy=policy,
+                         cache_capacity=2)
+        return e.generate(np.zeros((2, 4), np.int32), max_new=8) \
+                .offload_report
+    rep_q, rep_fp16 = rerun("quant"), rerun("fp16")
+    assert rep_fp16["bytes_per_token"] > rep_q["bytes_per_token"]
