@@ -2,17 +2,21 @@
 #
 #   make tier1   fast correctness gate (excludes @pytest.mark.slow)
 #   make test    full suite, including slow/benchmarks-adjacent tests
+#   make bench-smoke     quick continuous-batching serving sweep
 #   make serve-example   live-decode offload report from the serve engine
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 test serve-example
+.PHONY: tier1 test bench-smoke serve-example
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
 
 test:
 	$(PY) -m pytest -q
+
+bench-smoke:
+	$(PY) benchmarks/bench_serving.py --quick
 
 serve-example:
 	$(PY) examples/serve_offload.py

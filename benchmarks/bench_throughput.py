@@ -40,12 +40,16 @@ def _trace(arch: str, tokens: int, quick: bool) -> np.ndarray:
     e, k = cfg.moe.num_experts, cfg.moe.top_k
     layers = MODELS[arch]["layers"]
     # real DECODE-time routing skew from the trained bench model's live
-    # serving loop (unified engine interface), remapped to e experts
+    # CONTINUOUS-BATCHING loop: ragged requests interleaved on 2 slots,
+    # per-request traces concatenated, remapped to e experts
     bcfg, params = trained_moe(steps=60 if quick else 200)
     eng = ServeEngine(bcfg, params)
-    out = eng.generate(np.zeros((1, 8), np.int32),
-                       max_new=min(tokens, 64), seed=0)
-    tr = out.request_trace(0)                    # (steps, layers, k)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, bcfg.vocab_size, (int(l),), dtype=np.int32)
+               for l in rng.integers(6, 13, 4)]
+    stats = eng.generate_many(prompts, max_new=min(tokens // 2, 32),
+                              num_slots=2, chunk=4, seed=0)
+    tr = np.concatenate([r.trace for r in stats.results])  # (steps, L, k)
     t, l, kk = tr.shape
     reps_t = -(-tokens // t)
     reps_l = -(-layers // l)

@@ -7,6 +7,7 @@ benchmarks put their headline metric in the `derived` column.
   fig6   accuracy ladder (fp32 / rtn / hqq / ours at int2+int3)
   fig7   offloaded decode throughput (GPU-only + GPU-NDP simulator)
   fig8   ablations: top-n count, rank budget, kurtosis vs uniform
+  serving  continuous-batching offered-load sweep (tok/s, p50/p95 latency)
   table2 positional restoration (only-top1 vs only-top2)
   kernel quant/lowrank matmul microbenches + wire-byte accounting
   roofline  dry-run roofline summary (requires dryrun JSONs)
@@ -30,7 +31,7 @@ def main() -> None:
 
     from . import (bench_ablation, bench_accuracy, bench_breakdown,
                    bench_kernels, bench_kurtosis, bench_position,
-                   bench_throughput, roofline_table)
+                   bench_serving, bench_throughput, roofline_table)
     suites = {
         "kernel": bench_kernels.run,
         "fig1": bench_breakdown.run,
@@ -39,6 +40,7 @@ def main() -> None:
         "fig8": bench_ablation.run,
         "table2": bench_position.run,
         "fig7": bench_throughput.run,
+        "serving": bench_serving.run,
         "roofline": roofline_table.run,
     }
     if args.only:

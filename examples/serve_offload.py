@@ -1,12 +1,15 @@
-"""Serving example: batched generation with live offloading metering.
+"""Serving example: continuous-batching generation with live offload
+metering.
 
-Loads the quickstart-style compressed MoE, serves batched requests with the
-router-guided restoration path through the jitted streaming decode loop,
-and meters the engine's OWN routing decisions through the per-layer
-``ExpertStore`` (LRU cache + layer-ahead prefetcher) — bytes/token, cache
-hit rate, and prefetch accuracy come from live decode, not a replayed
-simulator trace.  The fig-7 event-driven simulator then projects that live
-trace onto the paper's GPU-only and GPU-NDP hardware profiles.
+Loads the quickstart-style compressed MoE and serves a ragged multi-
+request workload through the continuous-batching scheduler: more
+requests than decode slots, slots refilled from the queue between scan
+chunks, so the per-layer ``ExpertStore`` LRU + layer-ahead prefetcher
+are metered under genuine multi-request contention — bytes/token
+(demand + compensator + prefetch), cache hit rate, and prefetch accuracy
+come from live interleaved decode, not a replayed simulator trace.  The
+fig-7 event-driven simulator then projects one request's live trace onto
+the paper's GPU-only and GPU-NDP hardware profiles.
 
 Run:  PYTHONPATH=src python examples/serve_offload.py
 """
@@ -21,7 +24,7 @@ from repro.core.quantize import packed_nbytes
 from repro.models import init_params
 from repro.models.transformer import unstack_params
 from repro.offload import (GPU_NDP, GPU_ONLY, LayerSpecSim, simulate_decode)
-from repro.serve import ServeEngine
+from repro.serve import Request, ServeEngine
 from repro.train import train
 
 
@@ -56,27 +59,39 @@ def main():
     qparams = dict(up)
     qparams["segments"] = tuple(segs)
 
-    # --- batched generation + live offload metering ----------------------
-    # the engine's jitted decode loop returns the per-step router trace;
-    # attach_offload feeds it straight into the metered per-layer stores
+    # --- continuous-batching serving + live offload metering -------------
+    # 6 ragged requests on 2 decode slots: the scheduler interleaves them,
+    # and attach_offload meters the engine's own routing decisions (with
+    # inactive slots masked) straight into the per-layer stores
     eng = ServeEngine(cfg_q, qparams, quantized=True)
     eng.attach_offload(stacks_by_layer, policy="ours", cache_capacity=2)
-    prompts = np.random.default_rng(0).integers(0, 512, (4, 16),
-                                                dtype=np.int32)
-    out = eng.generate(prompts, max_new=16)
-    print(f"generated {out.tokens.shape} tokens  "
-          f"prefill {out.prefill_s * 1e3:.0f}ms  "
-          f"decode {out.decode_tokens_per_s:.1f} tok/s (CPU emulation)")
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(0, 512, (int(l),), dtype=np.int32),
+                    max_new=16)
+            for i, l in enumerate(rng.integers(8, 25, 6))]
+    stats = eng.serve(reqs, num_slots=2, chunk=4)
+    lat = stats.latency_percentiles((50.0, 95.0))
+    print(f"served {len(stats.results)} requests on {stats.num_slots} slots "
+          f"({stats.chunks} chunks of {stats.chunk} steps, CPU emulation): "
+          f"{stats.tokens_per_s:.1f} tok/s, "
+          f"latency p50 {lat[50.0] * 1e3:.0f}ms p95 {lat[95.0] * 1e3:.0f}ms")
 
-    rep = out.offload_report
+    rep = stats.offload_report
     print(f"live offload ({rep['policy']}): "
-          f"{rep['bytes_per_token'] / 2**20:.2f} MiB/token, "
+          f"{rep['bytes_per_token'] / 2**20:.2f} MiB/token "
+          f"(prefetch {rep['prefetch_bytes'] / 2**20:.2f} MiB, "
+          f"wasted {rep['wasted_prefetch_bytes'] / 2**20:.2f} MiB), "
           f"cache hit {rep['hit_rate']:.0%}, "
           f"prefetch accuracy {rep['prefetch_accuracy']:.0%}")
+    for r in stats.results[:3]:
+        print(f"  req {r.uid}: {r.prompt_len}+{r.gen_tokens} tokens, "
+              f"{r.offload_bytes / max(r.gen_tokens, 1) / 2**20:.2f} "
+              f"MiB/token attributed, latency {r.latency_s * 1e3:.0f}ms")
 
     # --- projected device throughput (paper fig-7 hardware profiles) -----
-    # feed the simulator the LIVE decode trace of one request stream
-    trace = out.request_trace(0)                      # (steps, layers, k)
+    # feed the simulator the LIVE decode trace of one scheduled request
+    trace = stats.results[0].trace                    # (steps, layers, k)
     d, fe, e = 4096, 14336, 8   # Mixtral-8x7B expert dims
     spec = LayerSpecSim(
         d, fe, e, 2,

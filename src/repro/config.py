@@ -296,6 +296,10 @@ class ServeConfig:
     offload: bool = False              # expert offloading emulation on/off
     prefetch_layers: int = 1
     cache_experts: int = 4             # device-resident expert cache per layer
+    # continuous batching: decode-slot pool size and scan chunk length
+    # (the scheduler refills completed slots between fixed-shape chunks)
+    num_slots: int = 4
+    chunk_steps: int = 8
 
 
 @dataclass(frozen=True)

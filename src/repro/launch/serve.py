@@ -1,10 +1,15 @@
 """Serving CLI: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Boots the reduced config on CPU (or full config on a real pod), randomly
-initializes or restores weights, optionally applies the offline
-compression pipeline, and serves a batch of synthetic requests through
-the engine — reporting tokens/s and, with --offload, the metered wire
-bytes per policy.
+initializes or restores weights, and serves synthetic traffic through
+the engine:
+
+- default: one fixed batch (``--batch`` x ``--prompt-len``), reporting
+  prefill latency and decode tokens/s;
+- ``--requests N``: a continuous-batching workload of N ragged-length
+  requests (optionally arriving at ``--rate`` req/s) scheduled onto
+  ``--slots`` decode slots in ``--chunk``-step scan chunks, reporting
+  throughput and p50/p95 request latency.
 """
 import argparse
 
@@ -14,7 +19,7 @@ import numpy as np
 
 from ..registry import get_config
 from ..models import init_params
-from ..serve import ServeEngine
+from ..serve import ServeEngine, synthetic_workload
 
 
 def main():
@@ -24,6 +29,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N scheduled requests instead of one batch")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load in requests/s (0 = all at t=0)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_config)
@@ -32,7 +44,25 @@ def main():
               f"text-only path")
     params = init_params(jax.random.key(0), cfg, jnp.float32)
     eng = ServeEngine(cfg, params)
-    prompts = np.random.default_rng(0).integers(
+
+    if args.requests > 0:
+        reqs = synthetic_workload(
+            args.requests, cfg.vocab_size, rate=args.rate,
+            max_new=args.max_new, min_len=max(args.prompt_len // 2, 1),
+            max_len=args.prompt_len, seed=args.seed)
+        stats = eng.serve(reqs, num_slots=args.slots, chunk=args.chunk,
+                          seed=args.seed)
+        lat = stats.latency_percentiles((50.0, 95.0))
+        print(f"{cfg.name}: {args.requests} requests on {args.slots} slots "
+              f"(chunk {args.chunk}, rate "
+              f"{args.rate if args.rate > 0 else 'closed-loop'}): "
+              f"{stats.tokens_per_s:.1f} tok/s, "
+              f"latency p50 {lat[50.0] * 1e3:.0f}ms "
+              f"p95 {lat[95.0] * 1e3:.0f}ms, "
+              f"{stats.chunks} chunks, compiles {eng.num_compiles}")
+        return
+
+    prompts = np.random.default_rng(args.seed).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
     res = eng.generate(prompts, max_new=args.max_new)
     print(f"{cfg.name}: prefill {res.prefill_s * 1e3:.0f}ms, "

@@ -92,6 +92,49 @@ def dequant_scales(cache: Dict[str, jax.Array]):
     return cache.get("k_scale"), cache.get("v_scale")
 
 
+# ---------------------------------------------------------------------------
+# slot claim / reset (continuous-batching scheduler)
+# ---------------------------------------------------------------------------
+#
+# The serve scheduler keeps one fixed-shape cache whose batch rows are
+# *slots*; requests come and go by writing a freshly-prefilled batch-1
+# cache into a slot (claim) or clearing it (reset).  Shapes never change,
+# so the jitted decode loop stays resident across the whole workload.
+
+def _slot_fill(name: str, dtype) -> jax.Array:
+    """Empty-slot fill value per cache plane: position planes use -1
+    (= unwritten, masked by decode attention), xLSTM max-state planes use
+    -inf (softmax-stabilizer identity), everything else zero."""
+    if name == "pos":
+        return jnp.asarray(-1, dtype)
+    if name == "m":
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(0, dtype)
+
+
+def claim_slot(cache: Dict[str, jax.Array], req_cache: Dict[str, jax.Array],
+               slot: int, batch_axis: int = 0) -> Dict[str, jax.Array]:
+    """Write a batch-1 per-request cache into row ``slot`` of a slotted
+    cache.  ``batch_axis`` is 0 for plain layer caches and 1 for scanned
+    (repeat-stacked) segment caches."""
+    out = {}
+    for k, v in cache.items():
+        r = req_cache[k].astype(v.dtype)
+        out[k] = jax.lax.dynamic_update_slice_in_dim(v, r, slot, batch_axis)
+    return out
+
+
+def reset_slot(cache: Dict[str, jax.Array], slot: int,
+               batch_axis: int = 0) -> Dict[str, jax.Array]:
+    """Clear row ``slot`` back to the empty-slot state (pos = -1 etc.)."""
+    out = {}
+    for k, v in cache.items():
+        row_shape = v.shape[:batch_axis] + (1,) + v.shape[batch_axis + 1:]
+        row = jnp.full(row_shape, _slot_fill(k, v.dtype), v.dtype)
+        out[k] = jax.lax.dynamic_update_slice_in_dim(v, row, slot, batch_axis)
+    return out
+
+
 def init_rglru_cache(batch: int, width: int, conv_width: int,
                      dtype=jnp.float32) -> Dict[str, jax.Array]:
     return {

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 from ..config import ModelConfig
 from .attention import attention, decode_attention
 from .ffn import ffn_apply, ffn_apply_quantized
-from .kvcache import (init_attn_cache, init_mlstm_cache, init_rglru_cache,
-                      init_slstm_cache, prefill_attn_cache, update_attn_cache)
+from .kvcache import (claim_slot, init_attn_cache, init_mlstm_cache,
+                      init_rglru_cache, init_slstm_cache, prefill_attn_cache,
+                      reset_slot, update_attn_cache)
 from .layers import (apply_mrope, apply_rope, dense_init, embed_init,
                      rms_norm, softcap)
 from .moe import moe_apply
@@ -372,6 +373,67 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
             pos.append(c)
         segs.append(tuple(pos))
     return {"segments": tuple(segs), "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# slot-indexed cache ops (continuous-batching scheduler)
+# ---------------------------------------------------------------------------
+
+def _map_segments(cfg: ModelConfig, fn, *cache_trees):
+    """Apply ``fn(layer_cache..., batch_axis)`` to every per-layer cache
+    dict; scanned segments carry a leading repeat axis, so their batch
+    axis is 1 instead of 0."""
+    plan = derive_plan(cfg)
+    segs = []
+    for si, seg in enumerate(plan):
+        ax = 1 if seg.repeat > 1 else 0
+        pos = []
+        for pi in range(len(seg.layers)):
+            pos.append(fn(*[t["segments"][si][pi] for t in cache_trees], ax))
+        segs.append(tuple(pos))
+    return tuple(segs)
+
+
+def cache_claim_slot(cfg: ModelConfig, caches: Dict, req_caches: Dict,
+                     slot: int) -> Dict:
+    """Write a batch-1 prefilled cache into batch row ``slot`` of a slotted
+    cache (same cfg / cache length); the slot's absolute position comes
+    along from ``req_caches['pos']``."""
+    segs = _map_segments(
+        cfg, lambda g, r, ax: claim_slot(g, r, slot, ax), caches, req_caches)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        caches["pos"], req_caches["pos"].astype(jnp.int32), slot, 0)
+    return {"segments": segs, "pos": pos}
+
+
+def cache_reset_slot(cfg: ModelConfig, caches: Dict, slot: int) -> Dict:
+    """Clear batch row ``slot`` back to the empty state (pos planes -1)."""
+    segs = _map_segments(cfg, lambda g, ax: reset_slot(g, slot, ax), caches)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        caches["pos"], jnp.zeros((1,), jnp.int32), slot, 0)
+    return {"segments": segs, "pos": pos}
+
+
+def mask_cache_padding(cfg: ModelConfig, caches: Dict, plen: jax.Array
+                       ) -> Dict:
+    """Invalidate cache entries written by right-padded prefill tokens.
+
+    ``plen``: (B,) true prompt lengths.  Attention position planes at
+    absolute positions >= plen become -1 (the decode-attention "empty"
+    sentinel), and the per-row decode position is pinned to plen — so a
+    prompt padded up to its length bucket decodes exactly like an unpadded
+    one.  Recurrent states have no per-position plane and cannot be
+    unpolluted this way; callers only right-pad attention-only plans."""
+    def mask(c, ax):
+        if not (isinstance(c, dict) and "pos" in c):
+            return c
+        lim = plen[None, :, None] if ax == 1 else plen[:, None]
+        out = dict(c)
+        out["pos"] = jnp.where(c["pos"] >= lim, -1, c["pos"])
+        return out
+
+    segs = _map_segments(cfg, mask, caches)
+    return {"segments": segs, "pos": plen.astype(jnp.int32)}
 
 
 # ---------------------------------------------------------------------------

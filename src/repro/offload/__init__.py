@@ -5,4 +5,5 @@ from .cache import *  # noqa
 from .prefetch import LayerAheadPrefetcher, PrefetchStats
 from .simulator import LayerSpecSim, SimResult, make_router_trace, simulate_decode
 from .store import (ExpertCache, ExpertStore, FetchStats,
-                    meter_decode_trace)
+                    meter_decode_trace, offload_report, replay_decode_trace,
+                    snapshot_offload)

@@ -5,6 +5,15 @@ fetches.  Prediction uses the previous token's routing at l+1 (decode-time
 temporal locality) — the cheap predictor HOBBIT-class systems use; accuracy
 and the wasted-fetch ratio are metered so benchmarks can quantify the
 prediction-miss penalty the paper's related-work section describes.
+
+The prediction set is capped at ``top_k`` experts per active request
+stream (ranked by how many streams routed to them last step): ``top_k``
+is the router's per-token fetch width, so the prefetcher never issues
+more speculative traffic per stream than the demand path would.
+``ExpertStore.prefetch`` inserts the predictions into the device LRU and
+meters their bytes — correct predictions become cache *hits* on the
+demand access, mispredictions are metered as wasted prefetch bytes
+(``offload/store.py::replay_decode_trace``).
 """
 from __future__ import annotations
 
@@ -29,6 +38,7 @@ class LayerAheadPrefetcher:
     """Predicts layer l+1 experts = previous token's experts at l+1."""
 
     def __init__(self, num_layers: int, top_k: int):
+        self.top_k = int(top_k)
         self.prev_token: List[Optional[np.ndarray]] = [None] * num_layers
         self.stats = PrefetchStats()
 
@@ -38,8 +48,21 @@ class LayerAheadPrefetcher:
     def observe(self, layer: int, experts: np.ndarray):
         """Score the pending prediction against this step's experts and
         remember them for the next step.  ``experts`` may be any shape
-        (batched decode passes the whole step's ids); it is flattened."""
-        experts = np.unique(np.asarray(experts).reshape(-1))
+        (batched decode passes the whole step's (rows, k) ids); entries
+        < 0 (masked scheduler slots) are ignored; the stored prediction
+        keeps at most ``top_k`` experts per observed row, most-frequent
+        first."""
+        a = np.asarray(experts)
+        rows = a.reshape(-1, a.shape[-1]) if a.ndim > 1 else a.reshape(1, -1)
+        rows = rows[(rows >= 0).any(axis=1)]
+        flat = rows.reshape(-1)
+        flat = flat[flat >= 0]
+        if flat.size == 0:
+            return                     # fully-masked step: keep prediction
+        uniq, counts = np.unique(flat, return_counts=True)
+        order = np.argsort(-counts, kind="stable")
+        cap = self.top_k * max(len(rows), 1)
+        experts = np.sort(uniq[order[:cap]])
         pred = self.prev_token[layer]
         if pred is not None:
             hit = len(np.intersect1d(pred, experts))

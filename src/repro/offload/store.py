@@ -5,12 +5,24 @@ fetches them on demand; ``ExpertCache`` is the device-resident LRU that
 Mixtral-Offloading/HOBBIT-style systems maintain.  Every fetch is metered
 in bytes so benchmarks can report exact PCIe/host-link traffic for
 fp16 / uniform-quant / BEAM-LRC policies.
+
+Metering semantics (fidelity-critical for the paper's wire-byte claims):
+
+- compensator factors *ride the device cache* with the expert they
+  compensate: they are fetched once when a top-n expert first needs them,
+  stay resident while the expert does, and are refetched only after the
+  expert is evicted — not re-charged on every token;
+- prefetched experts are inserted into the LRU ahead of the access (so a
+  correct prediction becomes a *hit*) and their traffic is metered as
+  ``prefetch_bytes``; bytes fetched for predictions the step never used
+  are additionally reported as ``wasted_prefetch_bytes``;
+- expert ids < 0 mark inactive scheduler slots and are skipped entirely.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,15 +45,31 @@ class FetchStats:
 
 
 class ExpertCache:
-    """Per-layer LRU over expert ids with byte-metered misses."""
+    """Per-layer LRU over expert ids with byte-metered misses.
+
+    ``last_evicted`` holds the expert id dropped by the most recent
+    ``access``/``insert`` (or None) — the store uses it to evict that
+    expert's cache-resident compensator factors along with the weights.
+    """
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         self._lru: "collections.OrderedDict[int, int]" = collections.OrderedDict()
         self.stats = FetchStats()
+        self.last_evicted: Optional[int] = None
+
+    def __contains__(self, expert: int) -> bool:
+        return expert in self._lru
+
+    def _insert(self, expert: int, nbytes: int):
+        self._lru[expert] = nbytes
+        self.last_evicted = None
+        if len(self._lru) > self.capacity:
+            self.last_evicted, _ = self._lru.popitem(last=False)
 
     def access(self, expert: int, nbytes: int) -> bool:
         """True on hit; on miss, meters ``nbytes`` and inserts."""
+        self.last_evicted = None
         if expert in self._lru:
             self._lru.move_to_end(expert)
             self.stats.hits += 1
@@ -49,10 +77,20 @@ class ExpertCache:
         self.stats.misses += 1
         self.stats.fetches += 1
         self.stats.bytes_moved += nbytes
-        self._lru[expert] = nbytes
-        if len(self._lru) > self.capacity:
-            self._lru.popitem(last=False)
+        self._insert(expert, nbytes)
         return False
+
+    def insert(self, expert: int, nbytes: int) -> bool:
+        """Prefetch-path insert: warms the LRU without touching hit/miss
+        stats (the demand access decides those) and without metering into
+        ``stats.bytes_moved`` (the caller meters prefetch bytes).  Returns
+        True if the expert was actually fetched (i.e. was not resident)."""
+        self.last_evicted = None
+        if expert in self._lru:
+            self._lru.move_to_end(expert)
+            return False
+        self._insert(expert, nbytes)
+        return True
 
 
 class ExpertStore:
@@ -70,6 +108,12 @@ class ExpertStore:
         self.num_experts = next(iter(stacks.values())).scale.shape[0]
         self.cache = ExpertCache(cache_capacity)
         self.comp_bytes_moved = 0
+        self.prefetch_bytes = 0
+        self.wasted_prefetch_bytes = 0
+        # experts whose compensator factors are device-resident; factors
+        # ride the LRU with their expert (evicted together, refetched on
+        # the next top-n access after eviction)
+        self._comp_resident: set = set()
 
     def expert_bytes(self, e: int, policy: str) -> int:
         if policy == "fp16":
@@ -82,22 +126,136 @@ class ExpertStore:
                        * s.factor_bits / 8) + 4 * s.ranks[e]
                    for s in self.stacks.values())
 
+    def _drop_evicted(self):
+        if self.cache.last_evicted is not None:
+            self._comp_resident.discard(self.cache.last_evicted)
+
     def access_token(self, topk: np.ndarray, top_n: int, policy: str
                      ) -> int:
-        """Meter one token's expert fetches; returns bytes moved."""
-        before = self.cache.stats.bytes_moved + self.comp_bytes_moved
+        """Meter one token's expert fetches; returns bytes moved.
+
+        Entries < 0 (masked / inactive scheduler slots) are skipped."""
+        before = self.total_bytes
         for rank, e in enumerate(topk):
             e = int(e)
+            if e < 0:
+                continue
             self.cache.access(e, self.expert_bytes(e, policy))
+            self._drop_evicted()
             if policy == "ours" and rank < top_n:
-                # compensators ride along only for the top-n experts
-                self.comp_bytes_moved += self.compensator_bytes(e)
-        return (self.cache.stats.bytes_moved + self.comp_bytes_moved
-                - before)
+                # compensators ride the cache with their expert: fetch
+                # only when not already resident
+                if e not in self._comp_resident:
+                    self.comp_bytes_moved += self.compensator_bytes(e)
+                    self._comp_resident.add(e)
+        return self.total_bytes - before
+
+    def prefetch(self, experts: Iterable[int], policy: str
+                 ) -> Dict[int, int]:
+        """Warm the LRU with predicted experts ahead of the demand access.
+
+        Fetched bytes land in ``prefetch_bytes`` (they are real wire
+        traffic); returns {expert: bytes} for the experts actually fetched
+        so the caller can meter the wasted share after scoring."""
+        fetched: Dict[int, int] = {}
+        for e in experts:
+            e = int(e)
+            if e < 0:
+                continue
+            nb = self.expert_bytes(e, policy)
+            if self.cache.insert(e, nb):
+                self._drop_evicted()
+                self.prefetch_bytes += nb
+                fetched[e] = nb
+        return fetched
 
     @property
     def total_bytes(self) -> int:
-        return self.cache.stats.bytes_moved + self.comp_bytes_moved
+        return (self.cache.stats.bytes_moved + self.comp_bytes_moved
+                + self.prefetch_bytes)
+
+
+# ---------------------------------------------------------------------------
+# trace replay + reporting
+# ---------------------------------------------------------------------------
+
+def snapshot_offload(stores: List[ExpertStore], prefetcher=None) -> Dict:
+    """Cumulative store/prefetcher counters, for delta-based reports."""
+    return {
+        "demand": sum(s.cache.stats.bytes_moved for s in stores),
+        "comp": sum(s.comp_bytes_moved for s in stores),
+        "prefetch": sum(s.prefetch_bytes for s in stores),
+        "wasted": sum(s.wasted_prefetch_bytes for s in stores),
+        "total": sum(s.total_bytes for s in stores),
+        "hits": sum(s.cache.stats.hits for s in stores),
+        "misses": sum(s.cache.stats.misses for s in stores),
+        "pf_issued": prefetcher.stats.issued if prefetcher is not None else 0,
+        "pf_useful": prefetcher.stats.useful if prefetcher is not None else 0,
+    }
+
+
+def offload_report(stores: List[ExpertStore], prefetcher, snap: Dict,
+                   tokens: int, policy: str) -> Dict:
+    """Report dict covering the traffic since ``snap`` (snapshot_offload)."""
+    now = snapshot_offload(stores, prefetcher)
+    d = {k: now[k] - snap[k] for k in now}
+    issued = d["pf_issued"]
+    return {
+        "policy": policy,
+        "tokens": tokens,
+        "total_bytes": int(d["total"]),
+        "bytes_per_token": d["total"] / max(tokens, 1),
+        "demand_bytes": int(d["demand"]),
+        "compensator_bytes": int(d["comp"]),
+        "prefetch_bytes": int(d["prefetch"]),
+        "wasted_prefetch_bytes": int(d["wasted"]),
+        "hit_rate": d["hits"] / max(d["hits"] + d["misses"], 1),
+        "prefetch_accuracy": (d["pf_useful"] / max(issued, 1)
+                              if prefetcher is not None else None),
+    }
+
+
+def replay_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
+                        policy: str = "ours", top_n: int = 1,
+                        prefetcher=None) -> Tuple[int, np.ndarray]:
+    """Replay a (steps, moe_layers, B, k) decode trace into the stores.
+
+    Batch rows whose expert ids are < 0 are *inactive scheduler slots*:
+    they are skipped by the prefetcher and the stores.  Returns
+    ``(tokens, slot_bytes)`` — the number of active (step, slot) tokens
+    metered and the demand+compensator bytes attributed per batch slot
+    (prefetch traffic is shared and not slot-attributable).
+    """
+    trace = np.asarray(trace)
+    steps, layers, b, _ = trace.shape
+    if layers != len(stores):
+        raise ValueError(f"trace has {layers} MoE layers but "
+                         f"{len(stores)} stores attached")
+    slot_bytes = np.zeros((b,), np.int64)
+    tokens = 0
+    for t in range(steps):
+        active = trace[t, 0, :, 0] >= 0               # (B,) slot mask
+        if not active.any():
+            continue
+        tokens += int(active.sum())
+        for l in range(layers):
+            experts = trace[t, l]                     # (B, k)
+            live = experts[active]
+            if prefetcher is not None:
+                # while layer l-1 computes, fetch the predicted experts of
+                # layer l so correct predictions turn into cache hits
+                pred = prefetcher.predict(l)
+                fetched = (stores[l].prefetch(pred, policy)
+                           if pred is not None else {})
+                prefetcher.observe(l, live)
+                if fetched:
+                    used = set(int(e) for e in live.reshape(-1))
+                    stores[l].wasted_prefetch_bytes += sum(
+                        nb for e, nb in fetched.items() if e not in used)
+            for bi in np.nonzero(active)[0]:
+                slot_bytes[bi] += stores[l].access_token(
+                    experts[bi], top_n=top_n, policy=policy)
+    return tokens, slot_bytes
 
 
 def meter_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
@@ -108,43 +266,17 @@ def meter_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
     ``trace``: (steps, moe_layers, B, k) routed expert ids, exactly the
     ``GenerationResult.router_trace`` the serve engine's jitted decode
     loop emits — so the wire bytes / hit rates below are measured from
-    real serving decisions, not the synthetic simulator.
+    real serving decisions, not the synthetic simulator.  Batch rows with
+    expert id -1 are inactive scheduler slots and are skipped.
 
     The stores keep their cumulative lifetime stats (and cache state warm
     across calls); the returned report covers THIS replay only, so
     repeated ``generate`` calls don't double-count earlier traffic.
 
-    Returns a report dict: bytes/token, cache hit rate, prefetch accuracy.
+    Returns a report dict: bytes/token (demand + compensator + prefetch),
+    per-category bytes, cache hit rate, prefetch accuracy.
     """
-    trace = np.asarray(trace)
-    steps, layers, b, _ = trace.shape
-    if layers != len(stores):
-        raise ValueError(f"trace has {layers} MoE layers but "
-                         f"{len(stores)} stores attached")
-    bytes0 = sum(s.total_bytes for s in stores)
-    hits0 = sum(s.cache.stats.hits for s in stores)
-    misses0 = sum(s.cache.stats.misses for s in stores)
-    pf0 = (prefetcher.stats.issued, prefetcher.stats.useful) \
-        if prefetcher is not None else (0, 0)
-    for t in range(steps):
-        for l in range(layers):
-            experts = trace[t, l]                     # (B, k)
-            if prefetcher is not None:
-                prefetcher.observe(l, experts)  # observe flattens + uniques
-            for row in experts:
-                stores[l].access_token(row, top_n=top_n, policy=policy)
-    total = sum(s.total_bytes for s in stores) - bytes0
-    hits = sum(s.cache.stats.hits for s in stores) - hits0
-    misses = sum(s.cache.stats.misses for s in stores) - misses0
-    issued = (prefetcher.stats.issued - pf0[0]) if prefetcher else 0
-    useful = (prefetcher.stats.useful - pf0[1]) if prefetcher else 0
-    tokens = steps * b
-    return {
-        "policy": policy,
-        "tokens": tokens,
-        "total_bytes": int(total),
-        "bytes_per_token": total / max(tokens, 1),
-        "hit_rate": hits / max(hits + misses, 1),
-        "prefetch_accuracy": (useful / max(issued, 1)
-                              if prefetcher is not None else None),
-    }
+    snap = snapshot_offload(stores, prefetcher)
+    tokens, _ = replay_decode_trace(stores, trace, policy=policy,
+                                    top_n=top_n, prefetcher=prefetcher)
+    return offload_report(stores, prefetcher, snap, tokens, policy)

@@ -1,2 +1,5 @@
-"""Serving: batched engine (prefill + decode), sampling, router-trace export."""
-from .engine import GenerationResult, ServeEngine, router_trace, sample
+"""Serving: batched engine (prefill + decode), continuous-batching request
+scheduler, sampling, router-trace export."""
+from .engine import (GenerationResult, ServeEngine, ServeStats, bucket_len,
+                     router_trace, sample)
+from .scheduler import Request, RequestResult, Scheduler, synthetic_workload

@@ -1,23 +1,36 @@
-"""Batched serving engine: chunked prefill + jitted streaming decode loop.
+"""Batched serving engine: chunked prefill + jitted streaming decode loop
++ continuous-batching request scheduling.
 
-The decode loop is a single ``lax.scan`` over steps compiled once per
-``max_new``: sampling happens on-device (no per-token host round-trip),
-cache buffers are donated into the loop, and the per-step router trace is
-a first-class output of the forward pass (``ExecContext.collect_trace``)
-— no ``disable_jit`` + ``moe.route`` monkey-patching.
+The decode loop is a single ``lax.scan`` over steps: sampling happens
+on-device (no per-token host round-trip), cache buffers are donated into
+the loop, and the per-step router trace is a first-class output of the
+forward pass (``ExecContext.collect_trace``).
+
+Compiled shapes are *bucketed* so they survive ragged traffic:
+
+- cache lengths round up to powers of two, so every (prompt, max_new)
+  pair in a bucket reuses the same compiled prefill + decode loop;
+- prompts right-pad to a power-of-two length and the padded cache slots
+  are invalidated (``mask_cache_padding``: pos = -1) so padded decode is
+  bit-identical to unpadded;
+- ``serve``/``generate_many`` run the decode scan in fixed-size chunks
+  over a slot-indexed cache: between chunks the ``serve/scheduler.py``
+  scheduler retires finished requests and refills their slots from the
+  queue — many requests, one resident compiled loop.
 
 When expert stores are attached (``attach_offload``), every generated
 step's routing decisions are replayed into the per-layer metered
 ``ExpertStore`` + ``LayerAheadPrefetcher``, so wire bytes / cache hits /
 prefetch accuracy come from live serving rather than only the synthetic
-simulator.
+simulator; inactive scheduler slots are masked (expert id -1) before
+metering.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +38,19 @@ import numpy as np
 
 from ..config import ModelConfig, ServeConfig
 from ..models import model as lm
-from ..models.transformer import ExecContext, init_caches
+from ..models.transformer import (ExecContext, cache_claim_slot, init_caches,
+                                  layer_specs, mask_cache_padding)
 from ..launch.steps import make_context
+from .scheduler import Request, RequestResult, Scheduler
+
+PROMPT_BUCKET_MIN = 16     # smallest padded-prompt length
+CACHE_BUCKET_MIN = 32      # smallest bucketed cache length
+
+
+def bucket_len(n: int, minimum: int = CACHE_BUCKET_MIN) -> int:
+    """Round ``n`` up to the next power of two (>= minimum) — the length
+    buckets that keep jit cache keys finite under ragged traffic."""
+    return max(minimum, 1 << max(int(n) - 1, 0).bit_length())
 
 
 @dataclasses.dataclass
@@ -55,6 +79,31 @@ class GenerationResult:
         return self.router_trace[:, :, b, :]
 
 
+@dataclasses.dataclass
+class ServeStats:
+    """Outcome of one continuous-batching ``serve`` run."""
+    results: List[RequestResult]       # submission order
+    num_slots: int
+    chunk: int
+    total_s: float
+    prefill_s: float
+    decode_s: float
+    chunks: int
+    generated_tokens: int              # accepted tokens across requests
+    offload_report: Optional[Dict] = None
+    # (total_steps, moe_layers, num_slots, k) with -1 on inactive slots
+    router_trace: Optional[np.ndarray] = None
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.total_s if self.total_s else 0.0
+
+    def latency_percentiles(self, qs: Sequence[float] = (50.0, 95.0)
+                            ) -> Dict[float, float]:
+        lat = [r.latency_s for r in self.results]
+        return {q: float(np.percentile(lat, q)) for q in qs} if lat else {}
+
+
 def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -65,19 +114,29 @@ def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = None,
                  quantized: bool = False, collect_router_trace: bool = True,
-                 kernel_impl: Optional[str] = None):
+                 kernel_impl: Optional[str] = None,
+                 cache_dtype: Optional[Any] = None):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.params = params
         self.quantized = quantized
         self.kernel_impl = kernel_impl
+        # KV caches follow the model's compute dtype (bf16 params must not
+        # silently double KV memory with f32 caches); overridable, e.g.
+        # cache_dtype=jnp.float32 for f32 accumulation studies.
+        self.cache_dtype = (jnp.asarray(params["embed"]["tok"]).dtype
+                            if cache_dtype is None else cache_dtype)
         # trace collection is free inside the scan (a few int32s per step);
         # it feeds GenerationResult.router_trace and the offload meter.
         # Gate on the PLAN's MoE layers (cfg.moe alone isn't enough: e.g.
         # first_layer_dense or recurrent-only patterns yield no MoE FFNs)
-        from ..models.transformer import layer_specs
-        has_moe = any(s.ffn == "moe" for s in layer_specs(cfg))
+        specs = layer_specs(cfg)
+        has_moe = any(s.ffn == "moe" for s in specs)
         self.collect_router_trace = collect_router_trace and has_moe
+        # right-padded prefill is only exact when every mixer attends with
+        # a full-length position-masked cache: recurrent states and local
+        # ring buffers can't invalidate padding after the fact
+        self._pad_prompts = all(s.mixer == "global" for s in specs)
         self._stores = None            # per-MoE-layer ExpertStore
         self._prefetcher = None
         self._offload_policy = "ours"
@@ -90,10 +149,19 @@ class ServeEngine:
             collect_trace=self.collect_router_trace)
 
         @jax.jit
-        def prefill(params, caches, tokens):
+        def prefill(params, caches, tokens, plen):
+            """Prefill a (possibly right-padded) prompt batch.
+
+            ``plen``: (B,) true prompt lengths.  Padding-written cache
+            slots are invalidated (pos = -1) and the last-real-token
+            logits are gathered per row, so two prompt lengths in the
+            same bucket share one compile and decode identically."""
             out = lm.forward(params, tokens, cfg, self._prefill_ctx,
                              caches=caches)
-            return out.logits[:, -1], out.caches
+            caches = mask_cache_padding(cfg, out.caches, plen)
+            logits = jnp.take_along_axis(
+                out.logits, (plen - 1)[:, None, None], axis=1)[:, 0]
+            return logits, caches
 
         @functools.partial(jax.jit,
                            static_argnames=("max_new", "temperature"),
@@ -103,7 +171,9 @@ class ServeEngine:
 
             ``temperature`` is static (it selects the greedy/categorical
             branch in ``sample``) and read per call, so mutating
-            ``scfg.temperature`` between generates takes effect."""
+            ``scfg.temperature`` between generates takes effect.  The
+            final RNG key is returned so chunked serving threads one key
+            stream across scan chunks."""
 
             def body(carry, _):
                 logits, caches, key = carry
@@ -118,12 +188,37 @@ class ServeEngine:
                     ys = ys + (out.trace,)        # (moe_layers, B, k)
                 return (out.logits[:, 0], out.caches, key), ys
 
-            (logits, caches, _), ys = jax.lax.scan(
+            (logits, caches, key), ys = jax.lax.scan(
                 body, (logits0, caches, key), xs=None, length=max_new)
-            return logits, caches, ys
+            return logits, caches, key, ys
+
+        @functools.partial(jax.jit, donate_argnums=(0, 2))
+        def claim(caches, req_caches, logits, req_logits, slot):
+            """Donated slot claim: writes one request's prefilled cache and
+            last-token logits into row ``slot`` in place (``slot`` is a
+            traced scalar, so admissions to any slot share one compile)."""
+            caches = cache_claim_slot(cfg, caches, req_caches, slot)
+            logits = jax.lax.dynamic_update_slice_in_dim(
+                logits, req_logits.astype(logits.dtype), slot, 0)
+            return caches, logits
 
         self._prefill = prefill
         self._decode_loop = decode_loop
+        self._claim = claim
+
+    # -- compile accounting ------------------------------------------------
+    @property
+    def num_compiles(self) -> Dict[str, int]:
+        """Compiled-variant counts of the two jitted entry points (-1 if
+        the jax internal is unavailable) — the regression hook pinning
+        'one bucket, one compile'."""
+        def size(f):
+            try:
+                return int(f._cache_size())
+            except Exception:
+                return -1
+        return {"prefill": size(self._prefill),
+                "decode": size(self._decode_loop)}
 
     # -- offload wiring ----------------------------------------------------
     def attach_offload(self, stacks_by_layer: List[Dict],
@@ -152,21 +247,48 @@ class ServeEngine:
             top_n=self.cfg.moe.quant.top_n_restore,
             prefetcher=self._prefetcher)
 
-    # -- generation --------------------------------------------------------
+    # -- prefill helpers ---------------------------------------------------
+    def _pad_prompt(self, prompt_tokens: np.ndarray) -> np.ndarray:
+        """Right-pad prompts to their length bucket (id 0; the padded cache
+        slots are invalidated after prefill)."""
+        b, plen = prompt_tokens.shape
+        if not self._pad_prompts:
+            return prompt_tokens
+        lp = bucket_len(plen, PROMPT_BUCKET_MIN)
+        if lp == plen:
+            return prompt_tokens
+        out = np.zeros((b, lp), np.int32)
+        out[:, :plen] = prompt_tokens
+        return out
+
+    def _prefill_request(self, req: Request, cache_len: int):
+        """(last-token logits (1, V), batch-1 prefilled cache) for one
+        request, against a fresh cache of the serve run's bucket length."""
+        toks = self._pad_prompt(np.asarray(req.tokens,
+                                           np.int32).reshape(1, -1))
+        caches = init_caches(self.cfg, 1, max_len=cache_len,
+                             dtype=self.cache_dtype)
+        return self._prefill(self.params, caches, jnp.asarray(toks),
+                             jnp.full((1,), req.prompt_len, jnp.int32))
+
+    # -- generation (one fixed batch) --------------------------------------
     def generate(self, prompt_tokens: np.ndarray, max_new: int = 32,
                  seed: int = 0) -> GenerationResult:
         cfg = self.cfg
         b, plen = prompt_tokens.shape
-        caches = init_caches(cfg, b, max_len=plen + max_new + 8,
-                             dtype=jnp.float32)
+        padded = self._pad_prompt(np.asarray(prompt_tokens, np.int32))
+        cache_len = bucket_len(padded.shape[1] + max_new + 1)
+        caches = init_caches(cfg, b, max_len=cache_len,
+                             dtype=self.cache_dtype)
         t0 = time.time()
-        logits, caches = self._prefill(self.params,
-                                       caches, jnp.asarray(prompt_tokens))
+        logits, caches = self._prefill(
+            self.params, caches, jnp.asarray(padded),
+            jnp.full((b,), plen, jnp.int32))
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
         t1 = time.time()
-        logits, caches, ys = self._decode_loop(
+        logits, caches, _key, ys = self._decode_loop(
             self.params, caches, logits, jax.random.key(seed), max_new,
             self.scfg.temperature)
         logits.block_until_ready()
@@ -181,6 +303,115 @@ class ServeEngine:
         return GenerationResult(toks, logprobs, t_prefill, t_decode, max_new,
                                 router_trace=trace, offload_report=report)
 
+    # -- continuous-batching serving ---------------------------------------
+    def serve(self, requests: Iterable[Request], *,
+              num_slots: Optional[int] = None, chunk: Optional[int] = None,
+              seed: int = 0) -> ServeStats:
+        """Serve a request workload through the continuous-batching loop.
+
+        One slot-indexed cache of ``num_slots`` rows and one compiled
+        ``chunk``-step decode scan stay resident for the whole workload;
+        between chunks the scheduler retires finished requests (EOS /
+        max-token) and refills their slots from the arrival queue.
+        Requests with future ``arrival_s`` wait in the queue (offered-load
+        benchmarking); latencies are wall-clock from arrival.
+        """
+        from ..offload.store import (offload_report, replay_decode_trace,
+                                     snapshot_offload)
+        cfg = self.cfg
+        num_slots = num_slots or self.scfg.num_slots
+        chunk = chunk or self.scfg.chunk_steps
+        reqs = list(requests)
+        order = [r.uid for r in reqs]       # results in submission order
+        reqs = sorted(reqs, key=lambda r: r.arrival_s)
+        if not reqs:
+            return ServeStats([], num_slots, chunk, 0.0, 0.0, 0.0, 0, 0)
+        cache_len = bucket_len(
+            max(bucket_len(r.prompt_len, PROMPT_BUCKET_MIN) + r.max_new
+                for r in reqs) + 1)
+        caches = init_caches(cfg, num_slots, max_len=cache_len,
+                             dtype=self.cache_dtype)
+        sched = Scheduler(num_slots)
+        for r in reqs:
+            sched.submit(r)
+
+        key = jax.random.key(seed)
+        logits = None
+        top_n = cfg.moe.quant.top_n_restore if cfg.moe is not None else 1
+        snap = (snapshot_offload(self._stores, self._prefetcher)
+                if self._stores else None)
+        traces: List[np.ndarray] = []
+        prefill_s = decode_s = 0.0
+        chunks = generated = metered_tokens = 0
+        t0 = time.perf_counter()
+        while sched.has_work():
+            now = time.perf_counter() - t0
+            admits = sched.admit(now)
+            if not admits and sched.num_active == 0:
+                # idle: nothing resident, next request hasn't arrived yet
+                gap = max(sched.next_arrival() - now, 0.0)
+                time.sleep(min(gap, 0.25) + 1e-4)
+                continue
+            for slot, req in admits:
+                tp = time.perf_counter()
+                lg, rc = self._prefill_request(req, cache_len)
+                if logits is None:
+                    logits = jnp.zeros((num_slots,) + lg.shape[1:], lg.dtype)
+                caches, logits = self._claim(caches, rc, logits, lg,
+                                             jnp.int32(slot))
+                prefill_s += time.perf_counter() - tp
+
+            td = time.perf_counter()
+            logits, caches, key, ys = self._decode_loop(
+                self.params, caches, logits, key, chunk,
+                self.scfg.temperature)
+            logits.block_until_ready()
+            decode_s += time.perf_counter() - td
+            chunks += 1
+
+            toks = np.asarray(ys[0]).T                       # (S, chunk)
+            lps = np.asarray(ys[1]).T
+            tr = (np.asarray(ys[2]) if self.collect_router_trace else None)
+            uid_map = sched.uid_by_slot()
+            now = time.perf_counter() - t0
+            accepted = sched.record_chunk(toks, lps, tr, now)  # (chunk, S)
+            generated += int(accepted.sum())
+            if tr is not None:
+                masked = np.where(accepted[:, None, :, None], tr,
+                                  -1).astype(tr.dtype)
+                traces.append(masked)
+                if self._stores:
+                    ntok, slot_bytes = replay_decode_trace(
+                        self._stores, masked, policy=self._offload_policy,
+                        top_n=top_n, prefetcher=self._prefetcher)
+                    metered_tokens += ntok
+                    sched.add_slot_bytes(slot_bytes, uid_map)
+
+        total_s = time.perf_counter() - t0
+        report = (offload_report(self._stores, self._prefetcher, snap,
+                                 metered_tokens, self._offload_policy)
+                  if snap is not None and traces else None)
+        by_uid = {res.uid: res for res in sched.finished}
+        results = [by_uid[u] for u in order]
+        return ServeStats(results, num_slots, chunk, total_s, prefill_s,
+                          decode_s, chunks, generated,
+                          offload_report=report,
+                          router_trace=(np.concatenate(traces)
+                                        if traces else None))
+
+    def generate_many(self, prompts: Sequence[np.ndarray],
+                      max_new: int = 32, *,
+                      eos_id: Optional[int] = None,
+                      num_slots: Optional[int] = None,
+                      chunk: Optional[int] = None,
+                      seed: int = 0) -> ServeStats:
+        """Serve a list of ragged prompts (all arriving at t=0) through the
+        continuous-batching loop; results come back in submission order."""
+        reqs = [Request(uid=i, tokens=np.asarray(p, np.int32).reshape(-1),
+                        max_new=max_new, eos_id=eos_id)
+                for i, p in enumerate(prompts)]
+        return self.serve(reqs, num_slots=num_slots, chunk=chunk, seed=seed)
+
     def score(self, tokens: np.ndarray) -> float:
         """Mean next-token NLL (perplexity proxy) under the serving path."""
         ctx = make_context(self.cfg, "train", quantized=self.quantized,
@@ -194,6 +425,17 @@ class ServeEngine:
         return float(jnp.mean(lse - sel))
 
 
+@functools.lru_cache(maxsize=64)
+def _trace_forward(cfg: ModelConfig, quantized: bool,
+                   kernel_impl: Optional[str]):
+    """One jitted trace-collecting forward per (cfg, quantized, impl) —
+    re-jitting a fresh lambda per call would recompile every time."""
+    ctx = make_context(cfg, "train", quantized=quantized,
+                       exact_capacity=True, collect_trace=True,
+                       kernel_impl=kernel_impl)
+    return jax.jit(lambda p, t: lm.forward(p, t, cfg, ctx).trace)
+
+
 def router_trace(cfg: ModelConfig, params, tokens: np.ndarray,
                  quantized: bool = False,
                  kernel_impl: Optional[str] = None) -> np.ndarray:
@@ -201,12 +443,11 @@ def router_trace(cfg: ModelConfig, params, tokens: np.ndarray,
 
     Runs the jitted forward pass with ``collect_trace`` — the trace is a
     first-class model output, so this works under jit/scan with no
-    ``disable_jit`` or ``moe.route`` hook.
+    ``disable_jit`` or ``moe.route`` hook.  The compiled function is
+    cached per (cfg, quantized, kernel_impl), so repeated exports reuse
+    one executable instead of recompiling a fresh lambda per call.
     """
-    ctx = make_context(cfg, "train", quantized=quantized,
-                       exact_capacity=True, collect_trace=True,
-                       kernel_impl=kernel_impl)
-    out = jax.jit(lambda p, t: lm.forward(p, t, cfg, ctx).trace)(
-        params, jnp.asarray(tokens))
+    fn = _trace_forward(cfg, quantized, kernel_impl)
+    out = fn(params, jnp.asarray(tokens))
     # (moe_layers, T, k) -> (T, layers, k)
     return np.asarray(out).transpose(1, 0, 2)

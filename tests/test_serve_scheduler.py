@@ -1,0 +1,314 @@
+"""Continuous-batching scheduler + bucketed-compile regressions.
+
+Covers the request lifecycle (admission / refill order, per-request
+EOS & max-token termination), slot-indexed cache claim/reset, inactive-
+slot trace masking, the one-bucket-one-compile guarantee, padded-prefill
+exactness, cache-dtype propagation, the cached router_trace jit, and the
+byte-for-byte offload-report equivalence between a scheduled run and the
+same requests as one fixed batch.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, MoEConfig, QuantConfig
+from repro.core import compress_ffn_weights
+from repro.models import forward, init_params
+from repro.models.transformer import (ExecContext, cache_claim_slot,
+                                      cache_reset_slot, init_caches,
+                                      unstack_params)
+from repro.serve import Request, Scheduler, ServeEngine, bucket_len, \
+    router_trace
+
+
+def moe_cfg(layers=2):
+    return ModelConfig(
+        name="tiny-moe", family="moe", num_layers=layers, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=128,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2, rank_budget=16,
+                                        top_n_restore=1, hqq_iters=3)))
+
+
+def compress(cfg, params):
+    """(cfg', qparams, stacks_by_layer) with every MoE layer compressed."""
+    up = unstack_params(params, cfg)
+    segs, stacks_by_layer = [], []
+    for seg in up["segments"]:
+        p = dict(seg[0])
+        mp = dict(p["moe"])
+        stacks, _ = compress_ffn_weights(mp["w1"], mp["w2"], mp["w3"],
+                                         cfg.moe.quant)
+        stacks_by_layer.append(stacks)
+        mp["stacks"] = stacks
+        for k in ("w1", "w2", "w3"):
+            mp.pop(k)
+        p["moe"] = mp
+        segs.append((p,))
+    q = dict(up)
+    q["segments"] = tuple(segs)
+    return dataclasses.replace(cfg, force_unroll_plan=True), q, \
+        stacks_by_layer
+
+
+# ---------------------------------------------------------------------------
+# pure scheduler bookkeeping
+# ---------------------------------------------------------------------------
+
+def _req(uid, plen=4, max_new=3, eos=None, arrival=0.0):
+    return Request(uid=uid, tokens=np.zeros(plen, np.int32),
+                   max_new=max_new, eos_id=eos, arrival_s=arrival)
+
+
+def test_scheduler_admission_and_refill_order():
+    s = Scheduler(2)
+    for i in range(5):
+        s.submit(_req(i, max_new=2))
+    assert [(i, r.uid) for i, r in s.admit(0.0)] == [(0, 0), (1, 1)]
+    assert s.admit(0.0) == []                      # no free slot
+    # chunk of 3 steps: max_new=2 retires both mid-chunk; step 3 rejected
+    toks = np.arange(6).reshape(2, 3)
+    lps = np.zeros((2, 3), np.float32)
+    accepted = s.record_chunk(toks, lps, None, now=1.0)
+    np.testing.assert_array_equal(accepted,
+                                  [[True, True], [True, True],
+                                   [False, False]])
+    assert [r.uid for r in s.finished] == [0, 1]
+    assert all(r.finish_reason == "length" and r.gen_tokens == 2
+               for r in s.finished)
+    # freed slots refill FIFO: 2 and 3, then 4 after another retirement
+    assert [(i, r.uid) for i, r in s.admit(1.0)] == [(0, 2), (1, 3)]
+    s.record_chunk(toks, lps, None, now=2.0)
+    assert [(i, r.uid) for i, r in s.admit(2.0)] == [(0, 4)]
+    assert s.has_work()
+    s.record_chunk(toks[:1], lps[:1], None, now=3.0)
+    assert not s.has_work()
+    assert [r.uid for r in s.finished] == [0, 1, 2, 3, 4]
+
+
+def test_scheduler_zero_token_budget():
+    s = Scheduler(1)
+    s.submit(_req(0, max_new=0))
+    s.admit(0.0)
+    acc = s.record_chunk(np.zeros((1, 2), np.int64),
+                         np.zeros((1, 2), np.float32), None, 1.0)
+    assert not acc.any()
+    assert s.finished[0].gen_tokens == 0
+    assert s.finished[0].finish_reason == "length"
+
+
+def test_scheduler_eos_and_arrival_gating():
+    s = Scheduler(1)
+    s.submit(_req(0, max_new=8, eos=7))
+    s.submit(_req(1, max_new=8, arrival=100.0))
+    s.admit(0.0)
+    toks = np.array([[3, 7, 5]])                   # EOS at step 1
+    accepted = s.record_chunk(toks, np.zeros((1, 3), np.float32), None, 1.0)
+    np.testing.assert_array_equal(accepted, [[True], [True], [False]])
+    res = s.finished[0]
+    assert res.finish_reason == "eos"
+    assert res.tokens.tolist() == [3, 7]           # EOS included, then stop
+    assert s.admit(1.0) == []                      # uid 1 hasn't arrived
+    assert s.next_arrival() == 100.0
+    assert [(i, r.uid) for i, r in s.admit(100.5)] == [(0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# slot-indexed cache ops
+# ---------------------------------------------------------------------------
+
+def test_cache_claim_and_reset_slot():
+    cfg = moe_cfg(layers=2)        # one scanned segment (repeat=2)
+    caches = init_caches(cfg, 3, max_len=32, dtype=jnp.float32)
+    req = jax.tree.map(jnp.ones_like, init_caches(cfg, 1, max_len=32,
+                                                  dtype=jnp.float32))
+    claimed = cache_claim_slot(cfg, caches, req, 1)
+    layer = claimed["segments"][0][0]              # leaves (repeat, B, ...)
+    assert float(layer["k"][:, 1].min()) == 1.0    # claimed row written
+    assert float(layer["k"][:, 0].max()) == 0.0    # neighbours untouched
+    assert int(layer["pos"][0, 1, 0]) == 1
+    assert int(layer["pos"][0, 0, 0]) == -1
+    assert claimed["pos"].tolist() == [0, 1, 0]
+    reset = cache_reset_slot(cfg, claimed, 1)
+    layer = reset["segments"][0][0]
+    assert float(layer["k"][:, 1].max()) == 0.0
+    assert int(layer["pos"][0, 1, 0]) == -1        # back to empty sentinel
+    assert reset["pos"].tolist() == [0, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# engine: buckets, dtype, padded prefill
+# ---------------------------------------------------------------------------
+
+def test_bucket_len():
+    assert bucket_len(1) == 32 and bucket_len(33) == 64
+    assert bucket_len(64) == 64 and bucket_len(65) == 128
+    assert bucket_len(5, minimum=16) == 16
+
+
+def test_same_bucket_single_compile():
+    """Two prompt lengths (and a scheduled ragged run) in one bucket must
+    compile each jitted entry point exactly once."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params)
+    eng.generate(np.zeros((1, 5), np.int32), max_new=4)
+    first = eng.num_compiles
+    eng.generate(np.zeros((1, 7), np.int32), max_new=4)
+    eng.generate(np.zeros((1, 9), np.int32), max_new=4)
+    assert first == {"prefill": 1, "decode": 1}
+    assert eng.num_compiles == first
+
+    eng2 = ServeEngine(cfg, params)
+    rng = np.random.default_rng(0)
+    stats = eng2.generate_many(
+        [rng.integers(0, 128, (int(l),), dtype=np.int32)
+         for l in (4, 7, 9, 12, 5)], max_new=5, num_slots=2, chunk=4)
+    assert [r.gen_tokens for r in stats.results] == [5] * 5
+    assert eng2.num_compiles == {"prefill": 1, "decode": 1}
+
+
+def test_cache_dtype_follows_params():
+    cfg = moe_cfg()
+    p32 = init_params(jax.random.key(0), cfg, jnp.float32)
+    assert ServeEngine(cfg, p32).cache_dtype == jnp.float32
+    pbf = init_params(jax.random.key(0), cfg, jnp.bfloat16)
+    eng = ServeEngine(cfg, pbf)
+    assert eng.cache_dtype == jnp.bfloat16
+    assert ServeEngine(cfg, pbf,
+                       cache_dtype=jnp.float32).cache_dtype == jnp.float32
+    res = eng.generate(np.zeros((1, 4), np.int32), max_new=3)
+    assert res.tokens.shape == (1, 3)
+
+
+def test_padded_prefill_matches_unpadded_oracle():
+    """Right-padded bucketed prefill + pos masking must decode exactly
+    like an unpadded full-forward greedy loop."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(1), cfg, jnp.float32)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 128, (1, 6), dtype=np.int32)  # pads to 16
+    ctx = ExecContext(mode="train", exact_capacity=True)
+    seq, oracle = prompt.copy(), []
+    for _ in range(5):
+        out = forward(params, jnp.asarray(seq), cfg, ctx)
+        nxt = int(jnp.argmax(out.logits[0, -1]))
+        oracle.append(nxt)
+        seq = np.concatenate([seq, [[nxt]]], axis=1)
+    got = ServeEngine(cfg, params).generate(prompt, max_new=5)
+    assert got.tokens[0].tolist() == oracle
+
+
+# ---------------------------------------------------------------------------
+# engine: scheduled serving
+# ---------------------------------------------------------------------------
+
+def test_serve_per_request_termination():
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(2), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 128, (6,), dtype=np.int32) for _ in range(3)]
+    # greedy reference run (no EOS): learn what request 0 will emit
+    ref = eng.generate_many(prompts, max_new=6, num_slots=2, chunk=3)
+    eos = int(ref.results[0].tokens[2])
+    reqs = [Request(uid=0, tokens=prompts[0], max_new=6, eos_id=eos),
+            Request(uid=1, tokens=prompts[1], max_new=4),
+            Request(uid=2, tokens=prompts[2], max_new=6)]
+    stats = eng.serve(reqs, num_slots=2, chunk=3)
+    r0, r1, r2 = stats.results
+    assert r0.finish_reason == "eos" and r0.gen_tokens == 3
+    assert int(r0.tokens[-1]) == eos
+    assert r0.tokens.tolist() == ref.results[0].tokens[:3].tolist()
+    assert r1.finish_reason == "length" and r1.gen_tokens == 4
+    assert r2.finish_reason == "length" and r2.gen_tokens == 6
+    assert stats.generated_tokens == 3 + 4 + 6
+    # per-request traces follow the (gen, layers, k) convention
+    assert r0.trace.shape == (3, 2, 2)
+    assert r2.trace.shape == (6, 2, 2)
+
+
+def test_serve_results_in_submission_order():
+    """Results come back in submission order even when arrival times are
+    not monotone with it (serving order follows arrivals)."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(2), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params)
+    reqs = [Request(uid=10, tokens=np.zeros(9, np.int32), max_new=2,
+                    arrival_s=0.3),
+            Request(uid=11, tokens=np.zeros(4, np.int32), max_new=3,
+                    arrival_s=0.0)]
+    stats = eng.serve(reqs, num_slots=1, chunk=2)
+    assert [r.uid for r in stats.results] == [10, 11]
+    assert [r.prompt_len for r in stats.results] == [9, 4]
+    assert [r.gen_tokens for r in stats.results] == [2, 3]
+
+
+def test_serve_inactive_slot_trace_masking():
+    """Empty / retired slots must appear as -1 in the aggregate trace and
+    be excluded from the accepted-token count."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(2), cfg, jnp.float32)
+    eng = ServeEngine(cfg, params)
+    reqs = [Request(uid=0, tokens=np.zeros(4, np.int32), max_new=5),
+            Request(uid=1, tokens=np.zeros(6, np.int32), max_new=2)]
+    stats = eng.serve(reqs, num_slots=3, chunk=4)      # slot 2 never used
+    tr = stats.router_trace                 # (steps, layers, slots, k)
+    assert tr.shape[2] == 3
+    assert (tr[:, :, 2, :] == -1).all()                # never-active slot
+    active0 = (tr[:, 0, 0, 0] >= 0).sum()
+    active1 = (tr[:, 0, 1, 0] >= 0).sum()
+    assert {int(active0), int(active1)} == {5, 2}      # masked after retire
+    assert stats.generated_tokens == 7
+    valid = tr[tr >= 0]
+    assert valid.size == 7 * cfg.num_layers * cfg.moe.top_k
+
+
+def test_serve_matches_fixed_batch_offload_report():
+    """4 scheduled requests on 4 slots == the same 4 prompts as one fixed
+    batch: identical tokens, identical router trace, byte-for-byte
+    identical offload report."""
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(4), cfg, jnp.float32)
+    cfg_q, qparams, stacks = compress(cfg, params)
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, 128, (4, 6), dtype=np.int32)
+
+    fixed = ServeEngine(cfg_q, qparams, quantized=True)
+    fixed.attach_offload(stacks, policy="ours", cache_capacity=2)
+    ra = fixed.generate(prompts, max_new=8)
+
+    sched = ServeEngine(cfg_q, qparams, quantized=True)
+    sched.attach_offload(stacks, policy="ours", cache_capacity=2)
+    sb = sched.generate_many(list(prompts), max_new=8, num_slots=4, chunk=4)
+
+    np.testing.assert_array_equal(
+        ra.tokens, np.stack([r.tokens for r in sb.results]))
+    np.testing.assert_array_equal(ra.router_trace, sb.router_trace)
+    assert ra.offload_report == sb.offload_report
+    assert sb.offload_report["total_bytes"] > 0
+    # per-request attribution covers all demand+compensator traffic
+    rep = sb.offload_report
+    assert (sum(r.offload_bytes for r in sb.results)
+            == rep["demand_bytes"] + rep["compensator_bytes"])
+
+
+def test_router_trace_compiled_fn_cached():
+    """router_trace must reuse one compiled forward per (cfg, quantized,
+    kernel_impl) instead of re-jitting a fresh lambda every call."""
+    from repro.serve.engine import _trace_forward
+    cfg = moe_cfg()
+    params = init_params(jax.random.key(6), cfg, jnp.float32)
+    tokens = np.zeros((1, 8), np.int32)
+    _trace_forward.cache_clear()
+    a = router_trace(cfg, params, tokens)
+    misses = _trace_forward.cache_info().misses
+    b = router_trace(cfg, params, tokens)
+    info = _trace_forward.cache_info()
+    assert info.misses == misses and info.hits >= 1
+    np.testing.assert_array_equal(a, b)
+    assert _trace_forward(cfg, False, None)._cache_size() == 1
