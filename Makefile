@@ -3,11 +3,13 @@
 #   make tier1   fast correctness gate (excludes @pytest.mark.slow)
 #   make test    full suite, including slow/benchmarks-adjacent tests
 #   make bench-smoke     quick continuous-batching serving sweep
-#   make serve-example   live-decode offload report from the serve engine
+#   make bench-frontier  bandwidth-budget frontier sweep (controller)
+#   make docs-check      every doc cross-reference resolves
+#   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 test bench-smoke serve-example
+.PHONY: tier1 test bench-smoke bench-frontier docs-check serve-example
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -17,6 +19,12 @@ test:
 
 bench-smoke:
 	$(PY) benchmarks/bench_serving.py --quick
+
+bench-frontier:
+	$(PY) benchmarks/bench_serving.py --quick --frontier
+
+docs-check:
+	python tools/docs_check.py
 
 serve-example:
 	$(PY) examples/serve_offload.py

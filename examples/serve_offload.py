@@ -1,28 +1,34 @@
 """Serving example: continuous-batching generation with live offload
-metering.
+metering and the runtime bandwidth-budget controller.
 
-Loads the quickstart-style compressed MoE and serves a ragged multi-
-request workload through the continuous-batching scheduler: more
-requests than decode slots, slots refilled from the queue between scan
-chunks, so the per-layer ``ExpertStore`` LRU + layer-ahead prefetcher
-are metered under genuine multi-request contention — bytes/token
-(demand + compensator + prefetch), cache hit rate, and prefetch accuracy
-come from live interleaved decode, not a replayed simulator trace.  The
-fig-7 event-driven simulator then projects one request's live trace onto
-the paper's GPU-only and GPU-NDP hardware profiles.
+Trains and compresses a tiny MoE, then drives the scheduler/chunk
+serving model end to end: requests queue into a fixed pool of decode
+slots, one compiled ``lax.scan`` chunk decodes all slots at once, and
+between chunks the scheduler retires finished requests and refills
+their slots — compiled shapes never change while traffic comes and
+goes.  Because there are more requests than slots, the per-layer
+``ExpertStore`` LRU + layer-ahead prefetcher are metered under genuine
+multi-request contention: bytes/token (demand + compensator +
+prefetch), cache hit rate, and prefetch accuracy all come from live
+interleaved decode, not a replayed simulator trace.
+
+The same workload is then re-served under a wire-byte budget: the
+bandwidth controller retunes the per-layer (top_n, rank_cap)
+restoration plan between chunks until the metered bytes/token meet the
+budget (no recompile — the plan is traced data).  Finally the fig-7
+event-driven simulator projects one request's live trace onto the
+paper's GPU-only and GPU-NDP hardware profiles.
 
 Run:  PYTHONPATH=src python examples/serve_offload.py
 """
-import dataclasses
-
 import jax
 import numpy as np
 
-from repro.config import ModelConfig, MoEConfig, QuantConfig, TrainConfig
-from repro.core import compress_ffn_weights
+from repro.config import (ControlConfig, ModelConfig, MoEConfig, QuantConfig,
+                          TrainConfig)
 from repro.core.quantize import packed_nbytes
 from repro.models import init_params
-from repro.models.transformer import unstack_params
+from repro.models.transformer import compress_moe_params
 from repro.offload import (GPU_NDP, GPU_ONLY, LayerSpecSim, simulate_decode)
 from repro.serve import Request, ServeEngine
 from repro.train import train
@@ -41,23 +47,8 @@ def main():
                 log_every=0, batch_shape=(8, 128))
     params = res.state.params
 
-    # --- compress for serving -------------------------------------------
-    up = unstack_params(params, cfg)
-    cfg_q = dataclasses.replace(cfg, force_unroll_plan=True)
-    segs = []
-    stacks_by_layer = []
-    for seg in up["segments"]:
-        p = dict(seg[0])
-        mp = dict(p["moe"])
-        stacks, _ = compress_ffn_weights(mp["w1"], mp["w2"], mp["w3"],
-                                         cfg.moe.quant)
-        stacks_by_layer.append(stacks)
-        mp["stacks"] = stacks
-        [mp.pop(k) for k in ("w1", "w2", "w3")]
-        p["moe"] = mp
-        segs.append((p,))
-    qparams = dict(up)
-    qparams["segments"] = tuple(segs)
+    # --- compress for serving (offline pipeline, DESIGN.md) --------------
+    qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
 
     # --- continuous-batching serving + live offload metering -------------
     # 6 ragged requests on 2 decode slots: the scheduler interleaves them,
@@ -88,6 +79,24 @@ def main():
         print(f"  req {r.uid}: {r.prompt_len}+{r.gen_tokens} tokens, "
               f"{r.offload_bytes / max(r.gen_tokens, 1) / 2**20:.2f} "
               f"MiB/token attributed, latency {r.latency_s * 1e3:.0f}ms")
+
+    # --- the same workload under a bandwidth budget ----------------------
+    # fresh stores (comparable counters), then ask the controller for 60%
+    # of the static operating point: it trims per-layer (top_n, rank_cap)
+    # between scan chunks until the metered bytes/token meet the budget
+    budget = 0.6 * rep["bytes_per_token"]
+    eng.attach_offload(stacks_by_layer, policy="ours", cache_capacity=2)
+    eng.attach_controller(ControlConfig(enabled=True, bytes_per_token=budget))
+    stats_b = eng.serve(reqs, num_slots=2, chunk=4)
+    hist = eng.controller.history
+    tail = hist[len(hist) // 2:] or hist
+    meas = float(np.mean([h.bytes_per_token for h in tail]))
+    plan = eng.controller.plan().summary()
+    print(f"budgeted ({budget / 2**20:.2f} MiB/token): converged tail "
+          f"{meas / 2**20:.2f} MiB/token after {len(hist)} chunk updates, "
+          f"plan mean top_n {plan['mean_top_n']:.2f} "
+          f"rank_cap {plan['mean_rank_cap']:.1f}, "
+          f"{stats_b.tokens_per_s:.1f} tok/s")
 
     # --- projected device throughput (paper fig-7 hardware profiles) -----
     # feed the simulator the LIVE decode trace of one scheduled request

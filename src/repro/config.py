@@ -288,6 +288,44 @@ class TrainConfig:
 
 
 @dataclass(frozen=True)
+class ControlConfig:
+    """Runtime bandwidth-budget controller (serve/controller.py).
+
+    Between scheduler scan chunks the controller compares the metered
+    offload wire bytes/token against a budget and adjusts a per-layer
+    ``(top_n, rank_cap)`` restoration plan.  The budget is either
+    ``bytes_per_token`` directly, or derived from a ``tokens_per_s``
+    SLO over ``link_bw`` (bytes/token the link can afford at that rate).
+    Both zero -> no budget: the plan stays pinned at the static
+    ``QuantConfig.top_n_restore`` / full-rank point.
+    """
+    enabled: bool = False
+    bytes_per_token: float = 0.0       # wire-byte budget per decoded token
+    tokens_per_s: float = 0.0          # alternative SLO: link_bw / tok_s
+    link_bw: float = 25e9              # link bandwidth for the SLO form
+    gain: float = 0.5                  # integral step: fraction of the
+                                       # ladder crossed at 100% budget error
+    deadband: float = 0.05             # |relative error| tolerated w/o moves
+    ema: float = 0.5                   # weight of the newest bytes/token
+                                       # sample (per-chunk LRU noise filter)
+    max_step_frac: float = 0.125       # per-update ladder step ceiling —
+                                       # large jumps limit-cycle on noisy
+                                       # cache dynamics instead of settling
+    min_top_n: int = 0                 # plan floor (0 = pure low-bit)
+    max_top_n: int = -1                # plan ceiling (-1 = router top_k)
+    rank_fracs: Tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+
+    @property
+    def target_bytes_per_token(self) -> float:
+        """Resolved budget in bytes/token (0.0 = unconstrained)."""
+        if self.bytes_per_token > 0:
+            return self.bytes_per_token
+        if self.tokens_per_s > 0:
+            return self.link_bw / self.tokens_per_s
+        return 0.0
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     max_seq_len: int = 4096
     prefill_chunk: int = 512
@@ -300,6 +338,10 @@ class ServeConfig:
     # (the scheduler refills completed slots between fixed-shape chunks)
     num_slots: int = 4
     chunk_steps: int = 8
+    # adaptive top-n restoration under a bandwidth budget; when enabled,
+    # ServeEngine.attach_offload auto-attaches the controller (the
+    # controller feeds on the offload byte meters)
+    control: ControlConfig = field(default_factory=ControlConfig)
 
 
 @dataclass(frozen=True)

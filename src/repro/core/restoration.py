@@ -50,11 +50,16 @@ def compensated_expert_ffn(x: jax.Array, stack_w1: CompressedExpertStack,
                            stack_w2: CompressedExpertStack,
                            comp_mask: jax.Array,
                            act=jax.nn.silu,
-                           dtype=jnp.bfloat16) -> jax.Array:
+                           dtype=jnp.bfloat16,
+                           rank_cap: Optional[jax.Array] = None) -> jax.Array:
     """Gated-FFN over *expert-stacked* inputs with masked compensation.
 
     x:         (E, C, d)   tokens dispatched per expert (capacity C)
     comp_mask: (E, C)      1.0 where this expert is within the token's top-n
+    rank_cap:  traced scalar ceiling on the compensator rank (None = full
+               padded rank).  Factors are rank-padded with true ranks
+               tracked, so the cap is a 0/1 mask over the rank-space
+               activation; cap >= the padded rank is bit-exact identity.
     returns    (E, C, d)
 
     Reference (einsum) composition; the Pallas path fuses dequant+lowrank
@@ -73,6 +78,8 @@ def compensated_expert_ffn(x: jax.Array, stack_w1: CompressedExpertStack,
         v = (stack.v.astype(jnp.float32) * stack.v_scale).astype(dt)
         xu = jnp.einsum("eck,ekr->ecr", inp * m, u,
                         preferred_element_type=jnp.float32).astype(dt)
+        if rank_cap is not None:
+            xu = xu * (jnp.arange(stack.pad_rank) < rank_cap).astype(dt)
         return y + jnp.einsum("ecr,ern->ecn", xu, v,
                               preferred_element_type=jnp.float32).astype(dt)
 

@@ -100,24 +100,32 @@ def lowrank_comp_matmul(x: jax.Array, qt: QuantizedTensor,
                         u_scale: jax.Array, v_scale: jax.Array,
                         mask: Optional[jax.Array] = None, *,
                         impl: Optional[str] = None, out_dtype=None,
+                        rank_cap: Optional[jax.Array] = None,
                         bm: int = 128, bn: int = 256, bk: int = 512
                         ) -> jax.Array:
     """Router-guided compensated matmul (paper §3.2).
 
     y = x @ dequant(qt) + ((x * mask) @ (U u_s)) diag(v_s) @ V_codes
+
+    ``rank_cap`` (traced scalar, None = full padded rank) zeroes rank
+    dims >= cap in the rank-space activation — the bandwidth controller's
+    runtime rank truncation, a mask rather than a re-SVD, applied before
+    the kernel so the fused Pallas path needs no shape change.
     """
     out_dtype = out_dtype or x.dtype
     impl = _pick(impl)
     if impl == "ref":
         return ref_ops.lowrank_comp_matmul_ref(
             x, qt.planes, qt.scale, qt.zero, qt.bits, qt.group_size,
-            u, v, u_scale, v_scale, mask, out_dtype)
+            u, v, u_scale, v_scale, mask, out_dtype, rank_cap=rank_cap)
     # rank-space activation with both factor scales folded in (rank-r cost)
     xf = x.astype(jnp.float32)
     if mask is not None:
         xf = xf * mask[:, None].astype(jnp.float32)
     ud = u.astype(jnp.float32) * u_scale          # (K, R)
     xu = jnp.dot(xf, ud, preferred_element_type=jnp.float32)
+    if rank_cap is not None:
+        xu = xu * (jnp.arange(u.shape[-1]) < rank_cap).astype(jnp.float32)
     xu = xu * v_scale[None, :, 0]                 # fold (R,1) v_scale
     k, n = qt.shape
     bm, bn, bk = _tile_sizes(x.shape[0], k, n, bm, bn, bk)
@@ -131,11 +139,14 @@ def lowrank_comp_matmul(x: jax.Array, qt: QuantizedTensor,
 
 
 def compensated_matmul_stack(x: jax.Array, stack, mask: jax.Array, *,
-                             impl: Optional[str] = None, out_dtype=None
+                             impl: Optional[str] = None, out_dtype=None,
+                             rank_cap: Optional[jax.Array] = None
                              ) -> jax.Array:
     """vmap of lowrank_comp_matmul over an expert stack.
 
     x: (E, C, K), stack: CompressedExpertStack, mask: (E, C) -> (E, C, N).
+    ``rank_cap`` (traced scalar shared by all experts of the layer) caps
+    the compensator rank via the padded-factor mask.
     """
     out_dtype = out_dtype or x.dtype
 
@@ -143,7 +154,7 @@ def compensated_matmul_stack(x: jax.Array, stack, mask: jax.Array, *,
         qt = QuantizedTensor(planes, scale, zero, stack.bits,
                              stack.group_size, stack.shape[1:])
         return lowrank_comp_matmul(xe, qt, u, v, us, vs, me, impl=impl,
-                                   out_dtype=out_dtype)
+                                   out_dtype=out_dtype, rank_cap=rank_cap)
 
     return jax.vmap(one)(x, stack.planes, stack.scale, stack.zero,
                          stack.u, stack.v, stack.u_scale, stack.v_scale,

@@ -42,17 +42,24 @@ def lowrank_comp_matmul_ref(x: jax.Array, planes: Tuple[jax.Array, ...],
                             u: jax.Array, v: jax.Array,
                             u_scale: jax.Array, v_scale: jax.Array,
                             mask: Optional[jax.Array],
-                            out_dtype=jnp.float32) -> jax.Array:
+                            out_dtype=jnp.float32,
+                            rank_cap: Optional[jax.Array] = None) -> jax.Array:
     """y = x @ dequant(Wq) + ((x*mask) @ U) @ V  — paper §3.2 restoration.
 
     u: (K, R) codes, u_scale: (1, R);  v: (R, N) codes, v_scale: (R, 1);
-    mask: (M,) 0/1 per-token compensation gate (None = all tokens).
+    mask: (M,) 0/1 per-token compensation gate (None = all tokens);
+    rank_cap: traced scalar ceiling on the compensator rank (None = R).
+    Factors are rank-padded, so the cap is a 0/1 mask over the rank-space
+    activation — rank_cap >= the true rank is bit-exact identity.
     """
     y = quant_matmul_ref(x, planes, scale, zero, bits, group_size)
     xf = x.astype(jnp.float32)
     if mask is not None:
         xf = xf * mask[:, None].astype(jnp.float32)
     ud = u.astype(jnp.float32) * u_scale
+    xu = jnp.dot(xf, ud, preferred_element_type=jnp.float32)
+    if rank_cap is not None:
+        xu = xu * (jnp.arange(u.shape[-1]) < rank_cap).astype(jnp.float32)
     vd = v.astype(jnp.float32) * v_scale
-    y = y + jnp.dot(jnp.dot(xf, ud), vd, preferred_element_type=jnp.float32)
+    y = y + jnp.dot(xu, vd, preferred_element_type=jnp.float32)
     return y.astype(out_dtype)

@@ -2,14 +2,24 @@
 
 Boots the reduced config on CPU (or full config on a real pod), randomly
 initializes or restores weights, and serves synthetic traffic through
-the engine:
+the continuous-batching engine — one slot-indexed KV cache and one
+compiled ``lax.scan`` decode chunk stay resident while the scheduler
+admits, retires, and refills requests between chunks:
 
 - default: one fixed batch (``--batch`` x ``--prompt-len``), reporting
   prefill latency and decode tokens/s;
-- ``--requests N``: a continuous-batching workload of N ragged-length
-  requests (optionally arriving at ``--rate`` req/s) scheduled onto
-  ``--slots`` decode slots in ``--chunk``-step scan chunks, reporting
-  throughput and p50/p95 request latency.
+- ``--requests N``: a scheduled workload of N ragged-length requests
+  (optionally arriving at ``--rate`` req/s) onto ``--slots`` decode
+  slots in ``--chunk``-step scan chunks, reporting throughput and
+  p50/p95 request latency;
+- ``--offload``: compress the MoE experts offline (BEAM-LRC: low-bit +
+  rank-padded compensators) and serve from byte-metered host-side
+  expert stores, reporting live wire bytes/token and cache hit rate;
+- ``--bytes-per-token B`` / ``--target-tokens-per-s T`` (with
+  ``--offload``): close the loop with the runtime bandwidth-budget
+  controller — between scan chunks it retunes the per-layer
+  (top_n, rank_cap) restoration plan to meet the budget (B directly, or
+  the bytes/token a ``--link-bw`` link affords at T tokens/s).
 """
 import argparse
 
@@ -17,25 +27,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..config import ControlConfig
 from ..registry import get_config
 from ..models import init_params
+from ..models.transformer import compress_moe_params
 from ..serve import ServeEngine, synthetic_workload
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="serve synthetic traffic through the continuous-"
+                    "batching engine (scheduler + fixed-shape scan chunks)")
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="fixed-batch mode: rows decoded side by side")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--requests", type=int, default=0,
-                    help="serve N scheduled requests instead of one batch")
+                    help="schedule N ragged requests through the slot pool "
+                         "instead of one fixed batch")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="offered load in requests/s (0 = all at t=0)")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-slot pool size (compiled batch rows)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per scan chunk; the scheduler "
+                         "refills finished slots between chunks")
     ap.add_argument("--seed", type=int, default=0)
+    # -- offload + bandwidth-budget controller ---------------------------
+    ap.add_argument("--offload", action="store_true",
+                    help="compress MoE experts and meter offloaded serving "
+                         "(wire bytes, cache hits) from live decode routing")
+    ap.add_argument("--cache-experts", type=int, default=4,
+                    help="device-resident expert LRU capacity per layer")
+    ap.add_argument("--bytes-per-token", type=float, default=0.0,
+                    help="bandwidth budget: adapt per-layer (top_n, "
+                         "rank_cap) to this many wire bytes per token")
+    ap.add_argument("--target-tokens-per-s", type=float, default=0.0,
+                    help="bandwidth SLO: budget = link-bw / target tok/s")
+    ap.add_argument("--link-bw", type=float, default=25e9,
+                    help="link bandwidth (bytes/s) for --target-tokens-per-s")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_config)
@@ -43,7 +75,25 @@ def main():
         print(f"note: {cfg.name} needs frontend inputs; serving the "
               f"text-only path")
     params = init_params(jax.random.key(0), cfg, jnp.float32)
-    eng = ServeEngine(cfg, params)
+
+    want_budget = args.bytes_per_token > 0 or args.target_tokens_per_s > 0
+    if want_budget and not args.offload:
+        ap.error("--bytes-per-token/--target-tokens-per-s need --offload "
+                 "(the controller feeds on the offload byte meters)")
+    if args.offload:
+        if cfg.moe is None:
+            ap.error(f"--offload needs an MoE arch; {cfg.name} has none")
+        qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
+        eng = ServeEngine(cfg_q, qparams, quantized=True)
+        eng.attach_offload(stacks_by_layer, policy="ours",
+                           cache_capacity=args.cache_experts)
+        if want_budget:
+            eng.attach_controller(ControlConfig(
+                enabled=True, bytes_per_token=args.bytes_per_token,
+                tokens_per_s=args.target_tokens_per_s,
+                link_bw=args.link_bw))
+    else:
+        eng = ServeEngine(cfg, params)
 
     if args.requests > 0:
         reqs = synthetic_workload(
@@ -60,6 +110,23 @@ def main():
               f"latency p50 {lat[50.0] * 1e3:.0f}ms "
               f"p95 {lat[95.0] * 1e3:.0f}ms, "
               f"{stats.chunks} chunks, compiles {eng.num_compiles}")
+        rep = stats.offload_report
+        if rep is not None:
+            print(f"offload ({rep['policy']}): "
+                  f"{rep['bytes_per_token'] / 2**10:.1f} KiB/token, "
+                  f"cache hit {rep['hit_rate']:.0%}, prefetch accuracy "
+                  f"{rep['prefetch_accuracy']:.0%}")
+        if eng.controller is not None and eng.controller.history:
+            c = eng.controller
+            tail = c.history[len(c.history) // 2:]
+            meas = float(np.mean([h.bytes_per_token for h in tail]))
+            plan = c.plan().summary()
+            print(f"controller: budget "
+                  f"{c.ccfg.target_bytes_per_token / 2**10:.1f} KiB/token, "
+                  f"converged tail {meas / 2**10:.1f} KiB/token "
+                  f"({len(c.history)} updates), plan mean top_n "
+                  f"{plan['mean_top_n']:.2f} rank_cap "
+                  f"{plan['mean_rank_cap']:.1f}")
         return
 
     prompts = np.random.default_rng(args.seed).integers(
@@ -68,6 +135,11 @@ def main():
     print(f"{cfg.name}: prefill {res.prefill_s * 1e3:.0f}ms, "
           f"decode {res.decode_tokens_per_s:.1f} tok/s "
           f"({args.batch}x{args.max_new} tokens)")
+    if res.offload_report is not None:
+        rep = res.offload_report
+        print(f"offload ({rep['policy']}): "
+              f"{rep['bytes_per_token'] / 2**10:.1f} KiB/token, "
+              f"cache hit {rep['hit_rate']:.0%}")
 
 
 if __name__ == "__main__":

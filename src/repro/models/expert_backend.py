@@ -41,14 +41,17 @@ def expert_ffn_dense(xe: jax.Array, w1, w3, w2, act: str) -> jax.Array:
 class ExpertBackend:
     """Executes the expert FFN over dispatched (E, C, d) buffers.
 
-    ``me`` is the (E, C) 0/1 router-guided compensation mask (ignored by
-    the dense backend).
+    ``me`` is the (E, C) 0/1 router-guided compensation mask and
+    ``rank_cap`` the traced per-layer compensator rank ceiling from the
+    bandwidth controller's plan (None = full padded rank); both are
+    ignored by the dense backend.
     """
 
     name = "base"
 
     def __call__(self, xe: jax.Array, params: Dict, me: jax.Array,
-                 act: str) -> jax.Array:
+                 act: str, rank_cap: Optional[jax.Array] = None
+                 ) -> jax.Array:
         raise NotImplementedError
 
 
@@ -57,7 +60,7 @@ class DenseBackend(ExpertBackend):
 
     name = "dense"
 
-    def __call__(self, xe, params, me, act):
+    def __call__(self, xe, params, me, act, rank_cap=None):
         return expert_ffn_dense(xe, params["w1"], params["w3"], params["w2"],
                                 act)
 
@@ -67,11 +70,11 @@ class RefQuantBackend(ExpertBackend):
 
     name = "ref"
 
-    def __call__(self, xe, params, me, act):
+    def __call__(self, xe, params, me, act, rank_cap=None):
         stacks = params["stacks"]
         return compensated_expert_ffn(
             xe, stacks["w1"], stacks.get("w3"), stacks["w2"], me,
-            act=activation(act), dtype=xe.dtype)
+            act=activation(act), dtype=xe.dtype, rank_cap=rank_cap)
 
 
 class PallasQuantBackend(ExpertBackend):
@@ -88,22 +91,25 @@ class PallasQuantBackend(ExpertBackend):
     def __init__(self, impl: str = "pallas"):
         self.impl = impl
 
-    def __call__(self, xe, params, me, act):
+    def __call__(self, xe, params, me, act, rank_cap=None):
         stacks: Dict[str, CompressedExpertStack] = params["stacks"]
         f = activation(act)
         h1 = ops.compensated_matmul_stack(xe, stacks["w1"], me,
                                           impl=self.impl,
-                                          out_dtype=jnp.float32)
+                                          out_dtype=jnp.float32,
+                                          rank_cap=rank_cap)
         if "w3" in stacks:
             h3 = ops.compensated_matmul_stack(xe, stacks["w3"], me,
                                               impl=self.impl,
-                                              out_dtype=jnp.float32)
+                                              out_dtype=jnp.float32,
+                                              rank_cap=rank_cap)
             h = f(h1) * h3
         else:
             h = f(h1)
         ye = ops.compensated_matmul_stack(h.astype(xe.dtype), stacks["w2"],
                                           me, impl=self.impl,
-                                          out_dtype=jnp.float32)
+                                          out_dtype=jnp.float32,
+                                          rank_cap=rank_cap)
         return ye.astype(xe.dtype)
 
 

@@ -48,8 +48,12 @@ def lm_head(params, x, cfg: ModelConfig):
 
 def forward(params, tokens, cfg: ModelConfig, ctx: ExecContext, *,
             positions=None, caches=None, mrope_pos=None,
-            enc_embeds=None) -> LMOutput:
-    """Full-sequence forward (train / prefill)."""
+            enc_embeds=None, plan=None) -> LMOutput:
+    """Full-sequence forward (train / prefill).
+
+    ``plan``: optional (num_moe_layers, 2) int32 [top_n, rank_cap]
+    restoration plan (bandwidth controller); None = static QuantConfig.
+    """
     b, s = tokens.shape[:2]
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -61,7 +65,7 @@ def forward(params, tokens, cfg: ModelConfig, ctx: ExecContext, *,
     x, aux, new_caches, trace = apply_stack(params, x, cfg, ctx, positions,
                                             caches=caches,
                                             mrope_pos=mrope_pos,
-                                            enc_out=enc_out)
+                                            enc_out=enc_out, plan=plan)
     from .layers import rms_norm
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(params, x, cfg)
@@ -69,14 +73,18 @@ def forward(params, tokens, cfg: ModelConfig, ctx: ExecContext, *,
 
 
 def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
-                *, mrope_pos=None) -> LMOutput:
-    """One-token serve step against the KV/recurrent caches."""
+                *, mrope_pos=None, plan=None) -> LMOutput:
+    """One-token serve step against the KV/recurrent caches.
+
+    ``plan``: optional (num_moe_layers, 2) int32 [top_n, rank_cap] array
+    — traced data with a static shape, so per-chunk plan updates from the
+    bandwidth controller never recompile the decode loop."""
     b = tokens.shape[0]
     positions = caches["pos"][:, None]        # (B, 1) absolute position
     x = embed_tokens(params, tokens, cfg, positions)
     x, aux, new_caches, trace = apply_stack(params, x, cfg, ctx, positions,
                                             caches=caches,
-                                            mrope_pos=mrope_pos)
+                                            mrope_pos=mrope_pos, plan=plan)
     from .layers import rms_norm
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(params, x, cfg)

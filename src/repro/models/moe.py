@@ -78,7 +78,10 @@ class Dispatch(NamedTuple):
 
 
 def make_dispatch(info: RoutingInfo, num_experts: int, capacity: int,
-                  top_n: int) -> Dispatch:
+                  top_n) -> Dispatch:
+    """``top_n`` may be a static int or a traced scalar (the bandwidth
+    controller's per-layer plan): the comp mask is a compare either way,
+    so a runtime plan change never retriggers compilation."""
     t, k = info.topk_idx.shape
     e_idx = info.topk_idx.reshape(-1)
     # slot within expert: exclusive running count of prior assignments
@@ -124,21 +127,37 @@ def _capacity(tokens: int, mcfg: MoEConfig, exact: bool) -> int:
 # single-shard path
 # ---------------------------------------------------------------------------
 
+def _plan_knobs(mcfg: MoEConfig, quantized: bool, plan):
+    """Resolve (top_n, rank_cap) for one MoE layer invocation.
+
+    ``plan`` is this layer's (2,) int32 row of the bandwidth controller's
+    per-layer plan array — traced values, so runtime plan changes reuse
+    the compiled fn.  None (controller absent) keeps the static
+    ``QuantConfig.top_n_restore`` / uncapped-rank behaviour bit-exactly.
+    """
+    if not quantized:
+        return 0, None
+    if plan is None:
+        return mcfg.quant.top_n_restore, None
+    return plan[0], plan[1]
+
+
 def moe_apply(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
               act: str = "silu", quantized: bool = False,
               exact_capacity: bool = False,
               impl: Optional[str] = None,
-              backend: Optional[ExpertBackend] = None
+              backend: Optional[ExpertBackend] = None,
+              plan: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, Dict[str, jax.Array], RoutingInfo]:
     """x2: (T, d) -> (T, d), aux losses, routing info.  Runs on one shard."""
     t = x2.shape[0]
     backend = backend or select_backend(params, quantized, impl)
     info = route(x2, params["router"], mcfg)
     cap = _capacity(t, mcfg, exact_capacity)
-    disp = make_dispatch(info, mcfg.num_experts, cap,
-                         mcfg.quant.top_n_restore if quantized else 0)
+    top_n, rank_cap = _plan_knobs(mcfg, quantized, plan)
+    disp = make_dispatch(info, mcfg.num_experts, cap, top_n)
     xe, me = dispatch_tokens(x2, disp, mcfg.num_experts)
-    ye = backend(xe, params, me, act)
+    ye = backend(xe, params, me, act, rank_cap=rank_cap)
     y = combine_tokens(ye, disp, t)
     return y.astype(x2.dtype), aux_losses(info, mcfg), info
 
@@ -150,7 +169,8 @@ def moe_apply(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
 def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
                      act: str = "silu", quantized: bool = False,
                      axis: str = "model", impl: Optional[str] = None,
-                     backend: Optional[ExpertBackend] = None
+                     backend: Optional[ExpertBackend] = None,
+                     plan: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, Dict[str, jax.Array], RoutingInfo]:
     """Tokens local, experts sharded on ``axis``: dispatch via all_to_all.
 
@@ -162,13 +182,13 @@ def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
     backend = backend or select_backend(params, quantized, impl)
     info = route(x2, params["router"], mcfg)
     cap = _capacity(t, mcfg, False)
-    disp = make_dispatch(info, e_total, cap,
-                         mcfg.quant.top_n_restore if quantized else 0)
+    top_n, rank_cap = _plan_knobs(mcfg, quantized, plan)
+    disp = make_dispatch(info, e_total, cap, top_n)
     xe, me = dispatch_tokens(x2, disp, e_total)          # (E, C, d) local
     # -> (E_local, C * ep, d): every shard receives its experts' slots
     xe = jax.lax.all_to_all(xe, axis, split_axis=0, concat_axis=1, tiled=True)
     me = jax.lax.all_to_all(me, axis, split_axis=0, concat_axis=1, tiled=True)
-    ye = backend(xe, params, me, act)
+    ye = backend(xe, params, me, act, rank_cap=rank_cap)
     ye = jax.lax.all_to_all(ye, axis, split_axis=1, concat_axis=0, tiled=True)
     y = combine_tokens(ye, disp, t)
     aux = jax.tree.map(lambda v: jax.lax.pmean(v, axis),
@@ -179,7 +199,8 @@ def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
 def moe_apply_ep_replicated(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
                             act: str = "silu", quantized: bool = False,
                             axis: str = "model", impl: Optional[str] = None,
-                            backend: Optional[ExpertBackend] = None
+                            backend: Optional[ExpertBackend] = None,
+                            plan: Optional[jax.Array] = None
                             ) -> Tuple[jax.Array, Dict[str, jax.Array],
                                        RoutingInfo]:
     """Decode path: tokens replicated over ``axis``; each shard runs its
@@ -197,11 +218,11 @@ def moe_apply_ep_replicated(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
     topi_local = jnp.where(oob, e_local, topi_local)     # OOB sentinel
     local_info = RoutingInfo(jnp.where(oob, 0.0, info.gates), topi_local,
                              info.probs, info.logits)
-    disp = make_dispatch(local_info, e_local + 1, t,
-                         mcfg.quant.top_n_restore if quantized else 0)
+    top_n, rank_cap = _plan_knobs(mcfg, quantized, plan)
+    disp = make_dispatch(local_info, e_local + 1, t, top_n)
     xe, me = dispatch_tokens(x2, disp, e_local + 1)
     xe, me = xe[:e_local], me[:e_local]
-    ye = backend(xe, params, me, act)
+    ye = backend(xe, params, me, act, rank_cap=rank_cap)
     ye = jnp.concatenate([ye, jnp.zeros_like(ye[:1])], axis=0)
     y = combine_tokens(ye, disp, t)
     y = jax.lax.psum(y, axis)

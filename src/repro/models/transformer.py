@@ -330,6 +330,41 @@ def unstack_params(params, cfg: ModelConfig):
     return out
 
 
+def compress_moe_params(params, cfg: ModelConfig, qcfg=None):
+    """Offline-compress every MoE layer's experts for quantized serving.
+
+    Runs the full pipeline (DESIGN.md) over the routed-expert stacks of
+    each MoE layer and swaps w1/w3/w2 for ``CompressedExpertStack``s.
+    Returns ``(qparams, cfg_q, stacks_by_layer)``: the *unrolled* param
+    tree (per-layer compensator ranks break scan homogeneity), the
+    matching ``force_unroll_plan`` config, and the per-layer stacks
+    dicts the offload ``ExpertStore``s are built from.  One helper
+    shared by ``launch/serve.py``, benchmarks, examples, and tests so
+    the compressed-param layout has a single definition.
+    """
+    from ..core.pipeline import compress_ffn_weights
+    qcfg = qcfg or cfg.moe.quant
+    up = unstack_params(params, cfg)
+    specs = layer_specs(cfg)
+    segs, stacks_by_layer = [], []
+    for (lp,), spec in zip(up["segments"], specs):
+        lp = dict(lp)
+        if spec.ffn == "moe":
+            mp = dict(lp["moe"])
+            stacks, _ = compress_ffn_weights(mp["w1"], mp["w2"], mp["w3"],
+                                             qcfg)
+            stacks_by_layer.append(stacks)
+            mp["stacks"] = stacks
+            for k in ("w1", "w2", "w3"):
+                mp.pop(k)
+            lp["moe"] = mp
+        segs.append((lp,))
+    qparams = dict(up)
+    qparams["segments"] = tuple(segs)
+    return (qparams, dataclasses.replace(cfg, force_unroll_plan=True),
+            stacks_by_layer)
+
+
 # ---------------------------------------------------------------------------
 # cache init
 # ---------------------------------------------------------------------------
@@ -564,11 +599,14 @@ def _slstm_block(x, p, cfg: ModelConfig, ctx: ExecContext, cache):
 
 
 def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
-                positions, cache, mrope_pos=None, enc_out=None):
+                positions, cache, mrope_pos=None, enc_out=None,
+                plan_row=None):
     """One transformer layer.  Returns (x, aux, new_cache, trace).
 
     ``trace`` is the (T, k) top-k expert ids of this layer's router when
     ``ctx.collect_trace`` is set and the layer is MoE, else None (static).
+    ``plan_row`` is this layer's (2,) int32 [top_n, rank_cap] row of the
+    bandwidth controller's restoration plan (None = static QuantConfig).
     """
     aux = {}
     if spec.mixer == "mlstm":
@@ -615,7 +653,8 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
             y2, aux, info = moe_apply(
                 h.reshape(-1, d), mp, cfg.moe, act=cfg.act,
                 quantized=ctx.quantized and "stacks" in mp,
-                exact_capacity=ctx.exact_capacity, impl=ctx.kernel_impl)
+                exact_capacity=ctx.exact_capacity, impl=ctx.kernel_impl,
+                plan=plan_row)
             y = y2.reshape(b, s, d)
             topk = info.topk_idx.reshape(b, s, -1)
         if ctx.collect_trace:
@@ -653,34 +692,56 @@ def _merge_aux(a, b):
 
 
 def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
-                caches=None, mrope_pos=None, enc_out=None):
+                caches=None, mrope_pos=None, enc_out=None, plan=None):
     """Run all segments.  Returns (x, aux, new_caches, trace).
 
     ``trace`` is the stacked (moe_layers, T, k) router top-k ids in global
     layer order when ``ctx.collect_trace`` is set (None otherwise) — the
     first-class replacement for hooking ``moe.route``.
+
+    ``plan`` is the bandwidth controller's (num_moe_layers, 2) int32
+    [top_n, rank_cap] array in the same global MoE-layer order as the
+    trace.  It is *data*, not structure: the array threads into scanned
+    segments as scan xs, so runtime plan updates reuse the compiled fn.
     """
-    plan = derive_plan(cfg)
+    seg_plan_all = derive_plan(cfg)
     aux = _zero_aux()
     new_segs = []
     traces: List[jax.Array] = []
     use_cache = caches is not None and ctx.mode in ("prefill", "step")
+    moe_off = 0
 
-    for si, seg in enumerate(plan):
+    for si, seg in enumerate(seg_plan_all):
         seg_params = params["segments"][si]
         seg_caches = (caches["segments"][si] if use_cache
                       else tuple(None for _ in seg.layers))
+        n_moe = sum(1 for spec in seg.layers if spec.ffn == "moe")
+        seg_plan = None
+        if plan is not None and n_moe:
+            cnt = n_moe * seg.repeat
+            # global order interleaves positions within each repeat
+            # (matches _unstack_scan_traces), so the reshape below lines
+            # plan rows up with the scanned repeats
+            seg_plan = plan[moe_off:moe_off + cnt]
+            moe_off += cnt
+            if seg.repeat > 1:
+                seg_plan = seg_plan.reshape(seg.repeat, n_moe, 2)
 
-        def group(x, gp, gc):
+        def group(x, gp, gc, gpl):
             dtype0 = x.dtype
             ga = _zero_aux()
             ncs = []
             trs = []
+            mi = 0
             for pi, spec in enumerate(seg.layers):
+                row = None
+                if gpl is not None and spec.ffn == "moe":
+                    row = gpl[mi]
+                    mi += 1
                 x, a, nc, tr = apply_layer(x, gp[pi], spec, cfg, ctx,
                                            positions,
                                            gc[pi] if use_cache else None,
-                                           mrope_pos, enc_out)
+                                           mrope_pos, enc_out, plan_row=row)
                 x = x.astype(dtype0)  # keep scan carry dtype stable
                 ga = _merge_aux(ga, a)
                 ncs.append(nc if use_cache else 0)
@@ -689,32 +750,40 @@ def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
             return x, ga, tuple(ncs), tuple(trs)
 
         if seg.repeat == 1:
-            x, ga, nc, trs = group(x, seg_params, seg_caches)
+            x, ga, nc, trs = group(x, seg_params, seg_caches, seg_plan)
             aux = _merge_aux(aux, ga)
             new_segs.append(nc)
             traces.extend(trs)
         elif use_cache:
+            # the plan (when present) rides the scan as an extra xs leaf
+            xs = (seg_params, seg_caches) + (
+                (seg_plan,) if seg_plan is not None else ())
+
             def body_c(carry, xs):
-                gp, gc = xs
+                gp, gc, *gpl = xs
                 fn = _remat(group, ctx)
-                xo, ga, nc, trs = fn(carry, gp, gc)
+                xo, ga, nc, trs = fn(carry, gp, gc,
+                                     gpl[0] if gpl else None)
                 return xo, (ga, nc, trs)
 
-            x, (gas, ncs, trs) = jax.lax.scan(body_c, x,
-                                              (seg_params, seg_caches),
+            x, (gas, ncs, trs) = jax.lax.scan(body_c, x, xs,
                                               unroll=ctx.scan_unroll)
             aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
             new_segs.append(ncs)
             traces.extend(_unstack_scan_traces(trs))
         else:
             dummy = tuple(None for _ in seg.layers)
+            xs = (seg_params,) + (
+                (seg_plan,) if seg_plan is not None else ())
 
-            def body(carry, gp):
+            def body(carry, xs):
+                gp, *gpl = xs
                 fn = _remat(group, ctx)
-                xo, ga, _, trs = fn(carry, gp, dummy)
+                xo, ga, _, trs = fn(carry, gp, dummy,
+                                    gpl[0] if gpl else None)
                 return xo, (ga, trs)
 
-            x, (gas, trs) = jax.lax.scan(body, x, seg_params,
+            x, (gas, trs) = jax.lax.scan(body, x, xs,
                                          unroll=ctx.scan_unroll)
             aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
             new_segs.append(0)

@@ -11,7 +11,9 @@ Metering semantics (fidelity-critical for the paper's wire-byte claims):
 - compensator factors *ride the device cache* with the expert they
   compensate: they are fetched once when a top-n expert first needs them,
   stay resident while the expert does, and are refetched only after the
-  expert is evicted — not re-charged on every token;
+  expert is evicted — not re-charged on every token; under the bandwidth
+  controller's per-layer rank caps only the capped factor rows move, and
+  a later cap *raise* fetches just the missing rows (the delta);
 - prefetched experts are inserted into the LRU ahead of the access (so a
   correct prediction becomes a *hit*) and their traffic is metered as
   ``prefetch_bytes``; bytes fetched for predictions the step never used
@@ -110,10 +112,13 @@ class ExpertStore:
         self.comp_bytes_moved = 0
         self.prefetch_bytes = 0
         self.wasted_prefetch_bytes = 0
-        # experts whose compensator factors are device-resident; factors
-        # ride the LRU with their expert (evicted together, refetched on
-        # the next top-n access after eviction)
-        self._comp_resident: set = set()
+        # expert -> rank cap its device-resident compensator factors were
+        # fetched at (None = uncapped / full true rank); factors ride the
+        # LRU with their expert (evicted together, refetched on the next
+        # top-n access after eviction).  When the bandwidth controller
+        # *raises* a layer's rank cap, the next access fetches only the
+        # missing factor rows (the delta), not the whole factor again.
+        self._comp_resident: Dict[int, Optional[int]] = {}
 
     def expert_bytes(self, e: int, policy: str) -> int:
         if policy == "fp16":
@@ -121,20 +126,29 @@ class ExpertStore:
         return sum(s.expert_wire_bytes(e, compensated=False)
                    for s in self.stacks.values())
 
-    def compensator_bytes(self, e: int) -> int:
-        return sum(int(s.ranks[e] * (s.shape[1] + s.shape[2])
-                       * s.factor_bits / 8) + 4 * s.ranks[e]
-                   for s in self.stacks.values())
+    def compensator_bytes(self, e: int, rank_cap: Optional[int] = None
+                          ) -> int:
+        """Factor wire bytes for expert ``e`` at ``rank_cap`` (None = the
+        true allocated rank; the cap slices the rank-padded factors)."""
+        total = 0
+        for s in self.stacks.values():
+            r = s.ranks[e] if rank_cap is None else min(s.ranks[e],
+                                                        int(rank_cap))
+            total += int(r * (s.shape[1] + s.shape[2])
+                         * s.factor_bits / 8) + 4 * r
+        return total
 
     def _drop_evicted(self):
         if self.cache.last_evicted is not None:
-            self._comp_resident.discard(self.cache.last_evicted)
+            self._comp_resident.pop(self.cache.last_evicted, None)
 
-    def access_token(self, topk: np.ndarray, top_n: int, policy: str
-                     ) -> int:
+    def access_token(self, topk: np.ndarray, top_n: int, policy: str,
+                     rank_cap: Optional[int] = None) -> int:
         """Meter one token's expert fetches; returns bytes moved.
 
-        Entries < 0 (masked / inactive scheduler slots) are skipped."""
+        Entries < 0 (masked / inactive scheduler slots) are skipped.
+        ``rank_cap`` caps the compensator rank fetched for restored
+        experts (the controller's per-layer plan; None = full rank)."""
         before = self.total_bytes
         for rank, e in enumerate(topk):
             e = int(e)
@@ -144,10 +158,17 @@ class ExpertStore:
             self._drop_evicted()
             if policy == "ours" and rank < top_n:
                 # compensators ride the cache with their expert: fetch
-                # only when not already resident
-                if e not in self._comp_resident:
-                    self.comp_bytes_moved += self.compensator_bytes(e)
-                    self._comp_resident.add(e)
+                # only what is not already resident (a raised cap fetches
+                # the missing rank rows only)
+                have = self._comp_resident.get(e, -1)     # -1 = absent
+                if have is None:
+                    continue                              # full rank resident
+                need = self.compensator_bytes(e, rank_cap)
+                held = 0 if have < 0 else self.compensator_bytes(e, have)
+                if need > held:
+                    self.comp_bytes_moved += need - held
+                if have < 0 or rank_cap is None or rank_cap > have:
+                    self._comp_resident[e] = rank_cap
         return self.total_bytes - before
 
     def prefetch(self, experts: Iterable[int], policy: str
@@ -215,13 +236,30 @@ def offload_report(stores: List[ExpertStore], prefetcher, snap: Dict,
     }
 
 
+def _per_layer(val, layers: int, default):
+    """Broadcast a scalar / per-layer sequence plan knob to (layers,)."""
+    if val is None:
+        return [default] * layers
+    arr = np.asarray(val)
+    if arr.ndim == 0:
+        return [arr.item()] * layers
+    if arr.shape[0] != layers:
+        raise ValueError(f"per-layer plan has {arr.shape[0]} entries for "
+                         f"{layers} MoE layers")
+    return [a.item() for a in arr]
+
+
 def replay_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
-                        policy: str = "ours", top_n: int = 1,
+                        policy: str = "ours", top_n=1,
+                        rank_caps=None,
                         prefetcher=None) -> Tuple[int, np.ndarray]:
     """Replay a (steps, moe_layers, B, k) decode trace into the stores.
 
     Batch rows whose expert ids are < 0 are *inactive scheduler slots*:
-    they are skipped by the prefetcher and the stores.  Returns
+    they are skipped by the prefetcher and the stores.  ``top_n`` and
+    ``rank_caps`` may be scalars or per-layer (moe_layers,) sequences —
+    the bandwidth controller's plan; ``rank_caps=None`` meters full-rank
+    compensators (the static pre-controller behaviour).  Returns
     ``(tokens, slot_bytes)`` — the number of active (step, slot) tokens
     metered and the demand+compensator bytes attributed per batch slot
     (prefetch traffic is shared and not slot-attributable).
@@ -231,6 +269,8 @@ def replay_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
     if layers != len(stores):
         raise ValueError(f"trace has {layers} MoE layers but "
                          f"{len(stores)} stores attached")
+    top_ns = _per_layer(top_n, layers, 1)
+    caps = _per_layer(rank_caps, layers, None)
     slot_bytes = np.zeros((b,), np.int64)
     tokens = 0
     for t in range(steps):
@@ -254,13 +294,14 @@ def replay_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
                         nb for e, nb in fetched.items() if e not in used)
             for bi in np.nonzero(active)[0]:
                 slot_bytes[bi] += stores[l].access_token(
-                    experts[bi], top_n=top_n, policy=policy)
+                    experts[bi], top_n=top_ns[l], policy=policy,
+                    rank_cap=caps[l])
     return tokens, slot_bytes
 
 
 def meter_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
-                       policy: str = "ours", top_n: int = 1,
-                       prefetcher=None) -> Dict:
+                       policy: str = "ours", top_n=1,
+                       rank_caps=None, prefetcher=None) -> Dict:
     """Replay a live decode trace through per-layer stores.
 
     ``trace``: (steps, moe_layers, B, k) routed expert ids, exactly the
@@ -278,5 +319,6 @@ def meter_decode_trace(stores: List[ExpertStore], trace: np.ndarray, *,
     """
     snap = snapshot_offload(stores, prefetcher)
     tokens, _ = replay_decode_trace(stores, trace, policy=policy,
-                                    top_n=top_n, prefetcher=prefetcher)
+                                    top_n=top_n, rank_caps=rank_caps,
+                                    prefetcher=prefetcher)
     return offload_report(stores, prefetcher, snap, tokens, policy)

@@ -1,5 +1,8 @@
 """Serving: batched engine (prefill + decode), continuous-batching request
-scheduler, sampling, router-trace export."""
+scheduler, runtime bandwidth-budget controller, sampling, router-trace
+export."""
+from .controller import (BandwidthController, ControllerPlan,
+                         ControllerRecord, static_plan)
 from .engine import (GenerationResult, ServeEngine, ServeStats, bucket_len,
                      router_trace, sample)
 from .scheduler import Request, RequestResult, Scheduler, synthetic_workload

@@ -36,11 +36,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..config import ModelConfig, ServeConfig
+from ..config import ControlConfig, ModelConfig, ServeConfig
 from ..models import model as lm
 from ..models.transformer import (ExecContext, cache_claim_slot, init_caches,
                                   layer_specs, mask_cache_padding)
 from ..launch.steps import make_context
+from .controller import BandwidthController, ControllerPlan
 from .scheduler import Request, RequestResult, Scheduler
 
 PROMPT_BUCKET_MIN = 16     # smallest padded-prompt length
@@ -93,6 +94,9 @@ class ServeStats:
     offload_report: Optional[Dict] = None
     # (total_steps, moe_layers, num_slots, k) with -1 on inactive slots
     router_trace: Optional[np.ndarray] = None
+    # (chunks, moe_layers, 2) per-chunk controller plan [top_n, rank_cap]
+    # (None when no bandwidth controller is attached)
+    plan_trace: Optional[np.ndarray] = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -140,6 +144,7 @@ class ServeEngine:
         self._stores = None            # per-MoE-layer ExpertStore
         self._prefetcher = None
         self._offload_policy = "ours"
+        self._controller = None        # BandwidthController (attach_controller)
         self._prefill_ctx = make_context(cfg, "prefill", quantized=quantized,
                                          exact_capacity=True,
                                          kernel_impl=kernel_impl)
@@ -166,21 +171,25 @@ class ServeEngine:
         @functools.partial(jax.jit,
                            static_argnames=("max_new", "temperature"),
                            donate_argnums=(1,))
-        def decode_loop(params, caches, logits0, key, max_new, temperature):
+        def decode_loop(params, caches, logits0, key, plan, max_new,
+                        temperature):
             """scan over decode steps: sample on device, step, stack trace.
 
             ``temperature`` is static (it selects the greedy/categorical
             branch in ``sample``) and read per call, so mutating
             ``scfg.temperature`` between generates takes effect.  The
             final RNG key is returned so chunked serving threads one key
-            stream across scan chunks."""
+            stream across scan chunks.  ``plan`` is the bandwidth
+            controller's (moe_layers, 2) [top_n, rank_cap] array (None =
+            static restoration): traced data with a static shape, so the
+            per-chunk plan updates never recompile this loop."""
 
             def body(carry, _):
                 logits, caches, key = carry
                 key, k2 = jax.random.split(key)
                 nxt = sample(logits, k2, temperature)
                 out = lm.decode_step(params, nxt[:, None], caches, cfg,
-                                     self._step_ctx)
+                                     self._step_ctx, plan=plan)
                 lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
                 lp_tok = jnp.take_along_axis(lp, nxt[:, None], axis=-1)[:, 0]
                 ys = (nxt, lp_tok)
@@ -237,14 +246,53 @@ class ServeEngine:
         if prefetch:
             self._prefetcher = LayerAheadPrefetcher(
                 len(stacks_by_layer), self.cfg.moe.top_k)
+        if self.scfg.control.enabled:
+            # ServeConfig-driven controller: budgeted serving without a
+            # separate attach_controller call (which can still override)
+            self.attach_controller(self.scfg.control)
         return self
 
-    def _meter_offload(self, trace: np.ndarray) -> Dict[str, float]:
+    def attach_controller(self, control: ControlConfig
+                          ) -> "ServeEngine":
+        """Close the loop from offload metering to restoration intensity.
+
+        Requires ``attach_offload`` (the controller reads the stores'
+        byte counters and derives its rank ladder from their stacks).
+        With no budget set (``target_bytes_per_token == 0``) the plan
+        stays pinned at the static ``top_n_restore`` / full-rank point
+        and decode + metering are bit-identical to the uncontrolled path.
+        """
+        if self._stores is None:
+            raise ValueError("attach_offload must be called before "
+                             "attach_controller (it provides the metered "
+                             "stores the controller feeds on)")
+        self._controller = BandwidthController.from_stacks(
+            [s.stacks for s in self._stores], self.cfg.moe.top_k, control,
+            static_top_n=self.cfg.moe.quant.top_n_restore)
+        return self
+
+    @property
+    def controller(self) -> Optional[BandwidthController]:
+        return self._controller
+
+    def _current_plan(self) -> Optional[ControllerPlan]:
+        return self._controller.plan() if self._controller else None
+
+    @staticmethod
+    def _plan_device(plan: Optional[ControllerPlan]):
+        return None if plan is None else jnp.asarray(plan.as_array())
+
+    def _meter_offload(self, trace: np.ndarray,
+                       plan: Optional[ControllerPlan] = None
+                       ) -> Dict[str, float]:
         """Feed decode routing (steps, layers, B, k) into the stores."""
         from ..offload.store import meter_decode_trace
+        top_n = (self.cfg.moe.quant.top_n_restore if plan is None
+                 else plan.top_n)
         return meter_decode_trace(
             self._stores, trace, policy=self._offload_policy,
-            top_n=self.cfg.moe.quant.top_n_restore,
+            top_n=top_n,
+            rank_caps=None if plan is None else plan.rank_cap,
             prefetcher=self._prefetcher)
 
     # -- prefill helpers ---------------------------------------------------
@@ -287,10 +335,11 @@ class ServeEngine:
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
+        plan = self._current_plan()
         t1 = time.time()
         logits, caches, _key, ys = self._decode_loop(
-            self.params, caches, logits, jax.random.key(seed), max_new,
-            self.scfg.temperature)
+            self.params, caches, logits, jax.random.key(seed),
+            self._plan_device(plan), max_new, self.scfg.temperature)
         logits.block_until_ready()
         t_decode = time.time() - t1
 
@@ -298,8 +347,10 @@ class ServeEngine:
         logprobs = np.asarray(ys[1]).T                # (B, max_new)
         trace = (np.asarray(ys[2])
                  if self.collect_router_trace and ys[2] is not None else None)
-        report = (self._meter_offload(trace)
+        report = (self._meter_offload(trace, plan)
                   if trace is not None and self._stores else None)
+        if report is not None and self._controller is not None:
+            self._controller.update(report["total_bytes"], report["tokens"])
         return GenerationResult(toks, logprobs, t_prefill, t_decode, max_new,
                                 router_trace=trace, offload_report=report)
 
@@ -315,6 +366,12 @@ class ServeEngine:
         max-token) and refills their slots from the arrival queue.
         Requests with future ``arrival_s`` wait in the queue (offered-load
         benchmarking); latencies are wall-clock from arrival.
+
+        With a bandwidth controller attached, each chunk decodes under
+        the controller's current (moe_layers, 2) restoration plan (traced
+        data — no recompile), the chunk's metered wire bytes feed
+        ``controller.update`` at the chunk boundary, and the per-chunk
+        plans come back as ``ServeStats.plan_trace``.
         """
         from ..offload.store import (offload_report, replay_decode_trace,
                                      snapshot_offload)
@@ -341,6 +398,7 @@ class ServeEngine:
         snap = (snapshot_offload(self._stores, self._prefetcher)
                 if self._stores else None)
         traces: List[np.ndarray] = []
+        plans: List[np.ndarray] = []
         prefill_s = decode_s = 0.0
         chunks = generated = metered_tokens = 0
         t0 = time.perf_counter()
@@ -361,13 +419,16 @@ class ServeEngine:
                                              jnp.int32(slot))
                 prefill_s += time.perf_counter() - tp
 
+            plan = self._current_plan()
             td = time.perf_counter()
             logits, caches, key, ys = self._decode_loop(
-                self.params, caches, logits, key, chunk,
-                self.scfg.temperature)
+                self.params, caches, logits, key, self._plan_device(plan),
+                chunk, self.scfg.temperature)
             logits.block_until_ready()
             decode_s += time.perf_counter() - td
             chunks += 1
+            if plan is not None:
+                plans.append(plan.as_array())
 
             toks = np.asarray(ys[0]).T                       # (S, chunk)
             lps = np.asarray(ys[1]).T
@@ -381,11 +442,20 @@ class ServeEngine:
                                   -1).astype(tr.dtype)
                 traces.append(masked)
                 if self._stores:
+                    before = sum(s.total_bytes for s in self._stores)
                     ntok, slot_bytes = replay_decode_trace(
                         self._stores, masked, policy=self._offload_policy,
-                        top_n=top_n, prefetcher=self._prefetcher)
+                        top_n=top_n if plan is None else plan.top_n,
+                        rank_caps=None if plan is None else plan.rank_cap,
+                        prefetcher=self._prefetcher)
                     metered_tokens += ntok
                     sched.add_slot_bytes(slot_bytes, uid_map)
+                    if self._controller is not None:
+                        # chunk boundary: the chunk's wire bytes (demand +
+                        # compensator + prefetch) close the control loop
+                        moved = sum(s.total_bytes
+                                    for s in self._stores) - before
+                        self._controller.update(moved, ntok)
 
         total_s = time.perf_counter() - t0
         report = (offload_report(self._stores, self._prefetcher, snap,
@@ -397,7 +467,8 @@ class ServeEngine:
                           decode_s, chunks, generated,
                           offload_report=report,
                           router_trace=(np.concatenate(traces)
-                                        if traces else None))
+                                        if traces else None),
+                          plan_trace=(np.stack(plans) if plans else None))
 
     def generate_many(self, prompts: Sequence[np.ndarray],
                       max_new: int = 32, *,

@@ -21,6 +21,13 @@ Request lifecycle::
 engine can mask retired/empty slots out of the router trace (expert id
 -1) before offload metering — inactive slots keep decoding garbage to
 preserve shapes, but none of it reaches results or the wire-byte meter.
+
+The chunk boundary is also where the engine applies runtime control:
+after ``record_chunk`` the masked trace is metered into the expert
+stores and the bandwidth controller (``serve/controller.py``) digests
+the chunk's wire bytes into the next chunk's per-layer ``(top_n,
+rank_cap)`` restoration plan — slots and compiled shapes never change,
+only the plan *data* fed to the next scan chunk.
 """
 from __future__ import annotations
 

@@ -1,0 +1,318 @@
+"""Runtime bandwidth-budget controller: ladder, determinism, the
+disabled-path bit-identity guarantee, rank-capped metering, and
+convergence of the adaptive simulator policy on both hardware profiles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ControlConfig, ModelConfig, MoEConfig, QuantConfig
+from repro.core import compress_ffn_weights
+from repro.core.restoration import compensated_expert_ffn
+from repro.models import init_params
+from repro.models.transformer import compress_moe_params
+from repro.offload import (GPU_NDP, GPU_ONLY, ExpertStore, LayerSpecSim,
+                           replay_decode_trace, simulate_decode)
+from repro.offload.simulator import make_router_trace
+from repro.serve import (BandwidthController, ServeEngine, static_plan,
+                         synthetic_workload)
+
+
+def make_controller(budget=1000.0, pads=(16, 32), top_k=2, **kw):
+    cc = ControlConfig(enabled=True, bytes_per_token=budget, **kw)
+    return BandwidthController(list(pads), top_k, cc, static_top_n=1)
+
+
+# ---------------------------------------------------------------------------
+# ladder / plan mapping
+# ---------------------------------------------------------------------------
+
+def test_ladder_endpoints_and_monotonic_top_n():
+    c = make_controller()
+    lo = c.plan_at(0)
+    assert lo.top_n.tolist() == [0, 0] and lo.rank_cap.tolist() == [0, 0]
+    hi = c.plan_at(c.max_level)
+    assert hi.top_n.tolist() == [2, 2]
+    assert hi.rank_cap.tolist() == [16, 32]     # per-layer padded ranks
+    prev = c.plan_at(0)
+    for lvl in range(1, c.max_level + 1):
+        cur = c.plan_at(lvl)
+        assert (cur.top_n >= prev.top_n).all()
+        # one micro-step moves exactly one layer by one rung
+        changed = int((cur.top_n != prev.top_n).sum()
+                      + ((cur.top_n == prev.top_n)
+                         & (cur.rank_cap != prev.rank_cap)).sum())
+        assert changed == 1
+        prev = cur
+
+
+def test_static_level_matches_frozen_operating_point():
+    c = make_controller()
+    p = c.plan_at(c._static_level())
+    assert p.top_n.tolist() == [1, 1]           # static_top_n
+    assert p.rank_cap.tolist() == [16, 32]      # full rank
+
+
+def test_inactive_controller_pins_static_plan():
+    for cc in (ControlConfig(enabled=False, bytes_per_token=100.0),
+               ControlConfig(enabled=True)):    # no budget
+        c = BandwidthController([8, 8], 2, cc, static_top_n=1)
+        assert not c.active
+        want = static_plan([8, 8], 1)
+        for nbytes in (10, 10_000, 0):
+            p = c.update(nbytes, 4)
+            np.testing.assert_array_equal(p.top_n, want.top_n)
+            np.testing.assert_array_equal(p.rank_cap, want.rank_cap)
+        assert len(c.history) == 3              # telemetry still recorded
+
+
+def test_controller_deterministic():
+    seq = [(5_000, 8), (2_000, 8), (900, 4), (12_000, 8), (1_000, 8)] * 4
+    runs = []
+    for _ in range(2):
+        c = make_controller(budget=1200.0, gain=0.4)
+        plans = [c.update(b, t).as_array().copy() for b, t in seq]
+        runs.append((plans, [h.level for h in c.history]))
+    for a, b in zip(*[r[0] for r in runs]):
+        np.testing.assert_array_equal(a, b)
+    assert runs[0][1] == runs[1][1]
+
+
+def test_controller_moves_toward_budget():
+    c = make_controller(budget=1000.0, gain=0.5)
+    lvl = c.level
+    c.update(4000, 1)                # way over budget -> throttle down
+    assert c.level < lvl
+    for _ in range(20):
+        c.update(10, 1)              # way under -> restore more
+    assert c.level == c.max_level
+
+
+# ---------------------------------------------------------------------------
+# rank-capped restoration numerics
+# ---------------------------------------------------------------------------
+
+def _ffn_stacks(seed=0, e=2, k=64, n=128):
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.standard_normal((e, k, n)).astype(np.float32))
+    w2 = jnp.asarray(rng.standard_normal((e, n, k)).astype(np.float32))
+    w3 = jnp.asarray(rng.standard_normal((e, k, n)).astype(np.float32))
+    qcfg = QuantConfig(enabled=True, bits=2, rank_budget=16, hqq_iters=2,
+                       group_size=16, factor_group_size=16)
+    stacks, _ = compress_ffn_weights(w1, w2, w3, qcfg)
+    return stacks
+
+
+def test_rank_cap_at_pad_rank_is_bit_identical():
+    stacks = _ffn_stacks()
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (2, 4, 64)).astype(np.float32))
+    mask = jnp.ones((2, 4), jnp.float32)
+    pad = max(s.pad_rank for s in stacks.values())
+    base = compensated_expert_ffn(x, stacks["w1"], stacks["w3"],
+                                  stacks["w2"], mask)
+    capped = compensated_expert_ffn(x, stacks["w1"], stacks["w3"],
+                                    stacks["w2"], mask,
+                                    rank_cap=jnp.int32(pad))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(capped))
+
+
+def test_rank_cap_zero_equals_no_compensation():
+    stacks = _ffn_stacks()
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (2, 4, 64)).astype(np.float32))
+    ones = jnp.ones((2, 4), jnp.float32)
+    capped = compensated_expert_ffn(x, stacks["w1"], stacks["w3"],
+                                    stacks["w2"], ones,
+                                    rank_cap=jnp.int32(0))
+    uncomp = compensated_expert_ffn(x, stacks["w1"], stacks["w3"],
+                                    stacks["w2"], jnp.zeros((2, 4)))
+    np.testing.assert_allclose(np.asarray(capped), np.asarray(uncomp),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rank_cap_truncates_like_sliced_factors():
+    stacks = _ffn_stacks()
+    st = stacks["w1"]
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (2, 4, 64)).astype(np.float32))
+    ones = jnp.ones((2, 4), jnp.float32)
+    cap = 4
+    capped = compensated_expert_ffn(x, st, None, stacks["w2"], ones,
+                                    rank_cap=jnp.int32(cap))
+    # oracle: zero factor dims >= cap by hand (a slice of the padding)
+    rmask = (jnp.arange(st.pad_rank) < cap)
+    st_cut = dataclasses.replace(st, u=st.u * rmask[None, None, :],
+                                 v=st.v * rmask[None, :, None])
+    w2 = stacks["w2"]
+    w2_cut = dataclasses.replace(w2, u=w2.u * rmask[None, None, :],
+                                 v=w2.v * rmask[None, :, None])
+    oracle = compensated_expert_ffn(x, st_cut, None, w2_cut, ones)
+    np.testing.assert_allclose(np.asarray(capped), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rank-capped metering
+# ---------------------------------------------------------------------------
+
+def test_store_rank_cap_fetches_delta_on_raise():
+    stacks = _ffn_stacks()
+    store = ExpertStore(stacks, cache_capacity=4)
+    topk = np.array([0, 1])
+    store.access_token(topk, top_n=1, policy="ours", rank_cap=4)
+    c4 = store.comp_bytes_moved
+    assert c4 == store.compensator_bytes(0, 4) > 0
+    # same cap again: factors are resident, no re-charge
+    store.access_token(topk, top_n=1, policy="ours", rank_cap=4)
+    assert store.comp_bytes_moved == c4
+    # raised cap: only the missing rank rows move
+    store.access_token(topk, top_n=1, policy="ours", rank_cap=8)
+    assert store.comp_bytes_moved == store.compensator_bytes(0, 8)
+    # lowered cap: a superset is resident, nothing moves
+    store.access_token(topk, top_n=1, policy="ours", rank_cap=2)
+    assert store.comp_bytes_moved == store.compensator_bytes(0, 8)
+    # uncapped tops up to the full true rank
+    store.access_token(topk, top_n=1, policy="ours")
+    assert store.comp_bytes_moved == store.compensator_bytes(0)
+
+
+def test_replay_per_layer_plan_matches_scalar_when_uniform():
+    stacks = _ffn_stacks()
+    trace = np.asarray(
+        make_router_trace(None, 12, 2, 2, seed=0, num_experts=2)
+    ).transpose(0, 1, 2)[:, :, None, :]        # (steps, 2, B=1, k)
+    pad = max(s.pad_rank for s in stacks.values())
+    s_scalar = [ExpertStore(stacks, 2), ExpertStore(stacks, 2)]
+    s_array = [ExpertStore(stacks, 2), ExpertStore(stacks, 2)]
+    t1, _ = replay_decode_trace(s_scalar, trace, top_n=1)
+    t2, _ = replay_decode_trace(s_array, trace, top_n=np.array([1, 1]),
+                                rank_caps=np.array([pad, pad]))
+    assert t1 == t2
+    assert (sum(s.total_bytes for s in s_scalar)
+            == sum(s.total_bytes for s in s_array))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: disabled bit-identity + live control, one compile
+# ---------------------------------------------------------------------------
+
+def _quant_engine():
+    cfg = ModelConfig(
+        name="ctrl-moe", family="moe", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=128,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2, rank_budget=8,
+                                        top_n_restore=1, hqq_iters=2)))
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
+    eng = ServeEngine(cfg_q, qparams, quantized=True)
+    eng.attach_offload(stacks_by_layer, policy="ours", cache_capacity=2)
+    return eng, stacks_by_layer
+
+
+def test_disabled_controller_bit_identical_and_budget_drives_plan():
+    eng, stacks = _quant_engine()
+    wl = lambda: synthetic_workload(5, 128, max_new=8, seed=3)
+
+    base = eng.serve(wl(), num_slots=2, chunk=4)
+    base_tokens = np.concatenate([r.tokens for r in base.results])
+    base_bytes = base.offload_report["total_bytes"]
+    assert base.plan_trace is None              # no controller attached
+
+    # controller attached but with no budget: decode output AND metered
+    # bytes must be bit-identical to the static top_n_restore path
+    eng.attach_offload(stacks, policy="ours", cache_capacity=2)
+    eng.attach_controller(ControlConfig(enabled=True))
+    idle = eng.serve(wl(), num_slots=2, chunk=4)
+    np.testing.assert_array_equal(
+        np.concatenate([r.tokens for r in idle.results]), base_tokens)
+    assert idle.offload_report["total_bytes"] == base_bytes
+    assert idle.plan_trace is not None
+    assert (idle.plan_trace == idle.plan_trace[0]).all()   # pinned static
+
+    # an aggressive budget must move the plan off the static point and
+    # reduce wire traffic, reusing the already-compiled decode loop
+    compiles_before = eng.num_compiles["decode"]
+    eng.attach_offload(stacks, policy="ours", cache_capacity=2)
+    eng.attach_controller(ControlConfig(enabled=True, bytes_per_token=1.0,
+                                        gain=0.5))
+    tight = eng.serve(wl(), num_slots=2, chunk=4)
+    assert not (tight.plan_trace == idle.plan_trace[0]).all()
+    assert tight.offload_report["total_bytes"] < base_bytes
+    assert eng.controller.history                  # fed at chunk boundaries
+    # plan values changed every chunk, yet no new decode compile: the
+    # plan is data, not shape
+    assert eng.num_compiles["decode"] == compiles_before
+
+
+def test_serve_config_control_auto_attaches():
+    from repro.config import ServeConfig
+    eng, stacks = _quant_engine()
+    scfg = ServeConfig(control=ControlConfig(enabled=True,
+                                             bytes_per_token=123.0))
+    eng2 = ServeEngine(eng.cfg, eng.params, scfg, quantized=True)
+    assert eng2.controller is None
+    eng2.attach_offload(stacks, policy="ours", cache_capacity=2)
+    assert eng2.controller is not None
+    assert eng2.controller.ccfg.target_bytes_per_token == 123.0
+
+
+def test_same_trace_same_budget_same_plan_sequence():
+    eng, stacks = _quant_engine()
+    plan_traces = []
+    for _ in range(2):
+        eng.attach_offload(stacks, policy="ours", cache_capacity=2)
+        eng.attach_controller(ControlConfig(enabled=True,
+                                            bytes_per_token=15_000.0,
+                                            gain=0.4))
+        stats = eng.serve(synthetic_workload(6, 128, max_new=8, seed=5),
+                          num_slots=2, chunk=4)
+        plan_traces.append(stats.plan_trace)
+    np.testing.assert_array_equal(plan_traces[0], plan_traces[1])
+
+
+# ---------------------------------------------------------------------------
+# adaptive simulator policy: 10% convergence on both hardware profiles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile,policy,static", [
+    (GPU_ONLY, "ours_adaptive", "ours"),
+    (GPU_NDP, "ours_adaptive_ndp", "ours_ndp"),
+])
+def test_adaptive_sim_converges_within_10pct(profile, policy, static):
+    d, fe, e = 4096, 14336, 8
+    from repro.core.quantize import packed_nbytes
+    spec = LayerSpecSim(
+        d, fe, e, 2,
+        bytes_fp16=3 * d * fe * 2,
+        bytes_quant=3 * (packed_nbytes(2, d, fe) + (d // 64) * fe * 4),
+        comp_bytes=[32 * (d + fe)] * e, ranks=[32] * e)
+    trace = make_router_trace(None, 192, 8, 2, seed=0, num_experts=e)
+    lo = simulate_decode(trace, spec, profile, static, top_n=0, num_layers=8)
+    hi = simulate_decode(trace, spec, profile, static, top_n=2, num_layers=8)
+    for frac in (0.4, 0.8):
+        target = (lo.tail_bytes_per_token
+                  + frac * (hi.tail_bytes_per_token
+                            - lo.tail_bytes_per_token))
+        r = simulate_decode(
+            trace, spec, profile, policy, top_n=1, num_layers=8,
+            control=ControlConfig(enabled=True, bytes_per_token=target,
+                                  gain=0.3))
+        err = abs(r.tail_bytes_per_token - target) / target
+        assert err < 0.10, (profile.name, frac, err)
+
+
+def test_adaptive_sim_requires_ranks_and_control():
+    spec = LayerSpecSim(64, 128, 4, 2, bytes_fp16=100, bytes_quant=10,
+                        comp_bytes=[4] * 4)
+    trace = np.zeros((4, 2, 2), np.int64)
+    with pytest.raises(ValueError):
+        simulate_decode(trace, spec, GPU_ONLY, "ours_adaptive")
+    with pytest.raises(ValueError):
+        simulate_decode(trace, spec, GPU_ONLY, "ours_adaptive",
+                        control=ControlConfig(enabled=True,
+                                              bytes_per_token=5.0))

@@ -98,6 +98,32 @@ def test_topn_mask():
         [[0, 1, 0, 1, 0, 0], [0, 0, 1, 0, 0, 1]])
 
 
+def test_topn_mask_n_ge_k_clamps():
+    topk = jnp.asarray([[3, 1, 0], [2, 5, 4]])
+    # n beyond the router width covers exactly the top-k experts
+    m = topn_mask(topk, n=7, num_experts=6)
+    np.testing.assert_array_equal(np.asarray(m),
+                                  np.asarray(topn_mask(topk, 3, 6)))
+    assert np.asarray(m).sum(axis=-1).tolist() == [3, 3]
+
+
+def test_topn_mask_n_zero_is_empty():
+    topk = jnp.asarray([[3, 1, 0], [2, 5, 4]])
+    m = topn_mask(topk, n=0, num_experts=6)
+    assert m.shape == (2, 6)
+    assert np.asarray(m).sum() == 0
+
+
+def test_topn_mask_dense_degenerate_single_expert():
+    # E = 1 (dense quantize-then-compensate): every token restores its
+    # only expert as soon as n >= 1
+    topk = jnp.zeros((4, 1), jnp.int32)
+    m = topn_mask(topk, n=1, num_experts=1)
+    assert m.shape == (4, 1)
+    np.testing.assert_array_equal(np.asarray(m), np.ones((4, 1)))
+    assert np.asarray(topn_mask(topk, 0, 1)).sum() == 0
+
+
 def test_wire_bytes_accounting():
     rng = np.random.default_rng(6)
     w = jnp.asarray(rng.standard_normal((2, 256, 128)).astype(np.float32))

@@ -1,0 +1,92 @@
+"""Docs cross-reference checker (``make docs-check``).
+
+Validates that the documentation graph has no dangling edges:
+
+1. every local markdown link ``[text](target)`` in every ``*.md`` file
+   resolves to an existing file (anchors stripped, URLs skipped);
+2. every bare ``*.md`` path mentioned anywhere — in the docs themselves
+   or in source docstrings/comments (``src/``, ``benchmarks/``,
+   ``examples/``, ``tests/``, ``tools/``) — resolves against the repo
+   root or the mentioning file's directory.
+
+Generated artifacts that are legitimately referenced before they exist
+(e.g. the roofline table the dry-run writes) live in ``GENERATED``.
+
+Exit status 0 = clean; 1 = dangling references (one ``file:line`` diag
+per offence).  No dependencies beyond the stdlib.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# write-targets referenced before they exist (not checked in)
+GENERATED = {"experiments/roofline.md"}
+SKIP_DIRS = {".git", ".github", "__pycache__", ".claude", "experiments"}
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MD_MENTION = re.compile(r"[A-Za-z0-9_./-]*[A-Za-z0-9_-]\.md\b")
+
+
+def repo_files(suffix: str):
+    for p in sorted(ROOT.rglob(f"*{suffix}")):
+        if not SKIP_DIRS.intersection(p.relative_to(ROOT).parts):
+            yield p
+
+
+def resolves(target: str, base: Path) -> bool:
+    t = target.split("#", 1)[0].split("§", 1)[0].strip()
+    if not t or t in GENERATED:
+        return True
+    return (ROOT / t).exists() or (base.parent / t).resolve().exists()
+
+
+def _in_url(line: str, start: int) -> bool:
+    """True when the match at ``start`` is the tail of a URL."""
+    head = line[:start].split()
+    return bool(head) and "://" in head[-1]
+
+
+def check() -> int:
+    problems = []
+    for md in repo_files(".md"):
+        rel = md.relative_to(ROOT)
+        for i, line in enumerate(md.read_text().splitlines(), 1):
+            for m in MD_LINK.finditer(line):
+                target = m.group(1)
+                if "://" in target or target.startswith(("#", "mailto:")):
+                    continue
+                if not resolves(target, md):
+                    problems.append(f"{rel}:{i}: broken link -> {target}")
+            for m in MD_MENTION.finditer(line):
+                if _in_url(line, m.start()):
+                    continue
+                if not resolves(m.group(0), md):
+                    problems.append(
+                        f"{rel}:{i}: dangling doc reference "
+                        f"-> {m.group(0)}")
+    for py in repo_files(".py"):
+        rel = py.relative_to(ROOT)
+        for i, line in enumerate(py.read_text().splitlines(), 1):
+            for m in MD_MENTION.finditer(line):
+                if _in_url(line, m.start()):
+                    continue
+                if not resolves(m.group(0), py):
+                    problems.append(
+                        f"{rel}:{i}: docstring references missing doc "
+                        f"-> {m.group(0)}")
+    for p in problems:
+        print(p)
+    n_md = sum(1 for _ in repo_files(".md"))
+    n_py = sum(1 for _ in repo_files(".py"))
+    status = "FAILED" if problems else "ok"
+    print(f"docs-check {status}: {n_md} md + {n_py} py files, "
+          f"{len(problems)} dangling reference(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())
