@@ -1,24 +1,38 @@
 # Repo verification targets.
 #
 #   make tier1   fast correctness gate (excludes @pytest.mark.slow)
+#   make tier1-dist      multi-device tier: the @pytest.mark.dist tests
+#                        run IN-PROCESS on 8 forced host devices
 #   make test    full suite, including slow/benchmarks-adjacent tests
 #   make bench-smoke     quick continuous-batching serving sweep
+#   make bench-ep        expert-parallel shard-count sweep (8 host devices)
 #   make bench-frontier  bandwidth-budget frontier sweep (controller)
 #   make docs-check      every doc cross-reference resolves
 #   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 test bench-smoke bench-frontier docs-check serve-example
+.PHONY: tier1 tier1-dist test bench-smoke bench-ep bench-frontier \
+	docs-check serve-example
 
+# dist-marked tests are excluded here only to avoid running them twice
+# in CI — tier1-dist runs exactly those, in-process on 8 host devices;
+# the full `make test` / `pytest -x -q` gate still covers both.
 tier1:
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m "not slow and not dist"
+
+tier1-dist:
+	REPRO_HOST_DEVICES=8 $(PY) -m pytest -x -q -m "dist and not slow"
 
 test:
 	$(PY) -m pytest -q
 
 bench-smoke:
 	$(PY) benchmarks/bench_serving.py --quick
+
+bench-ep:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) benchmarks/bench_serving.py --quick --mesh ep=8
 
 bench-frontier:
 	$(PY) benchmarks/bench_serving.py --quick --frontier

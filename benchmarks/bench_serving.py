@@ -43,9 +43,12 @@ from repro.offload import GPU_NDP, GPU_ONLY, LayerSpecSim, simulate_decode
 from repro.serve import ServeEngine, synthetic_workload
 
 
-def _engine(offload: bool = True, keep_weights: bool = False):
+def _engine(offload: bool = True, keep_weights: bool = False,
+            ep: int = 1, cache_capacity: int = 3):
     """Tiny compressed-MoE serve engine (optionally with the original
-    expert weights retained for restoration-error reporting)."""
+    expert weights retained for restoration-error reporting; ``ep`` > 1
+    serves expert-parallel on a ``make_serve_mesh`` mesh)."""
+    from repro.launch.mesh import make_serve_mesh
     cfg = ModelConfig(
         name="serve-bench-moe", family="moe", num_layers=2, d_model=64,
         num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=256,
@@ -54,14 +57,16 @@ def _engine(offload: bool = True, keep_weights: bool = False):
                       quant=QuantConfig(enabled=True, bits=2, rank_budget=16,
                                         top_n_restore=1, hqq_iters=2)))
     params = init_params(jax.random.key(0), cfg, jnp.float32)
+    mesh = make_serve_mesh(ep)
     if not offload:
-        return ServeEngine(cfg, params)
+        return ServeEngine(cfg, params, mesh=mesh)
     weights_by_layer = [
         {k: np.asarray(seg[0]["moe"][k]) for k in ("w1", "w2", "w3")}
         for seg in unstack_params(params, cfg)["segments"]]
     qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
-    eng = ServeEngine(cfg_q, qparams, quantized=True)
-    eng.attach_offload(stacks_by_layer, policy="ours", cache_capacity=3)
+    eng = ServeEngine(cfg_q, qparams, quantized=True, mesh=mesh)
+    eng.attach_offload(stacks_by_layer, policy="ours",
+                       cache_capacity=cache_capacity)
     if keep_weights:
         return eng, stacks_by_layer, weights_by_layer
     return eng
@@ -107,6 +112,46 @@ def run(quick: bool = True, rates: Optional[Tuple[float, ...]] = None,
                 "req_mb_per_tok": float(np.mean(per_req)) / 2 ** 20,
             })
         rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel shard-count sweep (--mesh ep=N)
+# ---------------------------------------------------------------------------
+
+def run_ep_sweep(max_ep: int, quick: bool = True) -> List[Dict]:
+    """Serve the same workload at shard counts 1, 2, ..., max_ep (powers
+    of two) and report tokens/s, total bytes/token, and the hottest
+    shard link's share — the scaling view of expert-parallel serving.
+    Total bytes/token should be flat across rows (conservation) while
+    the hottest link's bytes/token drops as experts spread.
+    """
+    n = 8 if quick else 24
+    max_new = 12 if quick else 32
+    eps, ep = [], 1
+    while ep <= max_ep:
+        eps.append(ep)
+        ep *= 2
+    rows = []
+    for ep in eps:
+        # capacity covers each shard's residents so byte totals compare
+        # across rows (eviction-free regime; see ARCHITECTURE.md)
+        eng = _engine(offload=True, ep=ep, cache_capacity=8)
+        eng.serve(synthetic_workload(2, eng.cfg.vocab_size, max_new=max_new,
+                                     seed=99), num_slots=2, chunk=4)
+        stats = eng.serve(
+            synthetic_workload(n, eng.cfg.vocab_size, max_new=max_new),
+            num_slots=2, chunk=4)
+        rep = stats.offload_report
+        rows.append({
+            "name": f"serving/ep-{ep}",
+            "ep": float(rep["ep"]),
+            "tok_s": stats.tokens_per_s,
+            "kb_per_tok": rep["bytes_per_token"] / 2 ** 10,
+            "max_shard_kb_per_tok": rep["max_shard_bytes_per_token"] / 2 ** 10,
+            "hit_rate": rep["hit_rate"],
+            "chunks": float(stats.chunks),
+        })
     return rows
 
 
@@ -274,9 +319,19 @@ def main():
     ap.add_argument("--frontier", action="store_true",
                     help="sweep bytes/token budgets through the runtime "
                          "controller instead of offered load")
+    ap.add_argument("--mesh", default="",
+                    help="'ep=N': sweep expert-parallel shard counts 1..N "
+                         "(CPU needs XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     args = ap.parse_args()
-    rows = (run_frontier(quick=args.quick) if args.frontier
-            else run(quick=args.quick, offload=not args.no_offload))
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_spec
+        rows = run_ep_sweep(parse_mesh_spec(args.mesh).get("ep", 1),
+                            quick=args.quick)
+    elif args.frontier:
+        rows = run_frontier(quick=args.quick)
+    else:
+        rows = run(quick=args.quick, offload=not args.no_offload)
     for r in rows:
         extra = ",".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
                          for k, v in r.items() if k != "name")

@@ -314,6 +314,15 @@ class ControlConfig:
     min_top_n: int = 0                 # plan floor (0 = pure low-bit)
     max_top_n: int = -1                # plan ceiling (-1 = router top_k)
     rank_fracs: Tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+    # expert-parallel serving: what the bytes/token budget constrains —
+    # 'aggregate' sums every shard's link traffic (one shared host link),
+    # 'per_shard' budgets the HOTTEST shard's link (per-device links: the
+    # slowest link gates decode, so the max is the latency-relevant signal)
+    budget_scope: str = "aggregate"    # aggregate | per_shard
+
+    def __post_init__(self):
+        assert self.budget_scope in ("aggregate", "per_shard"), \
+            self.budget_scope
 
     @property
     def target_bytes_per_token(self) -> float:

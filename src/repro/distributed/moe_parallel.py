@@ -42,18 +42,31 @@ def _moe_param_specs(mp) -> Any:
     return jax.tree_util.tree_map_with_path(one, mp)
 
 
+def ep_size(mesh: Optional[Mesh]) -> int:
+    """Expert-parallel degree of a mesh (size of the EP axis, 1 if none)."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get(EP_AXIS, 1))
+
+
 def make_moe_ep_fn(mesh: Mesh, pcfg: ParallelConfig) -> Callable:
-    """Returns ctx.moe_ep_fn(h, mp, cfg, ctx) -> (y, aux, topk).
+    """Returns ctx.moe_ep_fn(h, mp, cfg, ctx, plan=None) -> (y, aux, topk).
 
     ``topk`` is the (b, s, k) router decision — first-class trace output
     matching the single-shard path, so the serve engine and offload
     metering see identical routing regardless of the execution path.
+
+    ``plan`` is this layer's (2,) int32 [top_n, rank_cap] row of the
+    bandwidth controller's restoration plan (None = static QuantConfig).
+    It enters the shard_map region replicated — every shard applies the
+    same restoration intensity — and stays *data*, so runtime plan
+    changes never recompile the sharded decode loop either.
     """
     all_axes = tuple(mesh.axis_names)
 
-    def moe_ep_fn(h, mp, cfg: ModelConfig, ctx):
+    def moe_ep_fn(h, mp, cfg: ModelConfig, ctx, plan=None):
         mcfg = cfg.moe
-        ep = mesh.shape.get(EP_AXIS, 1)
+        ep = ep_size(mesh)
         quantized = ctx.quantized and "stacks" in mp
         impl = getattr(ctx, "kernel_impl", None)
         mp_local = {k: v for k, v in mp.items() if k != "shared"}
@@ -62,7 +75,7 @@ def make_moe_ep_fn(mesh: Mesh, pcfg: ParallelConfig) -> Callable:
             y2, aux, info = moe_apply(h.reshape(-1, d), mp_local, mcfg,
                                       act=cfg.act, quantized=quantized,
                                       exact_capacity=ctx.exact_capacity,
-                                      impl=impl)
+                                      impl=impl, plan=plan)
             return y2.reshape(b, s, d), aux, info.topk_idx.reshape(b, s, -1)
 
         replicated = ctx.ep_mode == "replicated"
@@ -76,26 +89,33 @@ def make_moe_ep_fn(mesh: Mesh, pcfg: ParallelConfig) -> Callable:
                           (h.shape[0], h.shape[1], mcfg.top_k), pcfg)
         pspecs = _moe_param_specs(mp_local)
         inner = (moe_apply_ep_replicated if replicated else moe_apply_ep_a2a)
+        kw = {} if replicated else {"exact_capacity": ctx.exact_capacity}
 
-        def body(h_l, mp_l):
+        def body(h_l, mp_l, *plan_l):
             b_l, s_l, d = h_l.shape
             y2, aux, info = inner(h_l.reshape(-1, d), mp_l, mcfg, act=cfg.act,
                                   quantized=quantized, axis=EP_AXIS,
-                                  impl=impl)
+                                  impl=impl,
+                                  plan=plan_l[0] if plan_l else None, **kw)
             # replicate aux scalars across the whole mesh (pmean of values
             # already equal along an axis is a no-op)
             aux = jax.tree.map(lambda v: jax.lax.pmean(v, all_axes), aux)
             topk = info.topk_idx.reshape(b_l, s_l, -1)
             return y2.reshape(b_l, s_l, d), aux, topk
 
+        args = (h, mp_local)
+        in_specs = (hspec, pspecs)
+        if plan is not None:
+            args = args + (plan,)
+            in_specs = in_specs + (P(None),)
         y, aux, topk = shard_map(
             body, mesh=mesh,
-            in_specs=(hspec, pspecs),
+            in_specs=in_specs,
             out_specs=(hspec, jax.tree.map(lambda _: P(), {"load_balance": 0,
                                                            "router_z": 0}),
                        tspec),
             check_vma=False,
-        )(h, mp_local)
+        )(*args)
         return y, aux, topk
 
     return moe_ep_fn

@@ -116,6 +116,12 @@ def mesh_spec(mesh: Mesh, logical: Sequence[Optional[str]],
                 entry = axes if len(axes) > 1 else axes[0]
                 used.update(axes)
         out.append(entry)
+    # normalize: trailing Nones are semantically replicated but make
+    # PartitionSpec(None, ...) != PartitionSpec() — distinct jit cache
+    # keys, which would force a spurious first-chunk recompile when a
+    # placed input meets a constraint-normalized output sharding
+    while out and out[-1] is None:
+        out.pop()
     return P(*out)
 
 
@@ -125,6 +131,28 @@ def tree_shardings(mesh: Mesh, tree, pcfg: ParallelConfig, rules=PARAM_RULES):
         p = _path_str(path)
         logical = logical_axes_for(p, len(leaf.shape), rules)
         return NamedSharding(mesh, mesh_spec(mesh, logical, leaf.shape, pcfg))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def tree_constraint(mesh: Optional[Mesh], tree, pcfg: ParallelConfig,
+                    rules=PARAM_RULES):
+    """``with_sharding_constraint`` every leaf of a (traced) pytree by the
+    same path rules ``tree_shardings`` uses for placement.
+
+    Applied by the serve engine to the cache/logits *outputs* of its
+    jitted entry points: pinning outputs to the same rule-derived
+    shardings the inputs were placed with keeps the chunked decode loop's
+    call signature at a fixpoint — one compile per shape bucket instead
+    of a sharding-propagation churn across the first chunks."""
+    if mesh is None:
+        return tree
+
+    def one(path, leaf):
+        logical = logical_axes_for(_path_str(path), leaf.ndim, rules)
+        spec = mesh_spec(mesh, logical, leaf.shape, pcfg)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
 
     return jax.tree_util.tree_map_with_path(one, tree)
 

@@ -19,7 +19,15 @@ admits, retires, and refills requests between chunks:
   ``--offload``): close the loop with the runtime bandwidth-budget
   controller — between scan chunks it retunes the per-layer
   (top_n, rank_cap) restoration plan to meet the budget (B directly, or
-  the bytes/token a ``--link-bw`` link affords at T tokens/s).
+  the bytes/token a ``--link-bw`` link affords at T tokens/s), budgeting
+  either the aggregate link or (``--budget-scope per_shard``) the
+  hottest shard's link;
+- ``--mesh ep=N``: expert-parallel sharded serving — experts (and their
+  quantized planes + compensator factors) partition over an N-way
+  ``('model',)`` mesh, decode runs resident-expert partials + psum under
+  shard_map, and the offload meter splits into per-shard stores whose
+  link bytes reduce into the report.  On CPU this needs
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 import argparse
 
@@ -32,6 +40,7 @@ from ..registry import get_config
 from ..models import init_params
 from ..models.transformer import compress_moe_params
 from ..serve import ServeEngine, synthetic_workload
+from .mesh import make_serve_mesh, parse_mesh_spec
 
 
 def main():
@@ -55,6 +64,11 @@ def main():
                     help="decode steps per scan chunk; the scheduler "
                          "refills finished slots between chunks")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="expert-parallel serving mesh, e.g. 'ep=4': "
+                         "partition experts over N devices (CPU needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     # -- offload + bandwidth-budget controller ---------------------------
     ap.add_argument("--offload", action="store_true",
                     help="compress MoE experts and meter offloaded serving "
@@ -68,6 +82,10 @@ def main():
                     help="bandwidth SLO: budget = link-bw / target tok/s")
     ap.add_argument("--link-bw", type=float, default=25e9,
                     help="link bandwidth (bytes/s) for --target-tokens-per-s")
+    ap.add_argument("--budget-scope", default="aggregate",
+                    choices=("aggregate", "per_shard"),
+                    help="what the byte budget constrains under --mesh: "
+                         "the summed links or the hottest shard's link")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_config)
@@ -75,6 +93,8 @@ def main():
         print(f"note: {cfg.name} needs frontend inputs; serving the "
               f"text-only path")
     params = init_params(jax.random.key(0), cfg, jnp.float32)
+    mesh = make_serve_mesh(parse_mesh_spec(args.mesh).get("ep", 1)
+                           if args.mesh else 1)
 
     want_budget = args.bytes_per_token > 0 or args.target_tokens_per_s > 0
     if want_budget and not args.offload:
@@ -84,16 +104,16 @@ def main():
         if cfg.moe is None:
             ap.error(f"--offload needs an MoE arch; {cfg.name} has none")
         qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
-        eng = ServeEngine(cfg_q, qparams, quantized=True)
+        eng = ServeEngine(cfg_q, qparams, quantized=True, mesh=mesh)
         eng.attach_offload(stacks_by_layer, policy="ours",
                            cache_capacity=args.cache_experts)
         if want_budget:
             eng.attach_controller(ControlConfig(
                 enabled=True, bytes_per_token=args.bytes_per_token,
                 tokens_per_s=args.target_tokens_per_s,
-                link_bw=args.link_bw))
+                link_bw=args.link_bw, budget_scope=args.budget_scope))
     else:
-        eng = ServeEngine(cfg, params)
+        eng = ServeEngine(cfg, params, mesh=mesh)
 
     if args.requests > 0:
         reqs = synthetic_workload(
@@ -116,6 +136,12 @@ def main():
                   f"{rep['bytes_per_token'] / 2**10:.1f} KiB/token, "
                   f"cache hit {rep['hit_rate']:.0%}, prefetch accuracy "
                   f"{rep['prefetch_accuracy']:.0%}")
+            if rep["ep"] > 1:
+                shares = ", ".join(f"{b / 2**10:.0f}"
+                                   for b in rep["per_shard_bytes"])
+                print(f"  per-shard links (ep={rep['ep']}): [{shares}] KiB, "
+                      f"hottest {rep['max_shard_bytes_per_token'] / 2**10:.1f}"
+                      f" KiB/token")
         if eng.controller is not None and eng.controller.history:
             c = eng.controller
             tail = c.history[len(c.history) // 2:]

@@ -16,6 +16,16 @@ Selection follows the kernel dispatch policy in ``kernels.ops``
 (``REPRO_KERNEL_IMPL`` env / ``impl`` argument: auto | pallas |
 pallas_interpret | ref), so the Pallas kernels are reachable from the
 model rather than dead code behind the benchmarks.
+
+Expert-parallel serving runs these same backends INSIDE the shard_map
+regions of ``distributed/moe_parallel.py``: the ``params`` dict then
+carries each shard's LOCAL expert slice — ``(E/ep, ...)`` weight /
+stack leaves (with ``CompressedExpertStack.shape`` still naming the
+global E, which is static metadata; kernels index only runtime leaves)
+— and ``xe`` the shard's dispatched ``(E_local, C, d)`` buffers.  The
+engine's ``kernel_impl`` threads through ``ExecContext`` into the
+region, so one dispatch policy selects the execution path on every
+shard, sharded or not.
 """
 from __future__ import annotations
 
@@ -120,7 +130,10 @@ def select_backend(params: Dict, quantized: bool,
     Dense weights (or ``quantized=False``) always run the einsum path;
     compressed stacks dispatch on the resolved kernel impl policy
     (``REPRO_KERNEL_IMPL`` / ``impl``): 'ref' uses the batched einsum
-    oracle, 'pallas'/'pallas_interpret' the fused kernel.
+    oracle, 'pallas'/'pallas_interpret' the fused kernel.  Called per
+    shard inside the expert-parallel shard_map paths with the local
+    param slice — the decision depends only on tree structure and the
+    impl policy, so every shard selects the same backend.
     """
     if not quantized or "stacks" not in params:
         return DenseBackend()

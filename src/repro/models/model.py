@@ -78,7 +78,10 @@ def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
 
     ``plan``: optional (num_moe_layers, 2) int32 [top_n, rank_cap] array
     — traced data with a static shape, so per-chunk plan updates from the
-    bandwidth controller never recompile the decode loop."""
+    bandwidth controller never recompile the decode loop.  Under
+    expert-parallel serving (``ctx.moe_ep_fn`` + ``ep_mode``) each MoE
+    layer's plan row rides into the shard_map region replicated, so the
+    guarantee holds on a mesh too."""
     b = tokens.shape[0]
     positions = caches["pos"][:, None]        # (B, 1) absolute position
     x = embed_tokens(params, tokens, cfg, positions)

@@ -170,18 +170,22 @@ def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
                      act: str = "silu", quantized: bool = False,
                      axis: str = "model", impl: Optional[str] = None,
                      backend: Optional[ExpertBackend] = None,
-                     plan: Optional[jax.Array] = None
+                     plan: Optional[jax.Array] = None,
+                     exact_capacity: bool = False
                      ) -> Tuple[jax.Array, Dict[str, jax.Array], RoutingInfo]:
     """Tokens local, experts sharded on ``axis``: dispatch via all_to_all.
 
     params['w*'] / stack leaves carry the LOCAL expert slice (E_local, ...).
+    ``exact_capacity`` dispatches at capacity = local tokens (drop-free),
+    so a sharded serve matches the single-device engine's drop behaviour
+    token for token.
     """
     t = x2.shape[0]
     ep = axis_size(axis)
     e_total = mcfg.num_experts
     backend = backend or select_backend(params, quantized, impl)
     info = route(x2, params["router"], mcfg)
-    cap = _capacity(t, mcfg, False)
+    cap = _capacity(t, mcfg, exact_capacity)
     top_n, rank_cap = _plan_knobs(mcfg, quantized, plan)
     disp = make_dispatch(info, e_total, cap, top_n)
     xe, me = dispatch_tokens(x2, disp, e_total)          # (E, C, d) local

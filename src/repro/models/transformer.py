@@ -647,7 +647,9 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
     else:  # moe
         mp = p["moe"]
         if ctx.moe_ep_fn is not None and ctx.ep_mode != "none":
-            y, aux, topk = ctx.moe_ep_fn(h, mp, cfg, ctx)   # topk: (b, s, k)
+            # topk: (b, s, k); the controller's plan row rides into the
+            # shard_map region as replicated data (no recompile on change)
+            y, aux, topk = ctx.moe_ep_fn(h, mp, cfg, ctx, plan_row)
         else:
             b, s, d = h.shape
             y2, aux, info = moe_apply(

@@ -5,5 +5,6 @@ from .cache import *  # noqa
 from .prefetch import LayerAheadPrefetcher, PrefetchStats
 from .simulator import LayerSpecSim, SimResult, make_router_trace, simulate_decode
 from .store import (ExpertCache, ExpertStore, FetchStats,
+                    ShardedExpertStore, make_expert_stores,
                     meter_decode_trace, offload_report, replay_decode_trace,
                     snapshot_offload)

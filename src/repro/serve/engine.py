@@ -24,6 +24,15 @@ step's routing decisions are replayed into the per-layer metered
 prefetch accuracy come from live serving rather than only the synthetic
 simulator; inactive scheduler slots are masked (expert id -1) before
 metering.
+
+With a serving mesh (``mesh=make_serve_mesh(ep)``) the same entry
+points run expert-parallel: experts partition over the mesh's ``model``
+axis, the decode scan executes the MoE layers under shard_map
+(resident-expert partials + psum), the offload meter splits into
+per-shard stores whose link bytes reduce into ``ServeStats``, and the
+controller can budget either the aggregate or the hottest shard link
+(``ControlConfig.budget_scope``).  See ARCHITECTURE.md
+§Expert-parallel sharded serving.
 """
 from __future__ import annotations
 
@@ -36,7 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..config import ControlConfig, ModelConfig, ServeConfig
+from ..config import ControlConfig, ModelConfig, ParallelConfig, ServeConfig
+from ..distributed.moe_parallel import ep_size
+from ..distributed.sharding import (CACHE_RULES, PARAM_RULES,
+                                    tree_constraint, tree_shardings)
 from ..models import model as lm
 from ..models.transformer import (ExecContext, cache_claim_slot, init_caches,
                                   layer_specs, mask_cache_padding)
@@ -97,6 +109,9 @@ class ServeStats:
     # (chunks, moe_layers, 2) per-chunk controller plan [top_n, rank_cap]
     # (None when no bandwidth controller is attached)
     plan_trace: Optional[np.ndarray] = None
+    # (ep,) wire bytes that crossed each expert-parallel shard's link
+    # (the per-shard reduction; length 1 on the single-device path)
+    shard_bytes: Optional[np.ndarray] = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -119,12 +134,32 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = None,
                  quantized: bool = False, collect_router_trace: bool = True,
                  kernel_impl: Optional[str] = None,
-                 cache_dtype: Optional[Any] = None):
+                 cache_dtype: Optional[Any] = None,
+                 mesh: Optional[Any] = None,
+                 pcfg: Optional[ParallelConfig] = None):
+        """``mesh``: optional expert-parallel serving mesh
+        (``launch.mesh.make_serve_mesh``).  Expert weights — quantized
+        planes, scales, and low-rank compensator factors — are partitioned
+        over the mesh's ``model`` axis, prefill dispatches tokens to their
+        expert shards via all_to_all and decode runs resident-expert
+        partials + psum under ``shard_map`` (``distributed/moe_parallel``),
+        all inside the same jitted entry points as the single-device path.
+        The expert-FFN implementation inside each shard still follows the
+        ``REPRO_KERNEL_IMPL`` / ``kernel_impl`` dispatch policy."""
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
-        self.params = params
         self.quantized = quantized
         self.kernel_impl = kernel_impl
+        self.mesh = mesh
+        self.pcfg = pcfg or ParallelConfig()
+        self.ep = ep_size(mesh)
+        if mesh is not None:
+            # partition params by the logical-axis rules (expert dim and
+            # compressed stacks onto the EP axis; small leaves replicate)
+            params = jax.device_put(
+                params, tree_shardings(mesh, jax.eval_shape(lambda: params),
+                                       self.pcfg))
+        self.params = params
         # KV caches follow the model's compute dtype (bf16 params must not
         # silently double KV memory with f32 caches); overridable, e.g.
         # cache_dtype=jnp.float32 for f32 accumulation studies.
@@ -147,10 +182,11 @@ class ServeEngine:
         self._controller = None        # BandwidthController (attach_controller)
         self._prefill_ctx = make_context(cfg, "prefill", quantized=quantized,
                                          exact_capacity=True,
-                                         kernel_impl=kernel_impl)
+                                         kernel_impl=kernel_impl,
+                                         mesh=mesh, pcfg=self.pcfg)
         self._step_ctx = make_context(
             cfg, "step", quantized=quantized, exact_capacity=True,
-            kernel_impl=kernel_impl,
+            kernel_impl=kernel_impl, mesh=mesh, pcfg=self.pcfg,
             collect_trace=self.collect_router_trace)
 
         @jax.jit
@@ -166,7 +202,7 @@ class ServeEngine:
             caches = mask_cache_padding(cfg, out.caches, plen)
             logits = jnp.take_along_axis(
                 out.logits, (plen - 1)[:, None, None], axis=1)[:, 0]
-            return logits, caches
+            return self._pin_logits(logits), self._pin_caches(caches)
 
         @functools.partial(jax.jit,
                            static_argnames=("max_new", "temperature"),
@@ -199,7 +235,7 @@ class ServeEngine:
 
             (logits, caches, key), ys = jax.lax.scan(
                 body, (logits0, caches, key), xs=None, length=max_new)
-            return logits, caches, key, ys
+            return self._pin_logits(logits), self._pin_caches(caches), key, ys
 
         @functools.partial(jax.jit, donate_argnums=(0, 2))
         def claim(caches, req_caches, logits, req_logits, slot):
@@ -209,7 +245,7 @@ class ServeEngine:
             caches = cache_claim_slot(cfg, caches, req_caches, slot)
             logits = jax.lax.dynamic_update_slice_in_dim(
                 logits, req_logits.astype(logits.dtype), slot, 0)
-            return caches, logits
+            return self._pin_caches(caches), self._pin_logits(logits)
 
         self._prefill = prefill
         self._decode_loop = decode_loop
@@ -233,15 +269,24 @@ class ServeEngine:
     def attach_offload(self, stacks_by_layer: List[Dict],
                        policy: str = "ours",
                        cache_capacity: Optional[int] = None,
-                       prefetch: bool = True):
+                       prefetch: bool = True, ep: Optional[int] = None):
         """Meter every generated token's expert fetches through per-layer
-        host-side ``ExpertStore``s (LRU device cache + compensator bytes)."""
-        from ..offload.store import ExpertStore
+        host-side ``ExpertStore``s (LRU device cache + compensator bytes).
+
+        ``ep`` (default: the engine mesh's expert-parallel degree)
+        partitions each layer's store into per-shard sub-stores matching
+        the device-side expert placement: each shard meters only its
+        resident experts' wire bytes over its own device LRU, and the
+        per-shard counters reduce into ``ServeStats`` (``shard_bytes``,
+        ``offload_report['per_shard_bytes']``) and feed the bandwidth
+        controller's ``budget_scope``."""
+        from ..offload.store import make_expert_stores
         from ..offload.prefetch import LayerAheadPrefetcher
         cap = (self.scfg.cache_experts if cache_capacity is None
                else cache_capacity)
-        self._stores = [ExpertStore(stacks, cache_capacity=cap)
-                        for stacks in stacks_by_layer]
+        self._stores = make_expert_stores(
+            stacks_by_layer, ep=self.ep if ep is None else ep,
+            cache_capacity=cap)
         self._offload_policy = policy
         if prefetch:
             self._prefetcher = LayerAheadPrefetcher(
@@ -282,6 +327,65 @@ class ServeEngine:
     def _plan_device(plan: Optional[ControllerPlan]):
         return None if plan is None else jnp.asarray(plan.as_array())
 
+    def _shard_totals(self) -> np.ndarray:
+        """(ep,) cumulative wire bytes per expert-parallel shard link,
+        reduced over layers (length 1 for unsharded stores)."""
+        if not self._stores:
+            return np.zeros((1,), np.int64)
+        return sum(np.asarray(s.shard_totals, np.int64)
+                   for s in self._stores)
+
+    # -- mesh placement / sharding pins ------------------------------------
+    def _pin_caches(self, caches):
+        """Rule-derived sharding constraint on (traced) cache outputs —
+        the same rules their initial placement uses, so every chunked
+        call of the jitted entry points sees one fixed cache-sharding
+        signature (one compile per bucket, no propagation churn)."""
+        if self.mesh is None:
+            return caches
+        return tree_constraint(self.mesh, caches, self.pcfg,
+                               CACHE_RULES + PARAM_RULES)
+
+    def _logits_sharding(self, shape):
+        """Rule-derived logits sharding (batch logical, rest replicated)
+        — single definition shared by the output pin and the initial
+        placement so the two can never diverge into a recompile."""
+        from jax.sharding import NamedSharding
+        from ..distributed.sharding import mesh_spec
+        return NamedSharding(self.mesh, mesh_spec(
+            self.mesh, ("batch",) + (None,) * (len(shape) - 1), shape,
+            self.pcfg))
+
+    def _pin_logits(self, logits):
+        if self.mesh is None:
+            return logits
+        return jax.lax.with_sharding_constraint(
+            logits, self._logits_sharding(logits.shape))
+
+    def _place_replicated(self, x):
+        """Commit a host-created array (RNG key, zeros logits) to the
+        serving mesh replicated — an uncommitted single-device input
+        would give the first chunked call a different sharding signature
+        than the loop's own (mesh-sharded) outputs and cost one spurious
+        recompile."""
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.device_put(x, NamedSharding(self.mesh, PartitionSpec()))
+
+    def _make_caches(self, batch: int, cache_len: int):
+        """Fresh caches, placed by the CACHE_RULES shardings when serving
+        on a mesh (committed placement: the first jitted call already has
+        the fixpoint input sharding)."""
+        caches = init_caches(self.cfg, batch, max_len=cache_len,
+                             dtype=self.cache_dtype)
+        if self.mesh is not None:
+            caches = jax.device_put(
+                caches, tree_shardings(self.mesh,
+                                       jax.eval_shape(lambda: caches),
+                                       self.pcfg, CACHE_RULES + PARAM_RULES))
+        return caches
+
     def _meter_offload(self, trace: np.ndarray,
                        plan: Optional[ControllerPlan] = None
                        ) -> Dict[str, float]:
@@ -314,8 +418,7 @@ class ServeEngine:
         request, against a fresh cache of the serve run's bucket length."""
         toks = self._pad_prompt(np.asarray(req.tokens,
                                            np.int32).reshape(1, -1))
-        caches = init_caches(self.cfg, 1, max_len=cache_len,
-                             dtype=self.cache_dtype)
+        caches = self._make_caches(1, cache_len)
         return self._prefill(self.params, caches, jnp.asarray(toks),
                              jnp.full((1,), req.prompt_len, jnp.int32))
 
@@ -326,8 +429,7 @@ class ServeEngine:
         b, plen = prompt_tokens.shape
         padded = self._pad_prompt(np.asarray(prompt_tokens, np.int32))
         cache_len = bucket_len(padded.shape[1] + max_new + 1)
-        caches = init_caches(cfg, b, max_len=cache_len,
-                             dtype=self.cache_dtype)
+        caches = self._make_caches(b, cache_len)
         t0 = time.time()
         logits, caches = self._prefill(
             self.params, caches, jnp.asarray(padded),
@@ -338,7 +440,8 @@ class ServeEngine:
         plan = self._current_plan()
         t1 = time.time()
         logits, caches, _key, ys = self._decode_loop(
-            self.params, caches, logits, jax.random.key(seed),
+            self.params, caches, logits,
+            self._place_replicated(jax.random.key(seed)),
             self._plan_device(plan), max_new, self.scfg.temperature)
         logits.block_until_ready()
         t_decode = time.time() - t1
@@ -350,7 +453,8 @@ class ServeEngine:
         report = (self._meter_offload(trace, plan)
                   if trace is not None and self._stores else None)
         if report is not None and self._controller is not None:
-            self._controller.update(report["total_bytes"], report["tokens"])
+            self._controller.update(report["total_bytes"], report["tokens"],
+                                    shard_bytes=report["per_shard_bytes"])
         return GenerationResult(toks, logprobs, t_prefill, t_decode, max_new,
                                 router_trace=trace, offload_report=report)
 
@@ -386,13 +490,12 @@ class ServeEngine:
         cache_len = bucket_len(
             max(bucket_len(r.prompt_len, PROMPT_BUCKET_MIN) + r.max_new
                 for r in reqs) + 1)
-        caches = init_caches(cfg, num_slots, max_len=cache_len,
-                             dtype=self.cache_dtype)
+        caches = self._make_caches(num_slots, cache_len)
         sched = Scheduler(num_slots)
         for r in reqs:
             sched.submit(r)
 
-        key = jax.random.key(seed)
+        key = self._place_replicated(jax.random.key(seed))
         logits = None
         top_n = cfg.moe.quant.top_n_restore if cfg.moe is not None else 1
         snap = (snapshot_offload(self._stores, self._prefetcher)
@@ -415,6 +518,9 @@ class ServeEngine:
                 lg, rc = self._prefill_request(req, cache_len)
                 if logits is None:
                     logits = jnp.zeros((num_slots,) + lg.shape[1:], lg.dtype)
+                    if self.mesh is not None:
+                        logits = jax.device_put(
+                            logits, self._logits_sharding(logits.shape))
                 caches, logits = self._claim(caches, rc, logits, lg,
                                              jnp.int32(slot))
                 prefill_s += time.perf_counter() - tp
@@ -443,6 +549,7 @@ class ServeEngine:
                 traces.append(masked)
                 if self._stores:
                     before = sum(s.total_bytes for s in self._stores)
+                    shard_before = self._shard_totals()
                     ntok, slot_bytes = replay_decode_trace(
                         self._stores, masked, policy=self._offload_policy,
                         top_n=top_n if plan is None else plan.top_n,
@@ -452,10 +559,13 @@ class ServeEngine:
                     sched.add_slot_bytes(slot_bytes, uid_map)
                     if self._controller is not None:
                         # chunk boundary: the chunk's wire bytes (demand +
-                        # compensator + prefetch) close the control loop
+                        # compensator + prefetch) close the control loop;
+                        # per-shard deltas feed the per_shard budget scope
                         moved = sum(s.total_bytes
                                     for s in self._stores) - before
-                        self._controller.update(moved, ntok)
+                        self._controller.update(
+                            moved, ntok,
+                            shard_bytes=self._shard_totals() - shard_before)
 
         total_s = time.perf_counter() - t0
         report = (offload_report(self._stores, self._prefetcher, snap,
@@ -468,7 +578,10 @@ class ServeEngine:
                           offload_report=report,
                           router_trace=(np.concatenate(traces)
                                         if traces else None),
-                          plan_trace=(np.stack(plans) if plans else None))
+                          plan_trace=(np.stack(plans) if plans else None),
+                          shard_bytes=(np.asarray(report["per_shard_bytes"],
+                                                  np.int64)
+                                       if report is not None else None))
 
     def generate_many(self, prompts: Sequence[np.ndarray],
                       max_new: int = 32, *,

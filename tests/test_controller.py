@@ -14,6 +14,7 @@ from repro.core.restoration import compensated_expert_ffn
 from repro.models import init_params
 from repro.models.transformer import compress_moe_params
 from repro.offload import (GPU_NDP, GPU_ONLY, ExpertStore, LayerSpecSim,
+                           ShardedExpertStore, make_expert_stores,
                            replay_decode_trace, simulate_decode)
 from repro.offload.simulator import make_router_trace
 from repro.serve import (BandwidthController, ServeEngine, static_plan,
@@ -193,6 +194,141 @@ def test_replay_per_layer_plan_matches_scalar_when_uniform():
     assert t1 == t2
     assert (sum(s.total_bytes for s in s_scalar)
             == sum(s.total_bytes for s in s_array))
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel sharded metering + shard-aware control
+# ---------------------------------------------------------------------------
+
+def _moe_stacks(seed=0, e=8):
+    """Multi-expert stacks (the sharded store needs E > 1 to partition)."""
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.standard_normal((e, 64, 128)).astype(np.float32))
+    w2 = jnp.asarray(rng.standard_normal((e, 128, 64)).astype(np.float32))
+    w3 = jnp.asarray(rng.standard_normal((e, 64, 128)).astype(np.float32))
+    qcfg = QuantConfig(enabled=True, bits=2, rank_budget=8, hqq_iters=2,
+                       group_size=16, factor_group_size=16)
+    stacks, _ = compress_ffn_weights(w1, w2, w3, qcfg)
+    return stacks
+
+
+def _trace(steps=40, layers=2, b=2, k=2, e=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, e, (steps, layers, b, k))
+
+
+def test_sharded_store_conserves_bytes_across_shard_counts():
+    """Eviction-free regime (per-shard capacity >= residents): the same
+    routing trace meters IDENTICAL total bytes, hits, and misses at every
+    shard count, and per-shard bytes sum to the total — residency and
+    resident-rank-cap state are per-expert, so they decompose exactly
+    over any expert partition."""
+    stacks = _moe_stacks()
+    trace = _trace()
+    ref = [ExpertStore(stacks, cache_capacity=8),
+           ExpertStore(stacks, cache_capacity=8)]
+    t_ref, _ = replay_decode_trace(ref, trace, top_n=1, rank_caps=[4, 8])
+    total_ref = sum(s.total_bytes for s in ref)
+    hits_ref = sum(s.cache.stats.hits for s in ref)
+    assert total_ref > 0
+    for ep in (2, 4, 8):
+        sh = [ShardedExpertStore(stacks, ep, cache_capacity=8)
+              for _ in range(2)]
+        t_sh, _ = replay_decode_trace(sh, trace, top_n=1, rank_caps=[4, 8])
+        assert t_sh == t_ref
+        assert sum(s.total_bytes for s in sh) == total_ref, ep
+        assert sum(s.cache.stats.hits for s in sh) == hits_ref, ep
+        for s in sh:
+            assert int(s.shard_totals.sum()) == s.total_bytes
+            assert s.shard_totals.shape == (ep,)
+
+
+def test_sharded_store_rank_positions_preserved():
+    """A token's foreign experts are masked in place, so the rank < top_n
+    compensation decision matches the single-store path exactly."""
+    stacks = _moe_stacks()
+    single = ExpertStore(stacks, cache_capacity=8)
+    sharded = ShardedExpertStore(stacks, 4, cache_capacity=8)
+    topk = np.array([5, 1])      # rank 0 on shard 2, rank 1 on shard 0
+    b1 = single.access_token(topk, top_n=1, policy="ours")
+    b2 = sharded.access_token(topk, top_n=1, policy="ours")
+    assert b1 == b2
+    assert sharded.comp_bytes_moved == single.comp_bytes_moved > 0
+    # only expert 5 (global rank 0) was compensated, on its owning shard
+    assert sharded.shards[2].comp_bytes_moved == sharded.comp_bytes_moved
+    assert sharded.shards[0].comp_bytes_moved == 0
+
+
+def test_make_expert_stores_falls_back_when_not_partitionable():
+    stacks = _moe_stacks(e=8)
+    stores = make_expert_stores([stacks], ep=4, cache_capacity=2)
+    assert isinstance(stores[0], ShardedExpertStore)
+    stores = make_expert_stores([stacks], ep=3, cache_capacity=2)
+    assert isinstance(stores[0], ExpertStore)     # 8 % 3: GSPMD fallback
+    stores = make_expert_stores([stacks], ep=1, cache_capacity=2)
+    assert isinstance(stores[0], ExpertStore)
+
+
+def test_controller_plan_invariant_across_shard_counts():
+    """Same trace + same budget => same plan sequence at every shard
+    count (aggregate scope): per-shard bytes sum to the single-store
+    bytes, so the controller's input signal — and therefore its
+    deterministic level trajectory — cannot depend on ep."""
+    stacks = _moe_stacks()
+    trace = _trace(steps=48)
+    plans_by_ep = {}
+    for ep in (1, 2, 4):
+        stores = make_expert_stores([stacks, stacks], ep=ep,
+                                    cache_capacity=8)
+        c = BandwidthController.from_stacks(
+            [s.stacks for s in stores], 2,
+            ControlConfig(enabled=True, bytes_per_token=20_000.0, gain=0.4),
+            static_top_n=1)
+        plans = []
+        for chunk in np.split(trace, 8):        # 8 chunk-boundary updates
+            plan = c.plan()
+            before = sum(s.total_bytes for s in stores)
+            shard_before = sum(np.asarray(s.shard_totals) for s in stores)
+            ntok, _ = replay_decode_trace(stores, chunk, top_n=plan.top_n,
+                                          rank_caps=plan.rank_cap)
+            moved = sum(s.total_bytes for s in stores) - before
+            shard_moved = (sum(np.asarray(s.shard_totals) for s in stores)
+                           - shard_before)
+            plans.append(c.update(moved, ntok,
+                                  shard_bytes=shard_moved).as_array())
+        plans_by_ep[ep] = np.stack(plans)
+    np.testing.assert_array_equal(plans_by_ep[1], plans_by_ep[2])
+    np.testing.assert_array_equal(plans_by_ep[1], plans_by_ep[4])
+
+
+def test_per_shard_budget_scope_targets_hottest_link():
+    """With budget_scope='per_shard' the controller reacts to the MAX
+    shard's bytes/token; the aggregate scope to the sum.  A skewed load
+    that is under budget in aggregate but over it on one link must
+    throttle only the per-shard controller."""
+    mk = lambda scope: BandwidthController(
+        [16, 16], 2,
+        ControlConfig(enabled=True, bytes_per_token=1000.0, gain=0.5,
+                      ema=1.0, budget_scope=scope), static_top_n=1)
+    agg, per = mk("aggregate"), mk("per_shard")
+    skewed = np.array([1800, 100, 50, 50])     # sum 2000, max 1800
+    # 1 token: aggregate 2000 B/tok and hottest link 1800 B/tok are both
+    # over the 1000 budget => both scopes throttle
+    lvl_a, lvl_p = agg.level, per.level
+    agg.update(2000, 1, shard_bytes=skewed)
+    per.update(2000, 1, shard_bytes=skewed)
+    assert agg.level < lvl_a and per.level < lvl_p   # both over budget
+    agg2, per2 = mk("aggregate"), mk("per_shard")
+    balanced = np.array([600, 600, 600, 600])  # sum 2400 over, links under
+    lvl_a, lvl_p = agg2.level, per2.level
+    agg2.update(2400, 1, shard_bytes=balanced)
+    per2.update(2400, 1, shard_bytes=balanced)
+    assert agg2.level < lvl_a                  # aggregate throttles
+    assert per2.level > lvl_p                  # links under budget: restore
+                                               # MORE on every link
+    # recorded telemetry reflects the controlled signal
+    assert per2.history[-1].bytes_per_token == 600.0
+    assert agg2.history[-1].bytes_per_token == 2400.0
 
 
 # ---------------------------------------------------------------------------

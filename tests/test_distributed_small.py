@@ -1,18 +1,17 @@
 """Distribution layer on a small in-process mesh.
 
-Runs in a SUBPROCESS with 8 host devices (the conftest keeps the main
-test process at 1 device, per the assignment's instruction not to set the
-override globally)."""
-import json
-import subprocess
-import sys
+Runs through the shared ``dist_run`` conftest fixture: with
+``REPRO_HOST_DEVICES=8`` set (``make tier1-dist`` / the dist CI job) the
+script executes in-process on 8 host devices; otherwise it runs in a
+subprocess with the XLA host-device override forced — either way the
+distributed tier actually executes, it never skips."""
 import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.dist
+
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax
     import jax.numpy as jnp
@@ -104,16 +103,8 @@ SCRIPT = textwrap.dedent("""
 
 
 @pytest.fixture(scope="module")
-def mesh_results():
-    proc = subprocess.run(
-        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        env={**__import__("os").environ, "PYTHONPATH": "src",
-             "JAX_PLATFORMS": "cpu"},
-        cwd=__import__("pathlib").Path(__file__).parent.parent, timeout=500)
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines()
-            if l.startswith("RESULTS:")][0]
-    return json.loads(line[len("RESULTS:"):])
+def mesh_results(dist_run):
+    return dist_run(SCRIPT)
 
 
 def test_ep_matches_single_device(mesh_results):

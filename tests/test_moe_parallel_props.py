@@ -1,0 +1,176 @@
+"""Property tests for the MoE all-to-all dispatch/combine core.
+
+``moe_apply_ep_a2a`` / ``moe_apply_ep_replicated`` are both built from
+``make_dispatch`` / ``dispatch_tokens`` / ``combine_tokens`` plus a
+collective; these properties pin the host-side invariants the
+collectives rely on:
+
+- dispatch/combine is a permutation inverse at exact capacity: every
+  (token, expert) assignment lands in exactly one (expert, slot) cell,
+  no token is lost or duplicated, and combining the identity expert
+  reproduces the input exactly (normalized gates sum to 1);
+- the expert-parallel shard decomposition is exact: mapping global
+  expert ids into per-shard local slices (the OOB-sentinel arithmetic
+  of ``moe_apply_ep_replicated``) partitions the assignments, and the
+  shard-wise combines SUM to the global combine — the algebraic fact
+  the decode path's psum implements;
+- ``top_n`` edges: n >= k compensates every assignment, n = 0 none.
+
+Each property runs under hypothesis (random T, E, k, top_n, shard
+counts, including empty-expert and n >= k edges) when available, and on
+a deterministic case matrix regardless — the checks themselves are
+shared, so the tier executes even without the hypothesis dependency.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MoEConfig
+from repro.models.moe import (combine_tokens, dispatch_tokens, make_dispatch,
+                              route)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:     # container without hypothesis: deterministic matrix
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _routing(t, e, k, seed):
+    """Realistic routing: softmax-then-topk over random logits (distinct
+    experts per token, normalized gates)."""
+    rng = np.random.default_rng(seed)
+    mcfg = MoEConfig(num_experts=e, top_k=k, d_expert=8)
+    x2 = jnp.asarray(rng.standard_normal((t, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, e)), jnp.float32)
+    return x2, route(x2, w, mcfg)
+
+
+# ---------------------------------------------------------------------------
+# shared property checks
+# ---------------------------------------------------------------------------
+
+def check_roundtrip_permutation_inverse(t, e, k, top_n, seed):
+    """Exact capacity: dispatch scatters injectively, combine inverts."""
+    x2, info = _routing(t, e, k, seed)
+    disp = make_dispatch(info, e, t, top_n)
+    e_idx = np.asarray(disp.e_idx)
+    slot = np.asarray(disp.slot)
+    t_idx = np.asarray(disp.t_idx)
+
+    # no assignment dropped at exact capacity, and (expert, slot) cells
+    # are unique: nothing overwrites, nothing is lost
+    assert (slot < t).all()
+    cells = set(zip(e_idx.tolist(), slot.tolist()))
+    assert len(cells) == t * k
+
+    xe, me = dispatch_tokens(x2, disp, e)
+    xe_np = np.asarray(xe)
+    # every assignment's token is present where dispatch says it is
+    x_np = np.asarray(x2)
+    for a in range(t * k):
+        np.testing.assert_array_equal(xe_np[e_idx[a], slot[a]],
+                                      x_np[t_idx[a]])
+    # experts beyond any token's top-k stay empty (empty-expert edge)
+    routed = set(e_idx.tolist())
+    for expert in range(e):
+        if expert not in routed:
+            assert not xe_np[expert].any()
+
+    # identity expert + normalized gates => combine returns the input
+    y = np.asarray(combine_tokens(xe, disp, t))
+    np.testing.assert_allclose(y, x_np, rtol=1e-5, atol=1e-5)
+
+    # top_n edges ride the same dispatch: the comp mask covers exactly
+    # the rank < top_n assignments (all at n >= k, none at n = 0)
+    me_np = np.asarray(me)
+    comp_cells = int((me_np > 0).sum())
+    assert comp_cells == t * min(top_n, k)
+
+
+def check_shard_decomposition(t, e, k, ep, seed):
+    """Per-shard local dispatch partitions the global assignments and the
+    shard combines sum to the global combine (what psum computes)."""
+    assert e % ep == 0
+    x2, info = _routing(t, e, k, seed)
+    e_local = e // ep
+
+    g_disp = make_dispatch(info, e, t, 1)
+    xe_g, _ = dispatch_tokens(x2, g_disp, e)
+    y_global = np.asarray(combine_tokens(xe_g, g_disp, t))
+
+    y_sum = np.zeros_like(y_global)
+    occupied = 0
+    for m in range(ep):
+        # the moe_apply_ep_replicated id mapping: foreign ids -> OOB
+        # sentinel row e_local with gate 0
+        topi_local = np.asarray(info.topk_idx) - m * e_local
+        oob = (topi_local < 0) | (topi_local >= e_local)
+        topi_local = np.where(oob, e_local, topi_local)
+        gates = np.where(oob, 0.0, np.asarray(info.gates))
+        local = info._replace(topk_idx=jnp.asarray(topi_local),
+                              gates=jnp.asarray(gates.astype(np.float32)))
+        disp = make_dispatch(local, e_local + 1, t, 1)
+        xe, _ = dispatch_tokens(x2, disp, e_local + 1)
+        xe_np = np.asarray(xe)
+        occupied += int((np.abs(xe_np[:e_local]).sum(-1) > 0).sum())
+        ye = np.concatenate([xe_np[:e_local], np.zeros_like(xe_np[:1])])
+        y_sum += np.asarray(combine_tokens(jnp.asarray(ye), disp, t))
+
+    # every real (expert, slot) cell shows up on exactly one shard
+    cells_global = int((np.abs(np.asarray(xe_g)).sum(-1) > 0).sum())
+    assert occupied == cells_global
+    np.testing.assert_allclose(y_sum, y_global, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deterministic matrix (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e,k,top_n,seed", [
+    (16, 8, 2, 1, 0),
+    (12, 4, 3, 0, 1),      # n = 0: no compensation
+    (9, 6, 2, 5, 2),       # n >= k: everything compensated
+    (1, 8, 1, 1, 3),       # single token
+    (5, 16, 2, 2, 4),      # more experts than assignments: empty experts
+])
+def test_roundtrip_cases(t, e, k, top_n, seed):
+    check_roundtrip_permutation_inverse(t, e, k, top_n, seed)
+
+
+@pytest.mark.parametrize("t,e,k,ep,seed", [
+    (16, 8, 2, 2, 0),
+    (16, 8, 2, 8, 1),
+    (7, 4, 2, 4, 2),
+    (10, 6, 3, 3, 3),
+])
+def test_shard_decomposition_cases(t, e, k, ep, seed):
+    check_shard_decomposition(t, e, k, ep, seed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(st.data())
+    @settings(**SETTINGS)
+    def test_roundtrip_permutation_inverse_property(data):
+        t = data.draw(st.integers(1, 24), label="tokens")
+        e = data.draw(st.integers(1, 16), label="experts")
+        k = data.draw(st.integers(1, min(e, 4)), label="top_k")
+        top_n = data.draw(st.integers(0, k + 2), label="top_n")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        check_roundtrip_permutation_inverse(t, e, k, top_n, seed)
+
+    @given(st.data())
+    @settings(**SETTINGS)
+    def test_shard_decomposition_property(data):
+        ep = data.draw(st.sampled_from([2, 3, 4, 8]), label="ep")
+        e = ep * data.draw(st.integers(1, 3), label="experts_per_shard")
+        t = data.draw(st.integers(1, 16), label="tokens")
+        k = data.draw(st.integers(1, min(e, 3)), label="top_k")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        check_shard_decomposition(t, e, k, ep, seed)
