@@ -5,15 +5,18 @@
 #                        run IN-PROCESS on 8 forced host devices
 #   make test    full suite, including slow/benchmarks-adjacent tests
 #   make bench-smoke     quick continuous-batching serving sweep
+#                        (writes the BENCH_serving.json snapshot)
 #   make bench-ep        expert-parallel shard-count sweep (8 host devices)
 #   make bench-frontier  bandwidth-budget frontier sweep (controller)
+#   make compress-smoke  calibrate -> allocate -> artifact -> serve 8
+#                        tokens from it (the offline-pipeline CI gate)
 #   make docs-check      every doc cross-reference resolves
 #   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: tier1 tier1-dist test bench-smoke bench-ep bench-frontier \
-	docs-check serve-example
+	compress-smoke docs-check serve-example
 
 # dist-marked tests are excluded here only to avoid running them twice
 # in CI — tier1-dist runs exactly those, in-process on 8 host devices;
@@ -36,6 +39,14 @@ bench-ep:
 
 bench-frontier:
 	$(PY) benchmarks/bench_serving.py --quick --frontier
+
+compress-smoke:
+	$(PY) -m repro.launch.compress --arch mixtral-8x7b \
+		--out experiments/compress_smoke --calib-batches 2 \
+		--calib-batch-size 4 --calib-seq-len 64 --budget-frac 0.9
+	$(PY) -m repro.launch.serve --arch mixtral-8x7b --offload \
+		--artifact experiments/compress_smoke \
+		--batch 1 --prompt-len 8 --max-new 8
 
 docs-check:
 	python tools/docs_check.py

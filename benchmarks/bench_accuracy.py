@@ -14,6 +14,13 @@ Ladder (mirrors Fig 6's method axis):
   ours-pc-int2   compensators on TOP of the per-channel collapse — shows
                  restoration works even at the collapse point
   (ladder repeated at int3)
+
+``run_alloc`` sweeps the *allocation frontier* instead (calib/): at
+equal total wire bytes, uniform-bit compression vs the calibrated
+heterogeneous allocation (measured routing/gate/moment statistics
+driving per-expert bits + ranks and activation-whitened compensators).
+Headline metric: routing-weighted restoration error at matched bytes —
+the budgeted calibrated allocation must sit strictly below uniform.
 """
 from __future__ import annotations
 
@@ -61,6 +68,74 @@ def run(quick: bool = True):
                       rank_budget=32, top_n_restore=1, hqq_iters=20),
           baseline_delta=d_pc)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# calibrated-vs-uniform allocation frontier (equal wire bytes)
+# ---------------------------------------------------------------------------
+
+def allocation_rows(cfg, params, *, bits_points=(2, 3), rank: int = 8,
+                    calib_batches: int = 2, nll_batches: int = 0,
+                    scorer: str = "calibrated"):
+    """Frontier rows for one model: for each uniform operating point
+    (every expert at ``bits`` + rank-``rank`` compensators) take its
+    total wire bytes as the budget and let the calibrated allocator
+    spend the same bytes heterogeneously.  Reports both allocations'
+    routing-weighted restoration error (and held-out NLL when
+    ``nll_batches`` > 0).  Shared by ``run_alloc`` and the
+    tier-1 acceptance test in ``tests/test_calib.py``."""
+    from repro.calib import (allocate_budget, collect_calibration_stats,
+                             moe_weights_by_layer, stacks_wire_bytes,
+                             uniform_plan, weighted_restoration_error)
+    from repro.models.transformer import compress_moe_params
+
+    qcfg = cfg.moe.quant
+    stats = collect_calibration_stats(cfg, params, batches=calib_batches)
+    weights = moe_weights_by_layer(params, cfg)
+    imps = [s.importance() for s in stats]
+    rows = []
+    for bits in bits_points:
+        uni = uniform_plan(weights, qcfg, bits=bits, rank=rank)
+        budget = uni.spent_bytes
+        cal = allocate_budget(weights, qcfg, budget, stats=stats,
+                              scorer=scorer)
+        _, _, stacks_u = compress_moe_params(params, cfg, plan=uni)
+        _, cfg_c, stacks_c = compress_moe_params(params, cfg, plan=cal,
+                                                 stats=stats)
+        row = {
+            "name": f"alloc/int{bits}-r{rank}",
+            "budget_kb": budget / 2 ** 10,
+            "uniform_kb": stacks_wire_bytes(stacks_u) / 2 ** 10,
+            "calib_kb": stacks_wire_bytes(stacks_c) / 2 ** 10,
+            "uniform_err": weighted_restoration_error(stacks_u, weights,
+                                                      imps),
+            "calib_err": weighted_restoration_error(stacks_c, weights,
+                                                    imps),
+            "calib_mean_bits": cal.summary()["mean_bits"],
+            "calib_mean_rank": cal.summary()["mean_rank"],
+        }
+        row["err_reduction_pct"] = 100 * (1 - row["calib_err"]
+                                          / max(row["uniform_err"], 1e-12))
+        if nll_batches > 0:
+            from repro.models.transformer import apply_compressed_stacks
+            qp_u, cfg_u = apply_compressed_stacks(params, cfg, stacks_u)
+            qp_c, cfg_cq = apply_compressed_stacks(params, cfg, stacks_c)
+            row["uniform_nll"] = eval_nll(cfg_u, qp_u, quantized=True,
+                                          batches=nll_batches)
+            row["calib_nll"] = eval_nll(cfg_cq, qp_c, quantized=True,
+                                        batches=nll_batches)
+        rows.append(row)
+    return rows
+
+
+def run_alloc(quick: bool = True):
+    """Fig-6 companion: the bandwidth–accuracy frontier of *allocation*
+    (uniform vs calibrated) at matched bytes on a trained MoE."""
+    cfg, params = trained_moe(steps=60 if quick else 300)
+    return allocation_rows(cfg, params, bits_points=(2, 3),
+                           rank=8 if quick else 32,
+                           calib_batches=2 if quick else 8,
+                           nll_batches=2 if quick else EVAL_BATCHES)
 
 
 if __name__ == "__main__":

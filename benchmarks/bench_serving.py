@@ -30,6 +30,9 @@ Run:  PYTHONPATH=src python benchmarks/bench_serving.py --quick
 from __future__ import annotations
 
 import argparse
+import json
+import time
+from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -312,6 +315,35 @@ def run_frontier(quick: bool = True,
     return rows
 
 
+SNAPSHOT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+
+def write_snapshot(mode: str, rows: List[Dict], quick: bool,
+                   path: Path = SNAPSHOT):
+    """Persist the sweep as ``BENCH_serving.json`` at the repo root.
+
+    One snapshot per run, keyed by mode, merged over the existing file —
+    the committed perf trajectory that makes serving regressions visible
+    across PRs (``make bench-smoke`` refreshes the ``offered-load``
+    key on every CI run)."""
+    snap = {}
+    if path.exists():
+        try:
+            snap = json.loads(path.read_text())
+        except ValueError:
+            snap = {}
+        if not isinstance(snap, dict):
+            snap = {}
+    snap[mode] = {
+        "time": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": quick,
+        "rows": [{k: (round(v, 6) if isinstance(v, float) else v)
+                  for k, v in r.items()} for r in rows],
+    }
+    path.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+    print(f"snapshot -> {path}", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -323,19 +355,26 @@ def main():
                     help="'ep=N': sweep expert-parallel shard counts 1..N "
                          "(CPU needs XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N)")
+    ap.add_argument("--no-snapshot", action="store_true",
+                    help="skip writing the BENCH_serving.json snapshot")
     args = ap.parse_args()
     if args.mesh:
         from repro.launch.mesh import parse_mesh_spec
+        mode = "ep-sweep"
         rows = run_ep_sweep(parse_mesh_spec(args.mesh).get("ep", 1),
                             quick=args.quick)
     elif args.frontier:
+        mode = "frontier"
         rows = run_frontier(quick=args.quick)
     else:
+        mode = "offered-load"
         rows = run(quick=args.quick, offload=not args.no_offload)
     for r in rows:
         extra = ",".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
                          for k, v in r.items() if k != "name")
         print(f"{r['name']},{extra}", flush=True)
+    if not args.no_snapshot:
+        write_snapshot(mode, rows, args.quick)
 
 
 if __name__ == "__main__":

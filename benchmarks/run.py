@@ -5,6 +5,7 @@ benchmarks put their headline metric in the `derived` column.
 
   fig4   kurtosis <-> quant-error correlation; compensator residual gain
   fig6   accuracy ladder (fp32 / rtn / hqq / ours at int2+int3)
+  alloc  calibrated vs uniform precision allocation at equal wire bytes
   fig7   offloaded decode throughput (GPU-only + GPU-NDP simulator)
   fig8   ablations: top-n count, rank budget, kurtosis vs uniform
   serving  continuous-batching offered-load sweep (tok/s, p50/p95 latency)
@@ -37,6 +38,7 @@ def main() -> None:
         "fig1": bench_breakdown.run,
         "fig4": bench_kurtosis.run,
         "fig6": bench_accuracy.run,
+        "alloc": bench_accuracy.run_alloc,
         "fig8": bench_ablation.run,
         "table2": bench_position.run,
         "fig7": bench_throughput.run,

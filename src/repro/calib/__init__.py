@@ -1,0 +1,25 @@
+"""Offline calibration & heterogeneous precision-allocation pipeline.
+
+Three stages (each usable alone; ``launch/compress.py`` chains them):
+
+1. ``stats``    — run a calibration corpus through the jitted forward
+                  (first-class router trace + MoE-input collection) and
+                  accumulate per-expert routing frequency, gate mass,
+                  and input/hidden second moments per MoE layer.
+2. ``allocate`` — water-filling/knapsack allocation of per-expert
+                  bit-widths and per-(projection, expert) compensator
+                  ranks under a global wire-byte budget, with the
+                  kurtosis heuristic demoted to one pluggable scorer.
+3. ``artifact`` — serialize the resulting ``CompressionPlan`` +
+                  compressed stacks so every serving path boots from
+                  disk (config/checksum-checked) instead of
+                  recompressing at startup.
+"""
+from .stats import (LayerCalibStats, collect_calibration_stats,
+                    stats_summary)
+from .allocate import (SCORERS, CompressionPlan, LayerAllocation,
+                       allocate_budget, moe_weights_by_layer,
+                       plan_wire_bytes, stacks_wire_bytes, uniform_plan,
+                       weighted_restoration_error)
+from .artifact import (config_fingerprint, load_compression_artifact,
+                       save_compression_artifact)

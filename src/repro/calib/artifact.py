@@ -1,0 +1,97 @@
+"""Calibration stage 3: serialized compression artifacts.
+
+One directory per artifact (``artifact.npz`` + ``artifact.json`` via the
+checkpoint manager's structure-carrying codec) holding:
+
+- the per-MoE-layer ``CompressedExpertStack`` dicts — bit-plane packed
+  weights, scales/zeros, padded-rank factors, per-expert true ranks and
+  bits — exactly the trees ``compress_moe_params`` produces, restored
+  bit-identically;
+- the ``CompressionPlan`` (JSON, in the manifest) that produced them;
+- a config fingerprint + params seed for the boot-time compatibility
+  check, plus the codec's content checksum.
+
+``launch/serve.py --artifact`` then boots a quantized engine straight
+off disk: no HQQ iterations, no SVDs — serve startup becomes
+load-an-artifact instead of recompress-every-time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Tuple
+
+from ..checkpoint.manager import (load_artifact, register_artifact_dataclass,
+                                  save_artifact)
+from ..config import ModelConfig
+from ..core.compensator import Compensator
+from ..core.pipeline import CompressedExpertStack
+from ..core.quantize import QuantizedTensor
+from .allocate import CompressionPlan
+
+ARTIFACT_VERSION = 1
+
+# the compression dataclasses the codec round-trips (meta fields = the
+# jax.tree_util registration's static fields)
+register_artifact_dataclass(QuantizedTensor,
+                            ("bits", "group_size", "shape"))
+register_artifact_dataclass(Compensator,
+                            ("rank", "pad_rank", "factor_bits"))
+register_artifact_dataclass(CompressedExpertStack,
+                            ("bits", "group_size", "shape", "ranks",
+                             "pad_rank", "factor_bits", "expert_bits"))
+
+
+def config_fingerprint(cfg: ModelConfig) -> str:
+    """Stable hash of everything the artifact layout depends on —
+    restoring onto a config with a different expert geometry or quant
+    recipe must fail the compatibility check, not segfault in a kernel."""
+    d = dataclasses.asdict(cfg)
+    blob = json.dumps(d, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def save_compression_artifact(path, cfg: ModelConfig,
+                              stacks_by_layer: List[Dict],
+                              plan: Optional[CompressionPlan] = None,
+                              seed: int = 0,
+                              extra: Optional[Dict] = None) -> Dict:
+    """Serialize compressed stacks (+ the plan that produced them)."""
+    meta = {
+        "version": ARTIFACT_VERSION,
+        "arch": cfg.name,
+        "fingerprint": config_fingerprint(cfg),
+        "seed": int(seed),
+        "moe_layers": len(stacks_by_layer),
+        "plan": None if plan is None else plan.to_json(),
+        "extra": extra or {},
+    }
+    return save_artifact(path, stacks_by_layer, meta=meta)
+
+
+def load_compression_artifact(path, cfg: Optional[ModelConfig] = None,
+                              strict: bool = True
+                              ) -> Tuple[List[Dict], Optional[CompressionPlan],
+                                         Dict]:
+    """Load ``(stacks_by_layer, plan, manifest-meta)``; when ``cfg`` is
+    given the stored fingerprint must match (``strict=False`` downgrades
+    a mismatch to a manifest flag for inspection tools)."""
+    tree, manifest = load_artifact(path)
+    meta = manifest["meta"]
+    if meta.get("version") != ARTIFACT_VERSION:
+        raise ValueError(f"artifact version {meta.get('version')} != "
+                         f"{ARTIFACT_VERSION}")
+    if cfg is not None:
+        want = config_fingerprint(cfg)
+        if meta["fingerprint"] != want:
+            msg = (f"artifact was compressed for {meta['arch']} "
+                   f"(fingerprint {meta['fingerprint']}), not "
+                   f"{cfg.name} ({want})")
+            if strict:
+                raise ValueError(msg)
+            meta = {**meta, "fingerprint_mismatch": msg}
+    stacks_by_layer = list(tree)
+    plan = (CompressionPlan.from_json(meta["plan"])
+            if meta.get("plan") else None)
+    return stacks_by_layer, plan, meta

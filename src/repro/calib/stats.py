@@ -1,0 +1,176 @@
+"""Calibration stage 1: per-expert routing / activation statistics.
+
+A calibration corpus (the deterministic Zipf-Markov synthetic stream —
+``data/synthetic.py`` — or any token batches) runs through the *jitted*
+forward with two first-class outputs enabled: the router trace
+(``ExecContext.collect_trace``) and the normed MoE-FFN inputs
+(``ExecContext.collect_moe_inputs``).  From those, one jitted reduction
+per MoE layer accumulates, per expert:
+
+- ``counts``     how many (token, slot) assignments routed to it,
+- ``gate_mass``  the summed normalized gate weight of those assignments
+                 (frequency x confidence — the importance signal the
+                 budget allocator weights errors by),
+- ``in_moment``  the diagonal second moment E[x^2] of the layer inputs
+                 routed to it (whitens the w1/w3 compensator SVDs),
+- ``hid_moment`` the diagonal second moment E[h^2] of its own hidden
+                 activation h = act(x w1) * (x w3) (whitens w2).
+
+Everything is accumulated in f64 on host between batches, so corpus
+size only costs time, not precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..data.synthetic import SyntheticLM, SyntheticLMConfig
+from ..models import model as lm
+from ..models.transformer import ExecContext, layer_specs, unstack_params
+
+
+@dataclasses.dataclass
+class LayerCalibStats:
+    """Accumulated statistics of one MoE layer (E experts)."""
+    counts: np.ndarray        # (E,) f64 routed assignments
+    gate_mass: np.ndarray     # (E,) f64 summed gate weight
+    in_moment: np.ndarray     # (E, d) f64 sum of x^2 over routed tokens
+    hid_moment: np.ndarray    # (E, fe) f64 sum of h^2 per expert
+    tokens: int = 0           # calibration tokens seen
+
+    # -- derived views -----------------------------------------------------
+    @property
+    def freq(self) -> np.ndarray:
+        """(E,) routed-assignment share (sums to top_k over experts)."""
+        return self.counts / max(self.tokens, 1)
+
+    def importance(self, eps: float = 1e-3) -> np.ndarray:
+        """(E,) normalized expert importance for error weighting:
+        gate mass share, floored at ``eps`` so cold experts keep a
+        nonzero stake (they may still be routed at serve time)."""
+        total = max(float(self.gate_mass.sum()), 1e-12)
+        w = self.gate_mass / total
+        w = np.maximum(w, eps / len(w))
+        return w / w.sum()
+
+    def moment_for(self, proj: str) -> np.ndarray:
+        """(E, K) mean input second moment for a projection's K axis:
+        the layer input for w1/w3, the expert hidden for w2.  Experts
+        with no routed calibration tokens fall back to an all-ones
+        moment (unwhitened SVD)."""
+        mom = self.in_moment if proj in ("w1", "w3") else self.hid_moment
+        cnt = np.maximum(self.counts, 1.0)[:, None]
+        mean = mom / cnt
+        flat = mean.sum(axis=1) <= 0
+        if flat.any():
+            mean[flat] = 1.0
+        return mean
+
+    def merge(self, other: "LayerCalibStats") -> "LayerCalibStats":
+        return LayerCalibStats(self.counts + other.counts,
+                               self.gate_mass + other.gate_mass,
+                               self.in_moment + other.in_moment,
+                               self.hid_moment + other.hid_moment,
+                               self.tokens + other.tokens)
+
+
+def _zero_stats(e: int, d: int, fe: int) -> LayerCalibStats:
+    return LayerCalibStats(np.zeros(e), np.zeros(e), np.zeros((e, d)),
+                           np.zeros((e, fe)))
+
+
+@partial(jax.jit, static_argnames=("num_experts", "act", "norm_topk"))
+def _layer_reduce(x, topk, w_router, w1, w3, *, num_experts: int,
+                  act: str, norm_topk: bool):
+    """One MoE layer's per-expert reductions over a (T, d) input batch.
+
+    ``topk`` is the traced router decision (T, k) from the forward —
+    gates are recomputed from the same router weights (deterministic,
+    identical ids; asserted in tests) because the trace carries ids only.
+    """
+    from ..models.layers import activation
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates = jnp.take_along_axis(probs, topk, axis=-1)        # (T, k)
+    if norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    oh = jax.nn.one_hot(topk, num_experts, dtype=jnp.float32)  # (T, k, E)
+    assign = oh.sum(axis=1)                                    # (T, E) 0/1
+    counts = assign.sum(axis=0)                                # (E,)
+    gmass = (oh * gates[..., None]).sum(axis=(0, 1))           # (E,)
+    x32 = x.astype(jnp.float32)
+    in_mom = jnp.einsum("te,td->ed", assign, x32 * x32)        # (E, d)
+    f = activation(act)
+    h = f(jnp.einsum("td,edf->etf", x32, w1.astype(jnp.float32))) \
+        * jnp.einsum("td,edf->etf", x32, w3.astype(jnp.float32))
+    hid_mom = jnp.einsum("te,etf->ef", assign, h * h)          # (E, fe)
+    return counts, gmass, in_mom, hid_mom
+
+
+def collect_calibration_stats(cfg: ModelConfig, params, *,
+                              batches: int = 4,
+                              batch_size: int = 8,
+                              seq_len: int = 128,
+                              seed: int = 0,
+                              step_offset: int = 0,
+                              data: Optional[SyntheticLM] = None
+                              ) -> List[LayerCalibStats]:
+    """Run the calibration corpus through the jitted forward and return
+    one ``LayerCalibStats`` per MoE layer (global layer order — the same
+    order as ``compress_moe_params``'s ``stacks_by_layer``).
+
+    The corpus is the deterministic synthetic stream (same packing the
+    training loop uses), so identical (cfg, seed, batches) always yields
+    identical statistics — calibration is reproducible by construction.
+    """
+    if cfg.moe is None:
+        raise ValueError(f"{cfg.name} has no MoE layers to calibrate")
+    data = data or SyntheticLM(SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, batch_size=batch_size, seq_len=seq_len,
+        seed=seed))
+    ctx = ExecContext(mode="train", quantized=False, exact_capacity=True,
+                      collect_trace=True, collect_moe_inputs=True)
+    fwd = jax.jit(lambda p, t: lm.forward(p, t, cfg, ctx))
+
+    # per-MoE-layer dense weights + router (unrolled order = trace order)
+    up = unstack_params(params, cfg)
+    moe_layers = [lp["moe"] for (lp,), spec
+                  in zip(up["segments"], layer_specs(cfg))
+                  if spec.ffn == "moe"]
+    e = cfg.moe.num_experts
+    d = cfg.d_model
+    fe = cfg.moe.d_expert
+    stats = [_zero_stats(e, d, fe) for _ in moe_layers]
+
+    for bi in range(batches):
+        toks = jnp.asarray(data.batch(step_offset + bi)["tokens"])
+        out = fwd(params, toks)
+        ntok = int(np.prod(toks.shape))
+        for li, mp in enumerate(moe_layers):
+            counts, gmass, in_mom, hid_mom = _layer_reduce(
+                out.moe_inputs[li], out.trace[li], mp["router"],
+                mp["w1"], mp["w3"], num_experts=e, act=cfg.act,
+                norm_topk=cfg.moe.router_norm_topk)
+            stats[li] = stats[li].merge(LayerCalibStats(
+                np.asarray(counts, np.float64),
+                np.asarray(gmass, np.float64),
+                np.asarray(in_mom, np.float64),
+                np.asarray(hid_mom, np.float64), ntok))
+    return stats
+
+
+def stats_summary(stats: List[LayerCalibStats]) -> Dict:
+    """Compact per-layer report for CLIs / manifests."""
+    return {
+        "layers": len(stats),
+        "tokens": stats[0].tokens if stats else 0,
+        "freq": [np.round(s.freq, 4).tolist() for s in stats],
+        "importance": [np.round(s.importance(), 4).tolist() for s in stats],
+    }

@@ -1,2 +1,4 @@
-"""Atomic, keep-k, mesh-agnostic checkpointing."""
-from .manager import CheckpointManager
+"""Atomic, keep-k, mesh-agnostic checkpointing + structure-carrying
+artifact round-trip for compression-dataclass pytrees."""
+from .manager import (CheckpointManager, load_artifact,
+                      register_artifact_dataclass, save_artifact)

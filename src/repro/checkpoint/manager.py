@@ -13,13 +13,14 @@ Design for 1000+ nodes (emulated here on one host):
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
 import shutil
 import time
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Type
 
 import jax
 import numpy as np
@@ -42,6 +43,172 @@ def _checksum(flat: Dict[str, np.ndarray]) -> str:
         h.update(np.ascontiguousarray(flat[k]).tobytes()[:4096])
         h.update(str(flat[k].shape).encode())
     return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# structure-carrying artifact round-trip (dataclass pytrees)
+# ---------------------------------------------------------------------------
+#
+# ``CheckpointManager.restore`` rebuilds a tree INTO a caller-provided
+# template — fine for resuming training, useless for a compression
+# artifact whose whole point is booting WITHOUT recomputing the template
+# (per-expert bits/ranks are only known after calibration).  The codec
+# below serializes the structure itself: containers recurse, registered
+# dataclasses (``QuantizedTensor``/``Compensator``/
+# ``CompressedExpertStack`` — registered by ``calib.artifact``) record
+# their class name + static meta fields in the JSON spec while their
+# array data fields go to the npz.  Restore is exact: same classes, same
+# meta (lists back to tuples), bit-identical arrays.
+
+ARTIFACT_TYPES: Dict[str, Type] = {}
+
+
+def register_artifact_dataclass(cls: Type,
+                                meta_fields: Tuple[str, ...]) -> Type:
+    """Make ``cls`` (a dataclass) round-trippable by the artifact codec.
+    ``meta_fields`` are the static (JSON-encoded) fields; every other
+    dataclass field is array data (recursively encoded)."""
+    ARTIFACT_TYPES[cls.__name__] = cls
+    setattr(cls, "_artifact_meta_fields", tuple(meta_fields))
+    return cls
+
+
+def _npz_safe(arr: np.ndarray):
+    """(storable array, dtype name) — np.savez pickles non-native dtypes
+    (ml_dtypes bfloat16 factors at ``factor_bits=16``) into object
+    entries that np.load then refuses; store them as a same-width uint
+    view and record the logical dtype in the leaf spec instead."""
+    name = arr.dtype.name
+    if arr.dtype.kind in "biufc" and not name.startswith("bfloat"):
+        return arr, name
+    return arr.view(np.dtype(f"u{arr.dtype.itemsize}")), name
+
+
+def _npz_restore(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.name == dtype_name:
+        return arr
+    import ml_dtypes  # jax dependency; provides bfloat16 et al.
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_name, dtype_name)))
+
+
+def _full_checksum(arrays: Dict[str, np.ndarray]) -> str:
+    """Whole-content hash.  The training-checkpoint ``_checksum`` samples
+    a 4 KiB prefix per tensor (cheap torn-write detection at step
+    cadence); artifacts claim full integrity — corruption anywhere must
+    fail the load — so they hash every byte."""
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes())
+        h.update(str(arrays[k].shape).encode())
+    return h.hexdigest()[:16]
+
+
+def _meta_to_json(v):
+    if isinstance(v, tuple):
+        return {"__tuple__": [_meta_to_json(x) for x in v]}
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    return v
+
+
+def _meta_from_json(v):
+    if isinstance(v, dict) and "__tuple__" in v:
+        return tuple(_meta_from_json(x) for x in v["__tuple__"])
+    return v
+
+
+def _encode_tree(tree, arrays: Dict[str, np.ndarray]) -> Dict:
+    """Tree -> JSON-able spec; array leaves appended to ``arrays``."""
+    if tree is None:
+        return {"kind": "none"}
+    if type(tree).__name__ in ARTIFACT_TYPES and dataclasses.is_dataclass(tree):
+        meta_names = tree._artifact_meta_fields
+        data_names = [f.name for f in dataclasses.fields(tree)
+                      if f.name not in meta_names]
+        return {
+            "kind": "dataclass",
+            "cls": type(tree).__name__,
+            "meta": {n: _meta_to_json(getattr(tree, n)) for n in meta_names},
+            "data": {n: _encode_tree(getattr(tree, n), arrays)
+                     for n in data_names},
+        }
+    if isinstance(tree, dict):
+        return {"kind": "dict",
+                "items": {k: _encode_tree(v, arrays)
+                          for k, v in tree.items()}}
+    if isinstance(tree, (tuple, list)):
+        return {"kind": "tuple" if isinstance(tree, tuple) else "list",
+                "items": [_encode_tree(v, arrays) for v in tree]}
+    key = f"a{len(arrays):06d}"
+    stored, dtype_name = _npz_safe(np.asarray(tree))
+    arrays[key] = stored
+    return {"kind": "leaf", "key": key, "dtype": dtype_name}
+
+
+def _decode_tree(spec: Dict, arrays: Dict[str, np.ndarray]):
+    kind = spec["kind"]
+    if kind == "none":
+        return None
+    if kind == "leaf":
+        return _npz_restore(arrays[spec["key"]], spec["dtype"])
+    if kind == "dict":
+        return {k: _decode_tree(v, arrays) for k, v in spec["items"].items()}
+    if kind in ("tuple", "list"):
+        items = [_decode_tree(v, arrays) for v in spec["items"]]
+        return tuple(items) if kind == "tuple" else items
+    if kind == "dataclass":
+        cls = ARTIFACT_TYPES.get(spec["cls"])
+        if cls is None:
+            raise KeyError(f"artifact references unregistered dataclass "
+                           f"{spec['cls']!r}; register it via "
+                           f"register_artifact_dataclass before loading")
+        kw = {n: _meta_from_json(v) for n, v in spec["meta"].items()}
+        kw.update({n: _decode_tree(v, arrays)
+                   for n, v in spec["data"].items()})
+        return cls(**kw)
+    raise ValueError(f"bad artifact spec kind {kind!r}")
+
+
+def save_artifact(path, tree: Any, meta: Optional[Dict] = None) -> Dict:
+    """Serialize a dataclass pytree + metadata to ``path``
+    (``path/artifact.npz`` + ``path/artifact.json``), atomically
+    (data first, manifest last = commit point), with a content checksum.
+    Returns the manifest."""
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    arrays: Dict[str, np.ndarray] = {}
+    spec = _encode_tree(jax.tree.map(np.asarray, tree), arrays)
+    tmp_npz = path / "artifact.npz.tmp"
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **arrays)
+    manifest = {
+        "spec": spec,
+        "meta": meta or {},
+        "time": time.time(),
+        "checksum": _full_checksum(arrays),
+        "n_tensors": len(arrays),
+        "bytes": int(sum(v.nbytes for v in arrays.values())),
+    }
+    tmp_man = path / "artifact.json.tmp"
+    tmp_man.write_text(json.dumps(manifest))
+    os.replace(tmp_npz, path / "artifact.npz")
+    os.replace(tmp_man, path / "artifact.json")
+    return manifest
+
+
+def load_artifact(path) -> Tuple[Any, Dict]:
+    """Inverse of :func:`save_artifact`; validates the content checksum
+    (torn/corrupt artifacts fail loudly, never load silently wrong)."""
+    path = Path(path)
+    manifest = json.loads((path / "artifact.json").read_text())
+    with np.load(path / "artifact.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    if _full_checksum(arrays) != manifest["checksum"]:
+        raise IOError(f"artifact checksum mismatch in {path}")
+    return _decode_tree(manifest["spec"], arrays), manifest
 
 
 class CheckpointManager:

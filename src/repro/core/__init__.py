@@ -1,7 +1,8 @@
 """BEAM-LRC core: the paper's contribution as composable JAX modules."""
 from .quantize import (PLANES, PACK_BLOCK, QuantizedTensor, dequantize,
-                       pack_bits, packed_nbytes, quant_error, quantize,
-                       quantize_with_params, unpack_bits)
+                       factor_wire_bytes, pack_bits, packed_nbytes,
+                       quant_error, quant_wire_bytes, quantize,
+                       quantize_codes, quantize_with_params, unpack_bits)
 from .hqq import hqq_params, hqq_quantize, shrink_lp
 from .kurtosis import allocate_ranks, kurtosis, uniform_ranks
 from .compensator import (Compensator, build_compensator, compensated_weight,

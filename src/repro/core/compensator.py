@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .quantize import QuantizedTensor, dequantize, quantize
+from .quantize import QuantizedTensor, dequantize, factor_wire_bytes, quantize
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -44,12 +44,10 @@ class Compensator:
 
     @property
     def nbytes_wire(self) -> int:
-        """Bytes moved per transfer of this compensator (true rank only)."""
-        m = self.u.shape[0]
-        n = self.v.shape[1]
-        r = self.rank
-        bits = self.factor_bits
-        return int(r * (m + n) * bits / 8 + 2 * 2 * r)  # + bf16 scales
+        """Bytes moved per transfer of this compensator (true rank only);
+        one shared formula with the stack/store accounting."""
+        return factor_wire_bytes(self.rank, self.u.shape[0], self.v.shape[1],
+                                 self.factor_bits)
 
     def materialize(self, dtype=jnp.float32) -> jax.Array:
         """Dense E_hat = U V (including dequantized factors)."""

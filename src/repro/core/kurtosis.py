@@ -4,6 +4,12 @@ Experts with heavier-tailed weight distributions (higher kurtosis) incur
 larger quantization residuals and therefore receive larger compensator
 ranks.  Ranks come from a fixed bucket set and are assigned greedily in
 descending-kurtosis order under the global budget ``sum(r_i) <= N * R_avg``.
+
+This heuristic is the *default* (no-corpus) allocation.  With a
+calibration corpus, ``calib/allocate.py`` subsumes it: kurtosis becomes
+one pluggable importance scorer (``SCORERS['kurtosis']``) inside a
+wire-byte-budgeted knapsack that also assigns per-expert bit-widths —
+see EXPERIMENTS.md §Calibration methodology.
 """
 from __future__ import annotations
 

@@ -21,14 +21,15 @@ from ..config import QuantConfig
 from .compensator import _sym_quant_cols
 from .hqq import hqq_params
 from .kurtosis import allocate_ranks, kurtosis, uniform_ranks
-from .quantize import (QuantizedTensor, dequantize, pack_bits,
-                       packed_nbytes, quantize_with_params, unpack_bits)
+from .quantize import (QuantizedTensor, dequantize, factor_wire_bytes,
+                       pack_bits, packed_nbytes, quant_wire_bytes,
+                       quantize_with_params, unpack_bits)
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("planes", "scale", "zero", "u", "v", "u_scale", "v_scale"),
          meta_fields=("bits", "group_size", "shape", "ranks", "pad_rank",
-                      "factor_bits"))
+                      "factor_bits", "expert_bits"))
 @dataclass
 class CompressedExpertStack:
     """Quantized weights + padded low-rank compensators for E experts.
@@ -36,6 +37,14 @@ class CompressedExpertStack:
     planes[i]: (E, K//c_i, N) uint8;  scale/zero: (E, K//G, N) f32
     u: (E, K, R) int8/bf16;  v: (E, R, N);  R = pad_rank
     ranks: per-expert TRUE ranks (tuple, static) for bandwidth accounting.
+
+    Heterogeneous precision (calibrated allocation): ``bits`` is the
+    bit-plane CONTAINER width shared by the stacked layout, while
+    ``expert_bits[e]`` is expert e's true quantization width (codes fit
+    in the container; scale/zero were fit at the true width, so the
+    dequant math is bit-exact) — the same container-vs-wire idiom as the
+    sub-byte compensator factors in an int8 container.  ``expert_bits``
+    is None for uniform stacks (every expert at ``bits``).
     """
     planes: Tuple[jax.Array, ...]
     scale: jax.Array
@@ -50,9 +59,13 @@ class CompressedExpertStack:
     ranks: Tuple[int, ...]
     pad_rank: int
     factor_bits: int
+    expert_bits: Optional[Tuple[int, ...]] = None
 
     # -- helpers ----------------------------------------------------------
     def expert_qt(self, e: int) -> QuantizedTensor:
+        """Expert e's packed tensor at the CONTAINER width (unpacking
+        semantics); wire accounting must use :meth:`bits_of` /
+        :meth:`expert_wire_bytes`, not this view's ``nbytes_packed``."""
         return QuantizedTensor(tuple(p[e] for p in self.planes),
                                self.scale[e], self.zero[e],
                                self.bits, self.group_size, self.shape[1:])
@@ -78,13 +91,15 @@ class CompressedExpertStack:
         return jnp.einsum("ekr,ern->ekn", u, v).astype(dtype)
 
     # -- bandwidth accounting (bytes on the wire) --------------------------
+    def bits_of(self, e: int) -> int:
+        """Expert e's TRUE quantization width (wire accounting)."""
+        return self.bits if self.expert_bits is None else self.expert_bits[e]
+
     def expert_wire_bytes(self, e: int, compensated: bool) -> int:
         _, K, N = self.shape
-        b = packed_nbytes(self.bits, K, N)
-        b += 2 * (K // self.group_size) * N * 2          # bf16 scale+zero
+        b = quant_wire_bytes(self.bits_of(e), K, N, self.group_size)
         if compensated:
-            r = self.ranks[e]
-            b += int(r * (K + N) * self.factor_bits / 8) + 4 * r
+            b += factor_wire_bytes(self.ranks[e], K, N, self.factor_bits)
         return b
 
     @property
@@ -93,13 +108,65 @@ class CompressedExpertStack:
         return K * N * 2
 
 
+def whiten_vector(moment: np.ndarray, eps: float = 1e-6) -> np.ndarray:
+    """(K,) scale-free whitening weights sqrt(m / mean(m) + eps) from a
+    calibrated input second-moment diagonal.  THE single definition of
+    the whitening recipe — shared by the compensator SVD below and the
+    budget allocator's error model (``calib/allocate.py``), so the
+    allocator optimizes exactly what compression realizes."""
+    m = np.asarray(moment, np.float64).reshape(-1)
+    m = m / max(float(m.mean()), 1e-30)
+    return np.sqrt(m + eps)
+
+
+def whitened_residual_factors(resid: jax.Array, rank: int, pad_rank: int,
+                              moment: Optional[np.ndarray] = None,
+                              eps: float = 1e-6
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Rank-``rank`` factors (u (K, R), v (R, N)) of one expert's quant
+    residual, optionally whitened by the calibrated input second moment.
+
+    ``moment`` is the (K,) diagonal of E[x x^T] over the calibration
+    tokens routed to this expert.  The SVD then truncates in the
+    activation-weighted norm ||diag(sqrt(m)) (R - UV)||_F — rank goes to
+    the input directions the router actually exercises — while the
+    STORED factors still approximate R itself (U is un-whitened), so the
+    runtime restoration math is unchanged.  ``moment=None`` is the
+    paper's plain weight-space SVD, bit-identical to the previous
+    behaviour.
+    """
+    if moment is None:
+        white = None
+        r_in = resid
+    else:
+        white = jnp.asarray(whiten_vector(moment, eps), jnp.float32)
+        r_in = resid * white[:, None]
+    uu, ss, vt = jnp.linalg.svd(r_in, full_matrices=False)
+    sq = jnp.sqrt(ss[:pad_rank])
+    uu = uu[:, :pad_rank] * sq[None, :]
+    vv = vt[:pad_rank, :] * sq[:, None]
+    if white is not None:
+        uu = uu / white[:, None]
+    mask = (jnp.arange(pad_rank) < rank)
+    return uu * mask[None, :], vv * mask[:, None]
+
+
 def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
-                          ranks: Optional[np.ndarray] = None
+                          ranks: Optional[np.ndarray] = None,
+                          bits: Optional[np.ndarray] = None,
+                          moments: Optional[np.ndarray] = None
                           ) -> Tuple[CompressedExpertStack, Dict]:
     """Full offline pipeline for one (E, K, N) projection stack.
 
+    ``ranks``/``bits``: optional per-expert allocations from a
+    ``CompressionPlan`` (calibrated heterogeneous precision); ``bits``
+    None means uniform ``qcfg.bits``.  ``moments``: optional (E, K)
+    calibrated input second-moment diagonals — compensator SVDs are then
+    computed in the activation-weighted norm (see
+    :func:`whitened_residual_factors`).
+
     Returns the packed artifact plus a report dict (kurtosis, ranks,
-    residual norms before/after compensation) used by benchmarks.
+    bits, residual norms before/after compensation) used by benchmarks.
     """
     E, K, N = w.shape
     w32 = jnp.asarray(w, jnp.float32)
@@ -112,13 +179,23 @@ def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
     kurt = np.array([float(kurtosis(w32[e])) for e in range(E)])
 
     # 2. HQQ quantization (paper §3.1 step 2; done before allocation so the
-    # 'error' strategy can rank by measured residuals)
-    def _q(we):
-        s, z = hqq_params(we, qcfg.bits, qcfg.group_size, qcfg.hqq_iters,
-                          qcfg.hqq_p, qcfg.hqq_beta, qcfg.hqq_beta_scale)
-        return quantize_with_params(we, s, z, qcfg.bits, qcfg.group_size)
+    # 'error' strategy can rank by measured residuals).  Heterogeneous
+    # per-expert bits share one bit-plane container at the layer max
+    # width; each expert's scale/zero are fit at its TRUE width, which
+    # stays the wire-accounting width.
+    if bits is None:
+        expert_bits = np.full((E,), qcfg.bits, np.int64)
+    else:
+        expert_bits = np.asarray(bits, np.int64).reshape(E)
+    store_bits = int(expert_bits.max())
 
-    qts = [_q(w32[e]) for e in range(E)]
+    def _q(we, b):
+        s, z = hqq_params(we, b, qcfg.group_size, qcfg.hqq_iters,
+                          qcfg.hqq_p, qcfg.hqq_beta, qcfg.hqq_beta_scale)
+        return quantize_with_params(we, s, z, b, qcfg.group_size,
+                                    store_bits=store_bits)
+
+    qts = [_q(w32[e], int(expert_bits[e])) for e in range(E)]
 
     # 3. rank allocation: kurtosis proxy (paper) | measured residual
     # (beyond-paper) | uniform (ablation)
@@ -145,19 +222,16 @@ def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
     scale = jnp.stack([qt.scale for qt in qts])
     zero = jnp.stack([qt.zero for qt in qts])
 
-    # 4. residual SVD at the allocated rank, zero-padded to pad_rank
+    # 4. residual SVD at the allocated rank (activation-whitened when
+    # calibrated moments are given), zero-padded to pad_rank
     deq = jnp.stack([dequantize(qt) for qt in qts])
     resid = w32 - deq
     us, vs, uss, vss = [], [], [], []
     for e in range(E):
         r = int(ranks[e])
-        uu, ss, vt = jnp.linalg.svd(resid[e], full_matrices=False)
-        sq = jnp.sqrt(ss[:pad_rank])
-        uu = uu[:, :pad_rank] * sq[None, :]
-        vv = vt[:pad_rank, :] * sq[:, None]
-        mask = (jnp.arange(pad_rank) < r)
-        uu = uu * mask[None, :]
-        vv = vv * mask[:, None]
+        uu, vv = whitened_residual_factors(
+            resid[e], r, pad_rank,
+            moment=None if moments is None else moments[e])
         if qcfg.factor_bits >= 16:
             us.append(uu.astype(jnp.bfloat16)); vs.append(vv.astype(jnp.bfloat16))
             uss.append(jnp.ones((1, pad_rank), jnp.float32))
@@ -167,13 +241,16 @@ def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
             qv, sv = _sym_quant_cols(vv, qcfg.factor_bits, axis=1)
             us.append(qu); vs.append(qv); uss.append(su); vss.append(sv)
 
+    hetero = bool((expert_bits != expert_bits[0]).any()) \
+        or int(expert_bits[0]) != store_bits
     stack = CompressedExpertStack(
         planes=planes, scale=scale, zero=zero,
         u=jnp.stack(us), v=jnp.stack(vs),
         u_scale=jnp.stack(uss), v_scale=jnp.stack(vss),
-        bits=qcfg.bits, group_size=qcfg.group_size, shape=(E, K, N),
+        bits=store_bits, group_size=qcfg.group_size, shape=(E, K, N),
         ranks=tuple(int(r) for r in ranks), pad_rank=pad_rank,
-        factor_bits=qcfg.factor_bits)
+        factor_bits=qcfg.factor_bits,
+        expert_bits=tuple(int(b) for b in expert_bits) if hetero else None)
 
     # 5. report
     comp = stack.compensation_all()
@@ -181,6 +258,7 @@ def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
     report = {
         "kurtosis": kurt,
         "ranks": np.asarray(ranks),
+        "bits": np.asarray(expert_bits),
         "rel_err_quant": np.asarray(
             jnp.linalg.norm(resid.reshape(E, -1), axis=1) / nw),
         "rel_err_comp": np.asarray(
@@ -190,17 +268,29 @@ def compress_expert_stack(w: jax.Array, qcfg: QuantConfig,
 
 
 def compress_ffn_weights(w1: jax.Array, w2: jax.Array, w3: jax.Array,
-                         qcfg: QuantConfig):
+                         qcfg: QuantConfig, allocation=None, stats=None):
     """Compress the three projections of a (shared or routed) FFN stack.
 
     Rank allocation runs per projection pool (paper computes kurtosis per
-    projection matrix w1/w2/w3 and budgets over the N experts of a pool).
+    projection matrix w1/w2/w3 and budgets over the N experts of a pool)
+    unless ``allocation`` (one layer of a ``calib.CompressionPlan``)
+    pins per-expert bits and per-(projection, expert) ranks from the
+    offline budget allocator.  ``stats`` (a ``calib.LayerCalibStats``)
+    supplies the calibrated input second moments that make the
+    compensator SVDs activation-weighted: w1/w3 whiten by the MoE-layer
+    input moment, w2 by the expert-hidden moment.
     """
     out, reports = {}, {}
     for name, w in (("w1", w1), ("w2", w2), ("w3", w3)):
         if w is None:
             continue
-        stack, rep = compress_expert_stack(w, qcfg)
+        kw = {}
+        if allocation is not None:
+            kw["bits"] = allocation.bits
+            kw["ranks"] = allocation.ranks[name]
+        if stats is not None:
+            kw["moments"] = stats.moment_for(name)
+        stack, rep = compress_expert_stack(w, qcfg, **kw)
         out[name] = stack
         reports[name] = rep
     return out, reports

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,35 @@ def plane_widths(bits: int) -> Tuple[int, ...]:
 def packed_nbytes(bits: int, k: int, n: int) -> int:
     """Exact packed byte count for a (k, n) matrix at ``bits`` width."""
     return sum((k // (8 // p)) * n for p, _ in PLANES[bits])
+
+
+SCALE_WIRE_BYTES = 2  # scale/zero (and factor scales) travel as bf16
+
+
+def quant_wire_bytes(bits: int, k: int, n: int, group_size: int) -> int:
+    """Wire bytes of one (k, n) groupwise-quantized matrix: bit-plane
+    packed codes + bf16 scale AND zero per (K-group, column).
+
+    THE single formula for quantized-weight wire accounting — shared by
+    ``QuantizedTensor.nbytes_packed``,
+    ``CompressedExpertStack.expert_wire_bytes``, and the offload store's
+    metering, so packing layout and scale bytes cannot drift between
+    compression and metering.
+    """
+    return (packed_nbytes(bits, k, n)
+            + 2 * (k // group_size) * n * SCALE_WIRE_BYTES)
+
+
+def factor_wire_bytes(rank: int, m: int, n: int, factor_bits: int) -> int:
+    """Wire bytes of a rank-``rank`` compensator for an (m, n) matrix:
+    sub-byte U/V codes at ``factor_bits`` plus the two bf16 per-rank
+    scale vectors.  Shared by ``Compensator.nbytes_wire``,
+    ``CompressedExpertStack.expert_wire_bytes``, and
+    ``ExpertStore.compensator_bytes`` (the same drift guarantee as
+    :func:`quant_wire_bytes`).
+    """
+    return (int(rank) * (m + n) * factor_bits) // 8 \
+        + 2 * SCALE_WIRE_BYTES * int(rank)
 
 
 # ---------------------------------------------------------------------------
@@ -121,9 +150,7 @@ class QuantizedTensor:
     @property
     def nbytes_packed(self) -> int:
         k, n = self.shape
-        w = packed_nbytes(self.bits, k, n)
-        w += 2 * (k // self.group_size) * n * 2  # bf16 scale+zero on the wire
-        return w
+        return quant_wire_bytes(self.bits, k, n, self.group_size)
 
     def astype_codes(self) -> jax.Array:
         return unpack_bits(self.planes, self.bits)
@@ -153,15 +180,34 @@ def quantize(w: jax.Array, bits: int, group_size: int = 64) -> QuantizedTensor:
         bits=bits, group_size=group_size, shape=(k, n))
 
 
-def quantize_with_params(w: jax.Array, scale: jax.Array, zero: jax.Array,
-                         bits: int, group_size: int) -> QuantizedTensor:
-    """Quantize with externally-optimized (HQQ) scale/zero."""
+def quantize_codes(w: jax.Array, scale: jax.Array, zero: jax.Array,
+                   bits: int, group_size: int) -> jax.Array:
+    """Unpacked uint8 codes in [0, 2^bits) for externally-given scale/zero."""
     k, n = w.shape
     qmax = (1 << bits) - 1
     g = w.astype(jnp.float32).reshape(k // group_size, group_size, n)
     q = jnp.clip(jnp.round(g / scale[:, None, :] + zero[:, None, :]), 0, qmax)
-    q = q.reshape(k, n).astype(jnp.uint8)
-    return QuantizedTensor(pack_bits(q, bits), scale, zero, bits, group_size, (k, n))
+    return q.reshape(k, n).astype(jnp.uint8)
+
+
+def quantize_with_params(w: jax.Array, scale: jax.Array, zero: jax.Array,
+                         bits: int, group_size: int,
+                         store_bits: Optional[int] = None) -> QuantizedTensor:
+    """Quantize with externally-optimized (HQQ) scale/zero.
+
+    ``store_bits`` >= bits packs the codes into a wider bit-plane
+    container (heterogeneous per-expert precision shares one stacked
+    layout; the true width stays the accounting width — same idiom as
+    sub-byte compensator factors in an int8 container).  Dequantization
+    is bit-exact either way: codes fit in the container and the math
+    only reads scale/zero.
+    """
+    k, n = w.shape
+    q = quantize_codes(w, scale, zero, bits, group_size)
+    sb = bits if store_bits is None else store_bits
+    assert sb >= bits, (sb, bits)
+    return QuantizedTensor(pack_bits(q, sb), scale, zero, sb, group_size,
+                           (k, n))
 
 
 def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:

@@ -15,6 +15,12 @@ admits, retires, and refills requests between chunks:
 - ``--offload``: compress the MoE experts offline (BEAM-LRC: low-bit +
   rank-padded compensators) and serve from byte-metered host-side
   expert stores, reporting live wire bytes/token and cache hit rate;
+- ``--artifact DIR`` (with ``--offload``): boot from a serialized
+  compression artifact (``launch/compress.py``) instead of
+  recompressing at startup — the stacks (possibly heterogeneous
+  per-expert bits/ranks from the calibrated allocator) load off disk
+  after a config-fingerprint + checksum check, and serving is
+  bit-identical to in-memory compression of the same plan;
 - ``--bytes-per-token B`` / ``--target-tokens-per-s T`` (with
   ``--offload``): close the loop with the runtime bandwidth-budget
   controller — between scan chunks it retunes the per-layer
@@ -73,6 +79,10 @@ def main():
     ap.add_argument("--offload", action="store_true",
                     help="compress MoE experts and meter offloaded serving "
                          "(wire bytes, cache hits) from live decode routing")
+    ap.add_argument("--artifact", default="",
+                    help="boot the compressed stacks from a "
+                         "launch/compress.py artifact directory instead "
+                         "of recompressing at startup (needs --offload)")
     ap.add_argument("--cache-experts", type=int, default=4,
                     help="device-resident expert LRU capacity per layer")
     ap.add_argument("--bytes-per-token", type=float, default=0.0,
@@ -92,7 +102,10 @@ def main():
     if cfg.encoder is not None or cfg.rope_kind == "mrope":
         print(f"note: {cfg.name} needs frontend inputs; serving the "
               f"text-only path")
-    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    # params follow --seed on BOTH paths, so `--offload` (in-memory
+    # compression) and `--offload --artifact` compare bit-identically at
+    # any seed, not just the default 0
+    params = init_params(jax.random.key(args.seed), cfg, jnp.float32)
     mesh = make_serve_mesh(parse_mesh_spec(args.mesh).get("ep", 1)
                            if args.mesh else 1)
 
@@ -100,10 +113,29 @@ def main():
     if want_budget and not args.offload:
         ap.error("--bytes-per-token/--target-tokens-per-s need --offload "
                  "(the controller feeds on the offload byte meters)")
+    if args.artifact and not args.offload:
+        ap.error("--artifact needs --offload (it replaces the startup "
+                 "compression of the offload path)")
     if args.offload:
         if cfg.moe is None:
             ap.error(f"--offload needs an MoE arch; {cfg.name} has none")
-        qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
+        if args.artifact:
+            from ..calib import load_compression_artifact
+            from ..models.transformer import apply_compressed_stacks
+            stacks_by_layer, plan, meta = load_compression_artifact(
+                args.artifact, cfg)
+            if meta.get("seed", 0) != args.seed:
+                ap.error(f"artifact was compressed against params seed "
+                         f"{meta.get('seed')}, serving seed {args.seed}")
+            qparams, cfg_q = apply_compressed_stacks(params, cfg,
+                                                     stacks_by_layer)
+            print(f"booted artifact {args.artifact}: "
+                  f"{meta['moe_layers']} MoE layers, "
+                  f"plan={'none (uniform)' if plan is None else plan.scorer},"
+                  f" checksum ok — no startup recompression")
+        else:
+            qparams, cfg_q, stacks_by_layer = compress_moe_params(params,
+                                                                  cfg)
         eng = ServeEngine(cfg_q, qparams, quantized=True, mesh=mesh)
         eng.attach_offload(stacks_by_layer, policy="ours",
                            cache_capacity=args.cache_experts)

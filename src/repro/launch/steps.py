@@ -144,7 +144,8 @@ def make_context(cfg: ModelConfig, mode: str, *, quantized: bool = False,
                  scan_unroll: bool = False,
                  remat_policy: str = "full",
                  kernel_impl: Optional[str] = None,
-                 collect_trace: bool = False) -> ExecContext:
+                 collect_trace: bool = False,
+                 collect_moe_inputs: bool = False) -> ExecContext:
     pcfg = pcfg or ParallelConfig()
     ep_mode = "none"
     moe_fn = None
@@ -165,7 +166,8 @@ def make_context(cfg: ModelConfig, mode: str, *, quantized: bool = False,
                        attn_heads_sharded=heads_ok,
                        attn_seq_sharded=seq_ok,
                        kernel_impl=kernel_impl,
-                       collect_trace=collect_trace)
+                       collect_trace=collect_trace,
+                       collect_moe_inputs=collect_moe_inputs)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,9 @@ class LMOutput(NamedTuple):
     caches: Optional[Dict]
     # (moe_layers, T, k) router top-k ids when ctx.collect_trace (else None)
     trace: Optional[jax.Array] = None
+    # (moe_layers, T, d) normed MoE-FFN inputs when ctx.collect_moe_inputs
+    # (the offline calibration pass; else None)
+    moe_inputs: Optional[jax.Array] = None
 
 
 def embed_tokens(params, tokens_or_embeds, cfg: ModelConfig,
@@ -62,14 +65,13 @@ def forward(params, tokens, cfg: ModelConfig, ctx: ExecContext, *,
     enc_out = None
     if cfg.encoder is not None:
         enc_out = apply_encoder(params, enc_embeds, cfg, ctx)
-    x, aux, new_caches, trace = apply_stack(params, x, cfg, ctx, positions,
-                                            caches=caches,
-                                            mrope_pos=mrope_pos,
-                                            enc_out=enc_out, plan=plan)
+    x, aux, new_caches, trace, moe_in = apply_stack(
+        params, x, cfg, ctx, positions, caches=caches, mrope_pos=mrope_pos,
+        enc_out=enc_out, plan=plan)
     from .layers import rms_norm
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(params, x, cfg)
-    return LMOutput(logits, aux, new_caches, trace)
+    return LMOutput(logits, aux, new_caches, trace, moe_in)
 
 
 def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
@@ -85,13 +87,13 @@ def decode_step(params, tokens, caches, cfg: ModelConfig, ctx: ExecContext,
     b = tokens.shape[0]
     positions = caches["pos"][:, None]        # (B, 1) absolute position
     x = embed_tokens(params, tokens, cfg, positions)
-    x, aux, new_caches, trace = apply_stack(params, x, cfg, ctx, positions,
-                                            caches=caches,
-                                            mrope_pos=mrope_pos, plan=plan)
+    x, aux, new_caches, trace, moe_in = apply_stack(
+        params, x, cfg, ctx, positions, caches=caches, mrope_pos=mrope_pos,
+        plan=plan)
     from .layers import rms_norm
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_head(params, x, cfg)
-    return LMOutput(logits, aux, new_caches, trace)
+    return LMOutput(logits, aux, new_caches, trace, moe_in)
 
 
 def _xent_terms_plain(params, x, targets, cfg: ModelConfig):
@@ -177,9 +179,9 @@ def lm_loss(params, batch, cfg: ModelConfig, ctx: ExecContext,
         enc_out = apply_encoder(params, batch["enc_embeds"], cfg, ctx)
     from .transformer import apply_stack
     from .layers import rms_norm
-    x, aux, _, _ = apply_stack(params, x, cfg, ctx, positions,
-                               mrope_pos=batch.get("mrope_pos"),
-                               enc_out=enc_out)
+    x, aux, _, _, _ = apply_stack(params, x, cfg, ctx, positions,
+                                  mrope_pos=batch.get("mrope_pos"),
+                                  enc_out=enc_out)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
 
     x = x[:, :-1]

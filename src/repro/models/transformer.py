@@ -63,6 +63,10 @@ class ExecContext:
     kernel_impl: Optional[str] = None
     # return per-MoE-layer top-k routing as a first-class forward output
     collect_trace: bool = False
+    # return per-MoE-layer FFN inputs (T, d) as a first-class output —
+    # the offline calibration pass (calib/stats.py) feeds on these to
+    # accumulate routing frequency / gate mass / input second moments
+    collect_moe_inputs: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -330,7 +334,8 @@ def unstack_params(params, cfg: ModelConfig):
     return out
 
 
-def compress_moe_params(params, cfg: ModelConfig, qcfg=None):
+def compress_moe_params(params, cfg: ModelConfig, qcfg=None, plan=None,
+                        stats=None):
     """Offline-compress every MoE layer's experts for quantized serving.
 
     Runs the full pipeline (DESIGN.md) over the routed-expert stacks of
@@ -341,28 +346,70 @@ def compress_moe_params(params, cfg: ModelConfig, qcfg=None):
     dicts the offload ``ExpertStore``s are built from.  One helper
     shared by ``launch/serve.py``, benchmarks, examples, and tests so
     the compressed-param layout has a single definition.
+
+    ``plan`` (a ``calib.CompressionPlan``) pins per-expert bits and
+    per-projection ranks per MoE layer from the offline budget
+    allocator; ``stats`` (per-MoE-layer ``calib.LayerCalibStats``)
+    makes the compensator SVDs activation-weighted.  Both None keeps the
+    paper's kurtosis-guided uniform-bit path bit-identically.
     """
     from ..core.pipeline import compress_ffn_weights
     qcfg = qcfg or cfg.moe.quant
     up = unstack_params(params, cfg)
     specs = layer_specs(cfg)
     segs, stacks_by_layer = [], []
+    li = 0
     for (lp,), spec in zip(up["segments"], specs):
         lp = dict(lp)
         if spec.ffn == "moe":
+            alloc = plan.layers[li] if plan is not None else None
+            lstats = stats[li] if stats is not None else None
             mp = dict(lp["moe"])
             stacks, _ = compress_ffn_weights(mp["w1"], mp["w2"], mp["w3"],
-                                             qcfg)
+                                             qcfg, allocation=alloc,
+                                             stats=lstats)
             stacks_by_layer.append(stacks)
             mp["stacks"] = stacks
             for k in ("w1", "w2", "w3"):
                 mp.pop(k)
             lp["moe"] = mp
+            li += 1
         segs.append((lp,))
     qparams = dict(up)
     qparams["segments"] = tuple(segs)
     return (qparams, dataclasses.replace(cfg, force_unroll_plan=True),
             stacks_by_layer)
+
+
+def apply_compressed_stacks(params, cfg: ModelConfig, stacks_by_layer):
+    """Swap precompressed ``CompressedExpertStack`` dicts into the MoE
+    layers of a freshly-initialized param tree — the artifact boot path
+    (``launch/serve.py --artifact``): no HQQ / SVD runs, the stacks come
+    straight off disk.  Returns ``(qparams, cfg_q)`` in exactly the
+    layout ``compress_moe_params`` produces, so serving from an artifact
+    is bit-identical to serving from in-memory compression of the same
+    plan."""
+    up = unstack_params(params, cfg)
+    specs = layer_specs(cfg)
+    n_moe = sum(1 for s in specs if s.ffn == "moe")
+    if n_moe != len(stacks_by_layer):
+        raise ValueError(f"artifact has {len(stacks_by_layer)} MoE layers; "
+                         f"config {cfg.name} has {n_moe}")
+    segs = []
+    li = 0
+    for (lp,), spec in zip(up["segments"], specs):
+        lp = dict(lp)
+        if spec.ffn == "moe":
+            mp = dict(lp["moe"])
+            mp["stacks"] = stacks_by_layer[li]
+            for k in ("w1", "w2", "w3"):
+                mp.pop(k)
+            lp["moe"] = mp
+            li += 1
+        segs.append((lp,))
+    qparams = dict(up)
+    qparams["segments"] = tuple(segs)
+    return qparams, dataclasses.replace(cfg, force_unroll_plan=True)
 
 
 # ---------------------------------------------------------------------------
@@ -601,20 +648,22 @@ def _slstm_block(x, p, cfg: ModelConfig, ctx: ExecContext, cache):
 def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
                 positions, cache, mrope_pos=None, enc_out=None,
                 plan_row=None):
-    """One transformer layer.  Returns (x, aux, new_cache, trace).
+    """One transformer layer.  Returns (x, aux, new_cache, trace, moe_in).
 
     ``trace`` is the (T, k) top-k expert ids of this layer's router when
     ``ctx.collect_trace`` is set and the layer is MoE, else None (static).
+    ``moe_in`` is the (T, d) normed MoE-FFN input when
+    ``ctx.collect_moe_inputs`` is set (calibration pass), else None.
     ``plan_row`` is this layer's (2,) int32 [top_n, rank_cap] row of the
     bandwidth controller's restoration plan (None = static QuantConfig).
     """
     aux = {}
     if spec.mixer == "mlstm":
         x, nc = _mlstm_block(x, p, cfg, ctx, cache)
-        return x, aux, nc, None
+        return x, aux, nc, None, None
     if spec.mixer == "slstm":
         x, nc = _slstm_block(x, p, cfg, ctx, cache)
-        return x, aux, nc, None
+        return x, aux, nc, None, None
 
     h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
     if spec.mixer in ("global", "local"):
@@ -635,8 +684,9 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
     x = x + y
 
     if spec.ffn == "none":
-        return x, aux, nc, None
+        return x, aux, nc, None, None
     trace = None
+    moe_in = None
     h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
     if spec.ffn == "dense":
         if ctx.quantized and "stacks" in p.get("ffn", {}):
@@ -661,11 +711,13 @@ def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ctx: ExecContext,
             topk = info.topk_idx.reshape(b, s, -1)
         if ctx.collect_trace:
             trace = topk.reshape(-1, topk.shape[-1]).astype(jnp.int32)
+        if ctx.collect_moe_inputs:
+            moe_in = h.reshape(-1, h.shape[-1]).astype(jnp.float32)
         if "shared" in mp:
             y = y + ffn_apply(h, mp["shared"], cfg.act, True)
     if cfg.post_attn_norm:
         y = rms_norm(y, p["post_ffn_norm"], cfg.norm_eps)
-    return x + y, aux, nc, trace
+    return x + y, aux, nc, trace, moe_in
 
 
 # ---------------------------------------------------------------------------
@@ -695,11 +747,13 @@ def _merge_aux(a, b):
 
 def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
                 caches=None, mrope_pos=None, enc_out=None, plan=None):
-    """Run all segments.  Returns (x, aux, new_caches, trace).
+    """Run all segments.  Returns (x, aux, new_caches, trace, moe_inputs).
 
     ``trace`` is the stacked (moe_layers, T, k) router top-k ids in global
     layer order when ``ctx.collect_trace`` is set (None otherwise) — the
-    first-class replacement for hooking ``moe.route``.
+    first-class replacement for hooking ``moe.route``.  ``moe_inputs``
+    is the stacked (moe_layers, T, d) normed MoE-FFN inputs in the same
+    order when ``ctx.collect_moe_inputs`` is set (the calibration pass).
 
     ``plan`` is the bandwidth controller's (num_moe_layers, 2) int32
     [top_n, rank_cap] array in the same global MoE-layer order as the
@@ -710,6 +764,7 @@ def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
     aux = _zero_aux()
     new_segs = []
     traces: List[jax.Array] = []
+    moe_ins: List[jax.Array] = []
     use_cache = caches is not None and ctx.mode in ("prefill", "step")
     moe_off = 0
 
@@ -734,28 +789,33 @@ def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
             ga = _zero_aux()
             ncs = []
             trs = []
+            mis = []
             mi = 0
             for pi, spec in enumerate(seg.layers):
                 row = None
                 if gpl is not None and spec.ffn == "moe":
                     row = gpl[mi]
                     mi += 1
-                x, a, nc, tr = apply_layer(x, gp[pi], spec, cfg, ctx,
-                                           positions,
-                                           gc[pi] if use_cache else None,
-                                           mrope_pos, enc_out, plan_row=row)
+                x, a, nc, tr, m_in = apply_layer(x, gp[pi], spec, cfg, ctx,
+                                                 positions,
+                                                 gc[pi] if use_cache else None,
+                                                 mrope_pos, enc_out,
+                                                 plan_row=row)
                 x = x.astype(dtype0)  # keep scan carry dtype stable
                 ga = _merge_aux(ga, a)
                 ncs.append(nc if use_cache else 0)
                 if tr is not None:
                     trs.append(tr)
-            return x, ga, tuple(ncs), tuple(trs)
+                if m_in is not None:
+                    mis.append(m_in)
+            return x, ga, tuple(ncs), tuple(trs), tuple(mis)
 
         if seg.repeat == 1:
-            x, ga, nc, trs = group(x, seg_params, seg_caches, seg_plan)
+            x, ga, nc, trs, mis = group(x, seg_params, seg_caches, seg_plan)
             aux = _merge_aux(aux, ga)
             new_segs.append(nc)
             traces.extend(trs)
+            moe_ins.extend(mis)
         elif use_cache:
             # the plan (when present) rides the scan as an extra xs leaf
             xs = (seg_params, seg_caches) + (
@@ -764,15 +824,16 @@ def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
             def body_c(carry, xs):
                 gp, gc, *gpl = xs
                 fn = _remat(group, ctx)
-                xo, ga, nc, trs = fn(carry, gp, gc,
-                                     gpl[0] if gpl else None)
-                return xo, (ga, nc, trs)
+                xo, ga, nc, trs, mis = fn(carry, gp, gc,
+                                          gpl[0] if gpl else None)
+                return xo, (ga, nc, trs, mis)
 
-            x, (gas, ncs, trs) = jax.lax.scan(body_c, x, xs,
-                                              unroll=ctx.scan_unroll)
+            x, (gas, ncs, trs, mis) = jax.lax.scan(body_c, x, xs,
+                                                   unroll=ctx.scan_unroll)
             aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
             new_segs.append(ncs)
             traces.extend(_unstack_scan_traces(trs))
+            moe_ins.extend(_unstack_scan_traces(mis))
         else:
             dummy = tuple(None for _ in seg.layers)
             xs = (seg_params,) + (
@@ -781,21 +842,23 @@ def apply_stack(params, x, cfg: ModelConfig, ctx: ExecContext, positions,
             def body(carry, xs):
                 gp, *gpl = xs
                 fn = _remat(group, ctx)
-                xo, ga, _, trs = fn(carry, gp, dummy,
-                                    gpl[0] if gpl else None)
-                return xo, (ga, trs)
+                xo, ga, _, trs, mis = fn(carry, gp, dummy,
+                                         gpl[0] if gpl else None)
+                return xo, (ga, trs, mis)
 
-            x, (gas, trs) = jax.lax.scan(body, x, xs,
-                                         unroll=ctx.scan_unroll)
+            x, (gas, trs, mis) = jax.lax.scan(body, x, xs,
+                                              unroll=ctx.scan_unroll)
             aux = _merge_aux(aux, jax.tree.map(jnp.sum, gas))
             new_segs.append(0)
             traces.extend(_unstack_scan_traces(trs))
+            moe_ins.extend(_unstack_scan_traces(mis))
 
     new_caches = None
     if use_cache:
         new_caches = {"segments": tuple(new_segs), "pos": positions[:, -1] + 1}
     trace = jnp.stack(traces, axis=0) if traces else None
-    return x, aux, new_caches, trace
+    moe_inputs = jnp.stack(moe_ins, axis=0) if moe_ins else None
+    return x, aux, new_caches, trace, moe_inputs
 
 
 def _unstack_scan_traces(trs) -> List[jax.Array]:

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pipeline import CompressedExpertStack
+from ..core.quantize import factor_wire_bytes
 
 
 @dataclasses.dataclass
@@ -134,8 +135,8 @@ class ExpertStore:
         for s in self.stacks.values():
             r = s.ranks[e] if rank_cap is None else min(s.ranks[e],
                                                         int(rank_cap))
-            total += int(r * (s.shape[1] + s.shape[2])
-                         * s.factor_bits / 8) + 4 * r
+            total += factor_wire_bytes(r, s.shape[1], s.shape[2],
+                                       s.factor_bits)
         return total
 
     def _drop_evicted(self):

@@ -209,9 +209,20 @@ class BandwidthController:
                     ccfg: ControlConfig, static_top_n: int
                     ) -> "BandwidthController":
         """Build from the per-layer ``CompressedExpertStack`` dicts the
-        engine's offload metering already holds; the rank ladder tops out
-        at each layer's largest padded projection rank (capping above a
-        smaller projection's pad rank is the identity for it)."""
-        pads = [max(s.pad_rank for s in stacks.values())
-                for stacks in stacks_by_layer]
-        return cls(pads, top_k, ccfg, static_top_n)
+        engine's offload metering already holds.
+
+        The rank ladder tops out at each layer's largest TRUE allocated
+        rank — not the padded rank.  Under calibrated heterogeneous
+        allocation (or an artifact padded for alignment) ``pad_rank``
+        can exceed every true rank, and rungs in that gap would be
+        identity plans: caps above an expert's true rank neither change
+        the math (padding columns are exact zeros) nor the metered
+        bytes (``compensator_bytes`` clamps at the true rank).  Topping
+        out at the true rank makes every rung a real operating point,
+        and the inactive-controller static plan (cap = ladder top) stays
+        bit- and byte-identical to the uncontrolled path."""
+        tops = []
+        for stacks in stacks_by_layer:
+            true_top = max(max(s.ranks) for s in stacks.values())
+            tops.append(max(true_top, 1))
+        return cls(tops, top_k, ccfg, static_top_n)

@@ -1,0 +1,356 @@
+"""Offline calibration / heterogeneous allocation / artifact subsystem.
+
+Pins the PR-5 acceptance invariants:
+
+- calibration stats agree with the first-class router trace;
+- the budget allocator respects its byte budget and is monotone in it;
+- at EQUAL total wire bytes, the budgeted calibrated allocation achieves
+  strictly lower routing-weighted restoration error than uniform-bit
+  compression (via the ``bench_accuracy.allocation_rows`` frontier the
+  benchmark reports);
+- artifacts round-trip bit-identically (stacks, plan, manifest), reject
+  config-fingerprint mismatches and corrupt payloads;
+- serving from an artifact is bit-identical (tokens, logprobs, metered
+  bytes) to serving from in-memory compression of the same plan;
+- heterogeneous per-expert wire bytes conserve exactly through
+  ``ExpertStore`` / ``ShardedExpertStore`` metering at every shard count.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.calib import (SCORERS, CompressionPlan, allocate_budget,
+                         collect_calibration_stats, load_compression_artifact,
+                         moe_weights_by_layer, plan_wire_bytes,
+                         save_compression_artifact, stacks_wire_bytes,
+                         uniform_plan, weighted_restoration_error)
+from repro.config import ControlConfig, ModelConfig, MoEConfig, QuantConfig
+from repro.core.pipeline import compress_expert_stack
+from repro.core.quantize import factor_wire_bytes, quant_wire_bytes
+from repro.models import init_params
+from repro.models.transformer import (apply_compressed_stacks,
+                                      compress_moe_params)
+
+
+def tiny_moe_cfg(e=8, k=2, layers=2, d=64, fe=64, vocab=128) -> ModelConfig:
+    return ModelConfig(
+        name=f"calib-test-{e}e", family="moe", num_layers=layers,
+        d_model=d, num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0,
+        vocab_size=vocab, block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=e, top_k=k, d_expert=fe,
+                      quant=QuantConfig(enabled=True, bits=2, rank_budget=8,
+                                        top_n_restore=1, hqq_iters=2)))
+
+
+@pytest.fixture(scope="module")
+def calib_setup():
+    cfg = tiny_moe_cfg()
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    stats = collect_calibration_stats(cfg, params, batches=2, batch_size=4,
+                                      seq_len=32)
+    weights = moe_weights_by_layer(params, cfg)
+    return cfg, params, stats, weights
+
+
+# ---------------------------------------------------------------------------
+# stage 1: stats collection
+# ---------------------------------------------------------------------------
+
+def test_stats_agree_with_router_trace(calib_setup):
+    """Counts/gate-mass come from the same routing the first-class trace
+    reports: an independent host-side recount of the traced top-k ids
+    must reproduce the accumulated counts exactly."""
+    cfg, params, stats, _ = calib_setup
+    from repro.data.synthetic import SyntheticLM, SyntheticLMConfig
+    from repro.launch.steps import make_context
+    from repro.models import model as lm
+    data = SyntheticLM(SyntheticLMConfig(vocab_size=cfg.vocab_size,
+                                         batch_size=4, seq_len=32, seed=0))
+    ctx = make_context(cfg, "train", exact_capacity=True, collect_trace=True)
+    fwd = jax.jit(lambda p, t: lm.forward(p, t, cfg, ctx).trace)
+    e = cfg.moe.num_experts
+    counts = np.zeros((len(stats), e))
+    for bi in range(2):
+        tr = np.asarray(fwd(params, jnp.asarray(data.batch(bi)["tokens"])))
+        for li in range(len(stats)):
+            counts[li] += np.bincount(tr[li].reshape(-1), minlength=e)
+    for li, s in enumerate(stats):
+        np.testing.assert_array_equal(s.counts, counts[li])
+        # every routed assignment carries gate mass and an input moment
+        assert s.tokens == 2 * 4 * 32
+        assert (s.gate_mass[s.counts > 0] > 0).all()
+        assert (s.in_moment[s.counts > 0] > 0).any(axis=1).all()
+        assert s.hid_moment.shape == (e, cfg.moe.d_expert)
+        imp = s.importance()
+        assert imp.shape == (e,) and abs(imp.sum() - 1.0) < 1e-9
+        assert (imp > 0).all()          # floored: cold experts keep a stake
+
+
+# ---------------------------------------------------------------------------
+# stage 2: budget allocation
+# ---------------------------------------------------------------------------
+
+def test_allocator_respects_budget_and_is_monotone(calib_setup):
+    cfg, params, stats, weights = calib_setup
+    qcfg = cfg.moe.quant
+    ref = uniform_plan(weights, qcfg, bits=4, rank=8)
+    errs, spents = [], []
+    for frac in (0.5, 0.8, 1.1):
+        budget = frac * ref.spent_bytes
+        plan = allocate_budget(weights, qcfg, budget, stats=stats)
+        assert plan.spent_bytes <= budget + 1e-9
+        # plan bytes recompute to the same number via the shared formulas
+        assert plan_wire_bytes(plan.layers, qcfg, weights) \
+            == plan.spent_bytes
+        errs.append(plan.predicted_err)
+        spents.append(plan.spent_bytes)
+    assert errs[0] >= errs[1] >= errs[2]       # more bytes, no worse
+    assert spents[0] <= spents[1] <= spents[2]
+
+
+def test_compressed_stacks_realize_the_plan(calib_setup):
+    """The stacks' per-expert true bits/ranks and wire bytes equal the
+    plan's, through the one shared byte formula."""
+    cfg, params, stats, weights = calib_setup
+    qcfg = cfg.moe.quant
+    plan = allocate_budget(weights, qcfg,
+                           uniform_plan(weights, qcfg, 4, 8).spent_bytes,
+                           stats=stats)
+    _, _, stacks = compress_moe_params(params, cfg, plan=plan, stats=stats)
+    assert stacks_wire_bytes(stacks) == plan.spent_bytes
+    for l, alloc in zip(stacks, plan.layers):
+        for proj, stack in l.items():
+            _, K, N = stack.shape
+            for e in range(cfg.moe.num_experts):
+                assert stack.bits_of(e) == int(alloc.bits[e])
+                assert stack.ranks[e] == int(alloc.ranks[proj][e])
+                want = quant_wire_bytes(stack.bits_of(e), K, N,
+                                        stack.group_size) \
+                    + factor_wire_bytes(stack.ranks[e], K, N,
+                                        stack.factor_bits)
+                assert stack.expert_wire_bytes(e, compensated=True) == want
+
+
+def test_scorers_are_pluggable(calib_setup):
+    """The kurtosis heuristic is one scorer among several: every scorer
+    runs through the same budgeted machinery (calibrated needs stats)."""
+    cfg, params, stats, weights = calib_setup
+    qcfg = cfg.moe.quant
+    budget = uniform_plan(weights, qcfg, 3, 8).spent_bytes
+    for name in SCORERS:
+        plan = allocate_budget(weights, qcfg, budget,
+                               stats=stats if name == "calibrated" else None,
+                               scorer=name)
+        assert plan.spent_bytes <= budget
+    with pytest.raises(ValueError):
+        allocate_budget(weights, qcfg, budget, stats=None,
+                        scorer="calibrated")
+
+
+def test_calibrated_beats_uniform_at_equal_bytes():
+    """PR acceptance: at matched total wire bytes the calibrated
+    heterogeneous allocation achieves LOWER routing-weighted restoration
+    error than uniform-bit compression — asserted through the exact
+    frontier rows ``benchmarks/bench_accuracy.py`` reports."""
+    from benchmarks.bench_accuracy import allocation_rows
+    from benchmarks.common import bench_moe_cfg, heavy_tail_expert_init
+    cfg = bench_moe_cfg(d_model=64, d_expert=64, vocab=128)
+    params = heavy_tail_expert_init(cfg, seed=0)(jax.random.key(0))
+    rows = allocation_rows(cfg, params, bits_points=(2, 3), rank=8,
+                           calib_batches=2)
+    for row in rows:
+        assert row["calib_kb"] <= row["budget_kb"] + 1e-9, row
+        assert row["calib_err"] < row["uniform_err"], row
+        assert row["err_reduction_pct"] > 0, row
+
+
+def test_whitened_svd_lowers_activation_weighted_error():
+    """With an anisotropic input second moment, the moment-whitened
+    compensator SVD beats the plain weight-space SVD in the
+    activation-weighted norm at the same rank (Eckart–Young on the
+    whitened residual)."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(2, 64, 48)).astype(np.float32)) * 0.1
+    mom = np.geomspace(1e-2, 1e2, 64)[None, :].repeat(2, axis=0)
+    qcfg = QuantConfig(enabled=True, bits=2, hqq_iters=2, factor_bits=16)
+    ranks = np.array([6, 6])
+    plain, _ = compress_expert_stack(w, qcfg, ranks=ranks)
+    white, _ = compress_expert_stack(w, qcfg, ranks=ranks, moments=mom)
+    sw = np.sqrt(mom / mom.mean(axis=1, keepdims=True))
+    for e in range(2):
+        def werr(stack):
+            what = (np.asarray(stack.dequantize_all())
+                    + np.asarray(stack.compensation_all()))[e]
+            return np.linalg.norm(sw[e][:, None]
+                                  * (np.asarray(w[e]) - what))
+        assert werr(white) < werr(plain)
+
+
+# ---------------------------------------------------------------------------
+# stage 3: artifact round-trip
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_bit_identical(calib_setup, tmp_path):
+    cfg, params, stats, weights = calib_setup
+    qcfg = cfg.moe.quant
+    plan = allocate_budget(weights, qcfg,
+                           uniform_plan(weights, qcfg, 4, 8).spent_bytes,
+                           stats=stats)
+    _, _, stacks = compress_moe_params(params, cfg, plan=plan, stats=stats)
+    save_compression_artifact(tmp_path / "art", cfg, stacks, plan=plan)
+    loaded, plan2, meta = load_compression_artifact(tmp_path / "art", cfg)
+    a = jax.tree_util.tree_leaves(stacks)
+    b = jax.tree_util.tree_leaves(loaded)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # static meta (incl. heterogeneous bits/ranks) restores exactly
+    for l0, l1 in zip(stacks, loaded):
+        for proj in l0:
+            assert l0[proj].expert_bits == l1[proj].expert_bits
+            assert l0[proj].ranks == l1[proj].ranks
+            assert l0[proj].shape == l1[proj].shape
+    assert plan2.to_json() == plan.to_json()
+
+
+def test_artifact_rejects_mismatch_and_corruption(calib_setup, tmp_path):
+    cfg, params, stats, weights = calib_setup
+    _, _, stacks = compress_moe_params(params, cfg)
+    save_compression_artifact(tmp_path / "art", cfg, stacks)
+    other = dataclasses.replace(cfg, d_model=128)
+    with pytest.raises(ValueError, match="fingerprint"):
+        load_compression_artifact(tmp_path / "art", other)
+    # non-strict: loads, flags the mismatch for inspection tools
+    _, _, meta = load_compression_artifact(tmp_path / "art", other,
+                                           strict=False)
+    assert "fingerprint_mismatch" in meta
+    # corrupt payload -> checksum failure, never a silent wrong load.
+    # The second flip targets a tensor's data bytes PAST the 4 KiB
+    # prefix a sampling checksum would cover: the artifact checksum
+    # hashes every byte, so deep corruption must still fail the load.
+    npz = tmp_path / "art" / "artifact.npz"
+    with np.load(npz) as z:
+        big = max(z.files, key=lambda k: z[k].nbytes)
+        assert z[big].nbytes > 8192
+        needle = z[big].tobytes()[6000:6032]
+    blob = bytearray(npz.read_bytes())
+    deep = blob.find(needle)
+    assert deep > 0
+    for offset in (len(blob) // 2, deep + 16):
+        blob = bytearray(npz.read_bytes())
+        blob[offset] ^= 0xFF
+        npz.write_bytes(bytes(blob))
+        with pytest.raises(Exception):
+            load_compression_artifact(tmp_path / "art", cfg)
+        save_compression_artifact(tmp_path / "art", cfg, stacks)  # restore
+
+
+def test_artifact_roundtrips_bf16_factors(calib_setup, tmp_path):
+    """factor_bits=16 stores compensators as bfloat16 — a dtype numpy
+    only knows via ml_dtypes.  The codec must round-trip it (uint16 view
+    + logical dtype in the leaf spec), not pickle-and-fail at load."""
+    cfg, params, _, _ = calib_setup
+    qcfg = dataclasses.replace(cfg.moe.quant, factor_bits=16)
+    _, _, stacks = compress_moe_params(params, cfg, qcfg=qcfg)
+    assert stacks[0]["w1"].u.dtype == jnp.bfloat16
+    save_compression_artifact(tmp_path / "art16", cfg, stacks)
+    loaded, _, _ = load_compression_artifact(tmp_path / "art16", cfg)
+    for x, y in zip(jax.tree_util.tree_leaves(stacks),
+                    jax.tree_util.tree_leaves(loaded)):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint8), np.asarray(y).view(np.uint8))
+
+
+def test_serve_from_artifact_bit_identical(calib_setup, tmp_path):
+    """launch/serve.py --artifact semantics: booting the saved stacks
+    produces the same tokens, logprobs, and metered wire bytes as
+    in-memory compression of the same plan — no recompression happened
+    and none was needed."""
+    from repro.serve import ServeEngine
+    cfg, params, stats, weights = calib_setup
+    qcfg = cfg.moe.quant
+    plan = allocate_budget(weights, qcfg,
+                           uniform_plan(weights, qcfg, 3, 8).spent_bytes,
+                           stats=stats)
+    qp, cfg_q, stacks = compress_moe_params(params, cfg, plan=plan,
+                                            stats=stats)
+    save_compression_artifact(tmp_path / "art", cfg, stacks, plan=plan)
+    loaded, _, _ = load_compression_artifact(tmp_path / "art", cfg)
+    qp2, cfg_q2 = apply_compressed_stacks(params, cfg, loaded)
+    assert cfg_q2 == cfg_q
+
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8),
+                                                dtype=np.int32)
+    r = []
+    for p_, s_ in ((qp, stacks), (qp2, loaded)):
+        eng = ServeEngine(cfg_q, p_, quantized=True)
+        eng.attach_offload(s_, policy="ours", cache_capacity=8)
+        r.append(eng.generate(prompts, max_new=6))
+    np.testing.assert_array_equal(r[0].tokens, r[1].tokens)
+    np.testing.assert_array_equal(r[0].logprobs, r[1].logprobs)
+    assert r[0].offload_report["total_bytes"] \
+        == r[1].offload_report["total_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous wire bytes through the offload meter
+# ---------------------------------------------------------------------------
+
+def test_hetero_bytes_conserve_across_shard_counts(calib_setup):
+    """Per-expert heterogeneous bytes flow through ``ExpertStore`` and
+    ``ShardedExpertStore`` metering identically: the same routing
+    sequence meters the same totals at ep in {1, 2, 4, 8}, per-shard
+    bytes sum exactly, and distinct per-expert costs are really
+    exercised."""
+    from repro.offload.store import ExpertStore, ShardedExpertStore
+    cfg, params, stats, weights = calib_setup
+    qcfg = cfg.moe.quant
+    plan = allocate_budget(weights, qcfg,
+                           uniform_plan(weights, qcfg, 4, 8).spent_bytes,
+                           stats=stats)
+    _, _, stacks = compress_moe_params(params, cfg, plan=plan, stats=stats)
+    layer = stacks[0]
+    e = cfg.moe.num_experts
+    base = ExpertStore(layer, cache_capacity=e)
+    per_expert = [base.expert_bytes(i, "ours") for i in range(e)]
+    assert len(set(per_expert)) > 1      # heterogeneity is real
+    rng = np.random.default_rng(0)
+    topks = rng.integers(0, e, size=(64, 2))
+    def run(store):
+        for tk in topks:
+            store.access_token(tk, top_n=1, policy="ours", rank_cap=None)
+        return store.total_bytes
+    total1 = run(base)
+    for ep in (2, 4, 8):
+        sh = ShardedExpertStore(layer, ep=ep, cache_capacity=e)
+        total = run(sh)
+        assert total == total1
+        assert int(sh.shard_totals.sum()) == total
+    # the metered unique-fetch bytes match the stacks' own accounting
+    uniq = np.unique(topks)
+    want = sum(layer[p].expert_wire_bytes(int(i), False)
+               for p in layer for i in uniq)
+    assert base.cache.stats.bytes_moved == want
+
+
+def test_controller_ladder_respects_true_ranks():
+    """from_stacks tops the rank ladder at the layer's max TRUE rank:
+    pad-rank alignment slack contributes no identity rungs, and the
+    inactive static plan caps at the true rank."""
+    from repro.serve.controller import BandwidthController, static_plan
+    stacks = {"w1": SimpleNamespace(ranks=(4, 2, 0), pad_rank=16),
+              "w2": SimpleNamespace(ranks=(2, 1, 0), pad_rank=16)}
+    c = BandwidthController.from_stacks([stacks], top_k=2,
+                                        ccfg=ControlConfig(),
+                                        static_top_n=1)
+    assert c.pad_ranks == (4,)
+    plan = c.plan()
+    assert int(plan.rank_cap[0]) == 4        # not the padded 16
+    # every active rung's cap stays within the true-rank ceiling
+    for lvl in range(c.max_level + 1):
+        assert int(c.plan_at(lvl).rank_cap[0]) <= 4

@@ -19,7 +19,11 @@ and the tests pin:
   expert partition), and the per-shard bytes sum to the total;
 - the bandwidth controller drives the plan under sharding with ZERO new
   decode-scan compiles across plan/budget changes, and a a sharded serve
-  with per-shard metering feeds chunk updates at every boundary.
+  with per-shard metering feeds chunk updates at every boundary;
+- (PR 5) a calibrated heterogeneous-precision artifact saved on a
+  1-device mesh restores into ep=2 / ep=8 serving token-identically,
+  with the per-expert (heterogeneous-bit) wire bytes conserved EXACTLY
+  across shard counts and per-shard bytes summing to the total.
 """
 import textwrap
 
@@ -114,6 +118,50 @@ SCRIPT = textwrap.dedent("""
         "controller_updates": len(eng.controller.history),
         "chunks": s2.chunks,
     }
+
+    # calibrated heterogeneous artifact: save once (1-device mesh),
+    # restore into every shard count (extends the parity matrix)
+    import tempfile
+    from repro.calib import (allocate_budget, collect_calibration_stats,
+                             load_compression_artifact,
+                             moe_weights_by_layer,
+                             save_compression_artifact, uniform_plan)
+    from repro.models.transformer import apply_compressed_stacks
+    cfg = make_cfg(8, 2)
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    cstats = collect_calibration_stats(cfg, params, batches=1,
+                                       batch_size=2, seq_len=32)
+    weights = moe_weights_by_layer(params, cfg)
+    qcfg = cfg.moe.quant
+    plan = allocate_budget(
+        weights, qcfg, uniform_plan(weights, qcfg, 3, 4).spent_bytes,
+        stats=cstats)
+    qparams, cfg_q, stacks = compress_moe_params(params, cfg, plan=plan,
+                                                 stats=cstats)
+    tmp = tempfile.mkdtemp()
+    save_compression_artifact(tmp, cfg, stacks, plan=plan)
+    loaded, _, _ = load_compression_artifact(tmp, cfg)
+    qp_art, _ = apply_compressed_stacks(params, cfg, loaded)
+    for label, prm, stk, eps in (("mem", qparams, stacks, (1,)),
+                                 ("art", qp_art, loaded, (1, 2, 8))):
+        for ep in eps:
+            eng = ServeEngine(cfg_q, prm, quantized=True,
+                              mesh=make_serve_mesh(ep))
+            eng.attach_offload(stk, policy="ours", cache_capacity=8,
+                               prefetch=False)
+            st = eng.generate_many(prompts, max_new=4, num_slots=2, chunk=2)
+            rep = st.offload_report
+            store0 = eng._stores[0]
+            results[f"artifact/{label}/ep{ep}"] = {
+                "tokens": np.concatenate(
+                    [r.tokens for r in st.results]).tolist(),
+                "logprobs": np.concatenate(
+                    [r.logprobs for r in st.results]).tolist(),
+                "total_bytes": rep["total_bytes"],
+                "per_shard_bytes": rep["per_shard_bytes"],
+                "expert_bytes": [store0.expert_bytes(e, "ours")
+                                 for e in range(8)],
+            }
     print("RESULTS:" + json.dumps(results))
 """)
 
@@ -172,6 +220,41 @@ def test_moe_experts_actually_spread_across_shards(serve_results):
     assert sum(1 for b in got["per_shard_bytes"] if b > 0) >= 4
     # E=1 cannot partition: the engine falls back to a single store
     assert serve_results["dense_e1/ref/ep8"]["ep"] == 1
+
+
+def test_artifact_restores_bit_identically_on_one_device(serve_results):
+    """Booting the saved calibrated artifact reproduces in-memory
+    compression of the same plan exactly (tokens, logprobs, bytes)."""
+    mem = serve_results["artifact/mem/ep1"]
+    art = serve_results["artifact/art/ep1"]
+    assert art["tokens"] == mem["tokens"]
+    assert art["logprobs"] == mem["logprobs"]
+    assert art["total_bytes"] == mem["total_bytes"] > 0
+
+
+def test_artifact_sharded_serving_token_identical(serve_results):
+    """A 1-device-saved artifact restored into ep=2 / ep=8 serving
+    decodes the identical token stream."""
+    base = serve_results["artifact/art/ep1"]
+    for ep in (2, 8):
+        got = serve_results[f"artifact/art/ep{ep}"]
+        assert got["tokens"] == base["tokens"], ep
+        np.testing.assert_allclose(got["logprobs"], base["logprobs"],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_artifact_hetero_bytes_conserved_across_shards(serve_results):
+    """The calibrated plan's heterogeneous per-expert wire bytes flow
+    through the sharded metering with EXACT conservation: totals match
+    at every shard count and per-shard bytes sum to the total."""
+    base = serve_results["artifact/art/ep1"]
+    # the allocation is really heterogeneous, or this test proves nothing
+    assert len(set(base["expert_bytes"])) > 1
+    for ep in (1, 2, 8):
+        got = serve_results[f"artifact/art/ep{ep}"]
+        assert got["total_bytes"] == base["total_bytes"]
+        assert sum(got["per_shard_bytes"]) == got["total_bytes"]
+        assert got["expert_bytes"] == base["expert_bytes"]
 
 
 def test_controller_moves_plan_without_decode_recompile(serve_results):

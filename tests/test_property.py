@@ -8,8 +8,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import RANK_BUCKETS
-from repro.core import (allocate_ranks, pack_bits, quantize, dequantize,
-                        unpack_bits)
+from repro.core import (allocate_ranks, pack_bits, packed_nbytes, quantize,
+                        dequantize, unpack_bits)
 from repro.core.kurtosis import uniform_ranks
 from repro.models.moe import (Dispatch, RoutingInfo, combine_tokens,
                               dispatch_tokens, make_dispatch, route)
@@ -28,6 +28,46 @@ def test_pack_unpack_is_identity(bits, k, n, seed):
     q = jnp.asarray(rng.integers(0, 1 << bits, (k, n)).astype(np.uint8))
     assert np.array_equal(np.asarray(unpack_bits(pack_bits(q, bits), bits)),
                           np.asarray(q))
+
+
+@given(bits=st.sampled_from([1, 2, 3, 4, 8]),
+       block=st.sampled_from([8, 16, 32, 64]),
+       m=st.integers(1, 6),
+       n=st.integers(1, 24),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip_all_blocks(bits, block, m, n, seed):
+    """Round trip holds for every bit width at every packing block and
+    K-shapes that are NOT multiples of the default PACK_BLOCK (e.g.
+    K=24 at block=8), and the packed size matches the exact wire-byte
+    formula regardless of block."""
+    k = m * block
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 1 << bits, (k, n)).astype(np.uint8))
+    planes = pack_bits(q, bits, block=block)
+    back = unpack_bits(planes, bits, block=block)
+    assert np.array_equal(np.asarray(back), np.asarray(q))
+    assert sum(p.size for p in planes) == packed_nbytes(bits, k, n)
+
+
+@given(group=st.sampled_from([16, 32, 64]),
+       cols=st.integers(1, 24),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_quantize_dequantize_error_monotone_in_bits(group, cols, seed):
+    """At a fixed group size, more bits never hurt: the groupwise-RTN
+    reconstruction error is (strongly) decreasing along the supported
+    ladder 1 -> 2 -> 3 -> 4 -> 8.  The per-group error bound halves per
+    extra bit; 0.95 leaves room for rounding luck without ever letting a
+    real monotonicity break through."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((128, cols)).astype(np.float32))
+    errs = []
+    for bits in (1, 2, 3, 4, 8):
+        qt = quantize(w, bits, group)
+        errs.append(float(jnp.linalg.norm(w - dequantize(qt))))
+    for lo, hi in zip(errs[1:], errs[:-1]):
+        assert lo <= 0.95 * hi + 1e-7, errs
 
 
 @given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2 ** 16))
