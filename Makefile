@@ -10,13 +10,23 @@
 #   make bench-frontier  bandwidth-budget frontier sweep (controller)
 #   make compress-smoke  calibrate -> allocate -> artifact -> serve 8
 #                        tokens from it (the offline-pipeline CI gate)
+#   make bench-kernels   kernel microbench + fused-vs-unfused HBM bytes
+#                        (appends to the BENCH_serving.json trajectory)
+#   make bench-check     perf-regression gate: newest BENCH_serving.json
+#                        run vs its committed baseline (>10% fails;
+#                        accept intended changes with
+#                        `python tools/bench_check.py --update-baseline`)
+#   make tier1-kernels   fused-kernel parity tier under the Pallas
+#                        interpreter (REPRO_KERNEL_IMPL=pallas_interpret
+#                        forces the serving path through the kernel)
 #   make docs-check      every doc cross-reference resolves
 #   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 tier1-dist test bench-smoke bench-ep bench-frontier \
-	compress-smoke docs-check serve-example
+.PHONY: tier1 tier1-dist tier1-kernels test bench-smoke bench-ep \
+	bench-frontier bench-kernels bench-check compress-smoke docs-check \
+	serve-example
 
 # dist-marked tests are excluded here only to avoid running them twice
 # in CI — tier1-dist runs exactly those, in-process on 8 host devices;
@@ -26,6 +36,14 @@ tier1:
 
 tier1-dist:
 	REPRO_HOST_DEVICES=8 $(PY) -m pytest -x -q -m "dist and not slow"
+
+# fused-kernel parity + backend dispatch with the env policy pinned to the
+# interpreter: the same tests tier1 runs, but the engine/serving paths are
+# forced through the Pallas kernel body rather than the ref oracle
+tier1-kernels:
+	REPRO_KERNEL_IMPL=pallas_interpret $(PY) -m pytest -x -q \
+		tests/test_fused_kernel.py tests/test_expert_backend.py \
+		tests/test_autotune.py tests/test_kernels_quant_matmul.py
 
 test:
 	$(PY) -m pytest -q
@@ -39,6 +57,15 @@ bench-ep:
 
 bench-frontier:
 	$(PY) benchmarks/bench_serving.py --quick --frontier
+
+bench-kernels:
+	$(PY) -m benchmarks.bench_kernels --quick
+
+# wall-clock tok/s is noisy on shared CI hosts: gate it loosely there via
+# TOL_TOK_S; the deterministic bytes/token metrics keep the tight 10%
+TOL_TOK_S ?= 0.10
+bench-check:
+	python tools/bench_check.py --tol-tok-s $(TOL_TOK_S)
 
 compress-smoke:
 	$(PY) -m repro.launch.compress --arch mixtral-8x7b \

@@ -3,16 +3,34 @@ the packed-byte traffic, reported as `derived`).
 
 For each bit width: quant_matmul wire bytes vs fp16, and the fused
 low-rank epilogue's marginal cost at the paper's rank budgets.
+
+``run_fused`` benchmarks the tentpole fused decode kernel against the
+unfused op-sequence at decode shapes: HBM bytes from ``cost_analysis``
+of the compiled unfused XLA graph vs the tile-aware analytic bound of
+the single fused ``pallas_call`` (``launch/roofline.py::
+fused_hbm_bytes``), plus wall-clock timing — the fused side is only
+timed where the Mosaic kernel actually compiles (TPU); on CPU the row
+carries the byte reduction, which is device-independent.  Rows append
+to the BENCH_serving.json trajectory (mode ``kernels``) so
+``tools/bench_check.py`` gates the reduction like any serving metric.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_kernels [--quick]
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import QuantConfig
 from repro.core import quantize
+from repro.core.pipeline import compress_expert_stack
 from repro.core.quantize import packed_nbytes
 from repro.kernels import ops
+from repro.kernels.autotune import choose_tiles
+from repro.launch.roofline import fused_hbm_bytes
 
 from .common import timed
 
@@ -48,6 +66,96 @@ def run(quick: bool = True):
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+# ---------------------------------------------------------------------------
+# fused decode kernel vs the unfused op-sequence (tentpole comparison)
+# ---------------------------------------------------------------------------
+
+def _cost_bytes(jitted, *args) -> float:
+    ca = jitted.lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float((ca or {}).get("bytes accessed", 0.0))
+
+
+def run_fused(quick: bool = True):
+    """Decode-shape comparison of the single fused ``pallas_call`` against
+    the unfused XLA op-sequence (dequant matmul -> compensator GEMM ->
+    add -> gate multiply), per bit width.
+
+    HBM bytes: ``cost_analysis`` of the compiled unfused graph (which
+    round-trips the dequantized weights and every intermediate) vs the
+    tile-aware analytic bound of the fused kernel.  Timing: the unfused
+    sequence times everywhere; the fused Mosaic kernel only on TPU (the
+    interpreter's wall-clock is not the kernel's).
+    """
+    rows = []
+    rng = np.random.default_rng(0)
+    e, c = (4, 8) if quick else (8, 8)                # decode block: C ~ 8
+    k, n = (512, 1024) if quick else (4096, 14336)
+    on_tpu = jax.default_backend() == "tpu"
+    for bits in (2, 4):
+        qcfg = QuantConfig(enabled=True, bits=bits, group_size=64,
+                           rank_budget=16, top_n_restore=1, hqq_iters=2)
+        w = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32) * 0.05
+        stack, _ = compress_expert_stack(w, qcfg)
+        xe = jnp.asarray(rng.standard_normal((e, c, k)), jnp.float32)
+        me = jnp.ones((e, c), jnp.float32)
+        ge = jnp.asarray(rng.random((e, c)), jnp.float32)
+
+        def unfused(xe, ge):
+            # today's op-sequence: dequant+comp matmul stack, then the
+            # gate-weighted combine as a separate elementwise pass
+            ye = ops.compensated_matmul_stack(xe, stack, me, impl="ref",
+                                              out_dtype=jnp.float32)
+            return ye * ge[..., None]
+
+        def fused(xe, ge):
+            return ops.fused_expert_matmul(
+                xe, stack, me, gates=ge,
+                impl="pallas" if on_tpu else "ref",
+                out_dtype=jnp.float32)
+
+        juf = jax.jit(unfused)
+        unfused_b = _cost_bytes(juf, xe, ge)
+        bm, bn, bk = choose_tiles("fused", bits=stack.bits,
+                                  group_size=stack.group_size,
+                                  rank=stack.pad_rank, m=c, k=k, n=n)
+        fused_b = fused_hbm_bytes(e, c, k, n, stack.bits, stack.group_size,
+                                  stack.pad_rank, bm, bn, bk)
+        row = {"name": f"kernel/fused_decode_b{bits}",
+               "unfused_hbm_mb": unfused_b / 2 ** 20,
+               "fused_hbm_mb": fused_b / 2 ** 20,
+               "hbm_reduction_x": unfused_b / max(fused_b, 1.0),
+               "tiles": f"{bm}x{bn}x{bk}",
+               "us_unfused": timed(lambda: juf(xe, ge))}
+        if on_tpu:
+            jf = jax.jit(fused)
+            row["us_fused"] = timed(lambda: jf(xe, ge))
+            row["speedup_x"] = row["us_unfused"] / max(row["us_fused"], 1e-9)
+        rows.append(row)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-snapshot", action="store_true",
+                    help="skip appending the fused rows to the "
+                         "BENCH_serving.json trajectory")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    fused_rows = run_fused(quick=args.quick)
+    for r in fused_rows:
+        extra = ",".join(f"{k}={v:.3f}" if isinstance(v, float)
+                         else f"{k}={v}" for k, v in r.items()
+                         if k != "name")
+        print(f"{r['name']},{extra}", flush=True)
+    if not args.no_snapshot:
+        from .bench_serving import write_snapshot
+        write_snapshot("kernels", fused_rows, args.quick,
+                       meta={"backend": jax.default_backend()})
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,10 @@
 Default mode drives the ``ServeEngine.serve`` scheduler with Poisson
 request arrivals at increasing offered loads and reports, per rate:
 
-- decode throughput (accepted tokens/s over the whole run),
+- decode throughput (accepted tokens/s over the whole run) AND goodput
+  (tokens per busy second + the busy fraction): under open-loop
+  arrivals the wall-clock number folds idle inter-arrival time into the
+  denominator, so only goodput compares engine capacity across rates,
 - request latency p50 / p95 (wall-clock, arrival -> completion),
 - live offload wire bytes/token from the metered per-layer expert stores
   (demand + compensator + prefetch after the ride-the-cache accounting
@@ -47,10 +50,13 @@ from repro.serve import ServeEngine, synthetic_workload
 
 
 def _engine(offload: bool = True, keep_weights: bool = False,
-            ep: int = 1, cache_capacity: int = 3):
+            ep: int = 1, cache_capacity: int = 3,
+            impl: Optional[str] = None):
     """Tiny compressed-MoE serve engine (optionally with the original
     expert weights retained for restoration-error reporting; ``ep`` > 1
-    serves expert-parallel on a ``make_serve_mesh`` mesh)."""
+    serves expert-parallel on a ``make_serve_mesh`` mesh; ``impl``
+    pins the kernel dispatch policy, e.g. 'pallas' to benchmark the
+    fused decode kernel)."""
     from repro.launch.mesh import make_serve_mesh
     cfg = ModelConfig(
         name="serve-bench-moe", family="moe", num_layers=2, d_model=64,
@@ -62,12 +68,13 @@ def _engine(offload: bool = True, keep_weights: bool = False,
     params = init_params(jax.random.key(0), cfg, jnp.float32)
     mesh = make_serve_mesh(ep)
     if not offload:
-        return ServeEngine(cfg, params, mesh=mesh)
+        return ServeEngine(cfg, params, mesh=mesh, kernel_impl=impl)
     weights_by_layer = [
         {k: np.asarray(seg[0]["moe"][k]) for k in ("w1", "w2", "w3")}
         for seg in unstack_params(params, cfg)["segments"]]
     qparams, cfg_q, stacks_by_layer = compress_moe_params(params, cfg)
-    eng = ServeEngine(cfg_q, qparams, quantized=True, mesh=mesh)
+    eng = ServeEngine(cfg_q, qparams, quantized=True, mesh=mesh,
+                      kernel_impl=impl)
     eng.attach_offload(stacks_by_layer, policy="ours",
                        cache_capacity=cache_capacity)
     if keep_weights:
@@ -76,12 +83,12 @@ def _engine(offload: bool = True, keep_weights: bool = False,
 
 
 def run(quick: bool = True, rates: Optional[Tuple[float, ...]] = None,
-        offload: bool = True) -> List[Dict]:
+        offload: bool = True, impl: Optional[str] = None) -> List[Dict]:
     n = 8 if quick else 32
     max_new = 12 if quick else 32
     rates = rates if rates is not None else ((0.0, 4.0) if quick
                                              else (0.0, 2.0, 8.0, 32.0))
-    eng = _engine(offload=offload)
+    eng = _engine(offload=offload, impl=impl)
     slots = 2 if quick else 4
     # warm the compiled prefill/decode loop (same slot count as the sweep)
     # so the sweep measures steady state, not the first-bucket compile
@@ -99,6 +106,12 @@ def run(quick: bool = True, rates: Optional[Tuple[float, ...]] = None,
             "name": f"serving/rate-{rate:g}",
             "offered_rps": rate,
             "tok_s": stats.tokens_per_s,
+            # goodput = tokens per BUSY second: under open-loop arrivals
+            # the wall-clock tok_s folds idle inter-arrival time into the
+            # denominator (rate-4 looks 50x slower than rate-0 on the same
+            # engine); goodput is the load-invariant capacity number
+            "goodput_tok_s": stats.goodput_tokens_per_s,
+            "busy_frac": stats.busy_frac,
             "p50_ms": lat[50.0] * 1e3,
             "p95_ms": lat[95.0] * 1e3,
             "requests": float(len(stats.results)),
@@ -316,16 +329,10 @@ def run_frontier(quick: bool = True,
 
 
 SNAPSHOT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+MAX_RUNS = 20          # trajectory depth kept per mode
 
 
-def write_snapshot(mode: str, rows: List[Dict], quick: bool,
-                   path: Path = SNAPSHOT):
-    """Persist the sweep as ``BENCH_serving.json`` at the repo root.
-
-    One snapshot per run, keyed by mode, merged over the existing file —
-    the committed perf trajectory that makes serving regressions visible
-    across PRs (``make bench-smoke`` refreshes the ``offered-load``
-    key on every CI run)."""
+def _load_snapshot(path: Path) -> Dict:
     snap = {}
     if path.exists():
         try:
@@ -334,14 +341,41 @@ def write_snapshot(mode: str, rows: List[Dict], quick: bool,
             snap = {}
         if not isinstance(snap, dict):
             snap = {}
-    snap[mode] = {
+    # migrate the pre-trajectory layout ({mode: {rows, time, quick}}):
+    # the old single snapshot becomes the mode's baseline
+    for mode, entry in list(snap.items()):
+        if isinstance(entry, dict) and "rows" in entry:
+            snap[mode] = {"baseline": entry, "runs": []}
+    return snap
+
+
+def write_snapshot(mode: str, rows: List[Dict], quick: bool,
+                   path: Path = SNAPSHOT, meta: Optional[Dict] = None):
+    """Append the sweep to the ``BENCH_serving.json`` trajectory.
+
+    Layout per mode: ``{"baseline": run, "runs": [run, ...]}``.  Every
+    invocation APPENDS to ``runs`` (capped at the newest ``MAX_RUNS``);
+    the ``baseline`` is only ever moved by
+    ``tools/bench_check.py --update-baseline``.  The first run of a mode
+    seeds its baseline.  ``tools/bench_check.py`` gates CI on the newest
+    run regressing >10% against the baseline."""
+    snap = _load_snapshot(path)
+    entry = {
         "time": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "quick": quick,
         "rows": [{k: (round(v, 6) if isinstance(v, float) else v)
                   for k, v in r.items()} for r in rows],
     }
+    if meta:
+        entry.update(meta)
+    traj = snap.setdefault(mode, {"baseline": None, "runs": []})
+    traj.setdefault("runs", []).append(entry)
+    traj["runs"] = traj["runs"][-MAX_RUNS:]
+    if not traj.get("baseline"):
+        traj["baseline"] = entry
     path.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
-    print(f"snapshot -> {path}", flush=True)
+    print(f"snapshot -> {path} ({mode}: {len(traj['runs'])} runs)",
+          flush=True)
 
 
 def main():
@@ -357,6 +391,11 @@ def main():
                          "device_count=N)")
     ap.add_argument("--no-snapshot", action="store_true",
                     help="skip writing the BENCH_serving.json snapshot")
+    ap.add_argument("--impl", default=None,
+                    choices=("auto", "pallas", "pallas_interpret", "ref"),
+                    help="kernel dispatch policy for the engine (default: "
+                         "auto — pallas on TPU, the benchmarked serving "
+                         "path; ref elsewhere)")
     args = ap.parse_args()
     if args.mesh:
         from repro.launch.mesh import parse_mesh_spec
@@ -368,13 +407,16 @@ def main():
         rows = run_frontier(quick=args.quick)
     else:
         mode = "offered-load"
-        rows = run(quick=args.quick, offload=not args.no_offload)
+        rows = run(quick=args.quick, offload=not args.no_offload,
+                   impl=args.impl)
     for r in rows:
         extra = ",".join(f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
                          for k, v in r.items() if k != "name")
         print(f"{r['name']},{extra}", flush=True)
     if not args.no_snapshot:
-        write_snapshot(mode, rows, args.quick)
+        from repro.kernels.ops import resolve_impl
+        write_snapshot(mode, rows, args.quick,
+                       meta={"impl": resolve_impl(args.impl)})
 
 
 if __name__ == "__main__":

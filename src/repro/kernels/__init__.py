@@ -2,11 +2,14 @@
 
 - quant_matmul:          x @ dequant(bit-plane packed Wq)
 - lowrank_comp_matmul:   fused dequant matmul + router-guided rank-r epilogue
+- fused_expert_matmul:   whole decode-time expert FFN projection — per-expert
+  dequant at true bit width + rank-capped compensation + gate-weighted
+  combine — in one pallas_call over the expert stack
 
 Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd dispatch
 wrapper in ``ops.py`` (auto-selects pallas on TPU, ref on CPU; tests run
 ``pallas_interpret``).
 """
-from . import ops, ref
-from .ops import (compensated_matmul_stack, default_impl, lowrank_comp_matmul,
-                  quant_matmul)
+from . import autotune, ops, ref
+from .ops import (compensated_matmul_stack, default_impl, fused_expert_matmul,
+                  lowrank_comp_matmul, quant_matmul)

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 from ..core.quantize import QuantizedTensor
 from . import ref as ref_ops
-from .quant_matmul import lowrank_comp_matmul_pallas, quant_matmul_pallas
+from .quant_matmul import (fused_expert_matmul_pallas,
+                           lowrank_comp_matmul_pallas, quant_matmul_pallas)
 
 _ENV = "REPRO_KERNEL_IMPL"
 
@@ -57,6 +58,10 @@ _pick = resolve_impl
 
 
 def _pad_m(x: jax.Array, bm: int):
+    """Right-pad the token dim to a multiple of ``bm``.  Callers pair
+    this with the small-m tile sizes from ``_tile_sizes`` /
+    ``autotune.choose_tiles`` so a single decode token pads to the 8-row
+    sublane minimum, not a full 128-row tile per expert."""
     m = x.shape[0]
     pm = (-m) % bm
     if pm:
@@ -65,8 +70,14 @@ def _pad_m(x: jax.Array, bm: int):
 
 
 def _tile_sizes(m: int, k: int, n: int, bm: int, bn: int, bk: int):
-    """Clamp tiles to the problem and keep pack/group divisibility."""
-    bm = min(bm, max(8, m))
+    """Clamp tiles to the problem and keep pack/group divisibility.
+
+    ``bm`` clamps to the token count rounded up to the f32 sublane
+    minimum (8): decode-sized blocks (m <= 8) run the bm=8 preset
+    instead of padding m into a 128-row tile, and ragged m stays
+    sublane-aligned so the compiled kernel's tiles are MXU-admissible.
+    """
+    bm = max(8, min(bm, -(-m // 8) * 8))
     bk = min(bk, k)
     bn = min(bn, n)
     while k % bk:
@@ -159,3 +170,66 @@ def compensated_matmul_stack(x: jax.Array, stack, mask: jax.Array, *,
     return jax.vmap(one)(x, stack.planes, stack.scale, stack.zero,
                          stack.u, stack.v, stack.u_scale, stack.v_scale,
                          mask)
+
+
+def fused_expert_matmul(xe: jax.Array, stack, me: jax.Array, *,
+                        gates: Optional[jax.Array] = None,
+                        rank_cap: Optional[jax.Array] = None,
+                        impl: Optional[str] = None, out_dtype=None,
+                        bm: Optional[int] = None, bn: Optional[int] = None,
+                        bk: Optional[int] = None) -> jax.Array:
+    """Fused decode-path projection over one expert stack (the tentpole
+    kernel entry point; see ``quant_matmul.fused_expert_matmul_pallas``).
+
+    xe: (E, C, K) dispatched tokens, stack: CompressedExpertStack,
+    me: (E, C) top-n compensation mask, gates: optional (E, C) router
+    gates folded into the output in-kernel (the gate-weighted combine),
+    rank_cap: traced per-layer plan scalar (None = full padded rank).
+
+    One ``pallas_call`` covers every expert of the (layer, projection):
+    bitplane unpack + HQQ dequant at each expert's TRUE width
+    (``stack.expert_bits``), the rank-capped compensator GEMM, and the
+    gate weighting — accumulated in f32 VMEM scratch, no HBM
+    round-trips.  Block sizes come from ``kernels.autotune`` unless
+    pinned by the caller; the traced ``rank_cap``/``gates`` enter as
+    data, so controller plan changes never recompile.
+    """
+    out_dtype = out_dtype or xe.dtype
+    impl = _pick(impl)
+    if impl == "ref":
+        return ref_ops.fused_expert_matmul_ref(
+            xe, stack.planes, stack.scale, stack.zero, stack.bits,
+            stack.group_size, stack.u, stack.v, stack.u_scale,
+            stack.v_scale, me, ge=gates, rank_cap=rank_cap,
+            out_dtype=out_dtype)
+    e, c, k = xe.shape
+    n = stack.scale.shape[-1]
+    r = stack.pad_rank
+    if bm is None or bn is None or bk is None:
+        from .autotune import choose_tiles
+        abm, abn, abk = choose_tiles("fused", bits=stack.bits,
+                                     group_size=stack.group_size, rank=r,
+                                     m=c, k=k, n=n)
+        bm, bn, bk = bm or abm, bn or abn, bk or abk
+    pc = (-c) % bm
+    xep = jnp.pad(xe, ((0, 0), (0, pc), (0, 0))) if pc else xe
+    mep = jnp.pad(me, ((0, 0), (0, pc))) if pc else me
+    gep = (jnp.pad(gates, ((0, 0), (0, pc)))
+           if gates is not None and pc else gates)
+    cap = jnp.full((1, 1), r, jnp.int32) if rank_cap is None else \
+        jnp.asarray(rank_cap, jnp.int32).reshape(1, 1)
+    # TRUE per-expert widths; inside shard_map regions the runtime leaves
+    # carry a local expert slice while ``expert_bits`` (static metadata)
+    # stays global — fall back to the container width there (bit-exact:
+    # sub-width codes leave the upper planes zero)
+    ebs = stack.expert_bits
+    if ebs is not None and len(ebs) != e:
+        ebs = None
+    eb = jnp.asarray(ebs if ebs is not None else (stack.bits,) * e,
+                     jnp.int32).reshape(e, 1)
+    ye = fused_expert_matmul_pallas(
+        xep, stack.planes, stack.scale, stack.zero, stack.u, stack.u_scale,
+        stack.v, stack.v_scale, mep, gep, cap, eb,
+        bits=stack.bits, group_size=stack.group_size, bm=bm, bn=bn, bk=bk,
+        out_dtype=out_dtype, interpret=(impl == "pallas_interpret"))
+    return ye[:, :c] if pc else ye

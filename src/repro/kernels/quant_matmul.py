@@ -154,3 +154,160 @@ def lowrank_comp_matmul_pallas(x: jax.Array, planes: Tuple[jax.Array, ...],
     return _pallas_qmm(x, planes, scale, zero, xu, v, bits=bits,
                        group_size=group_size, bm=bm, bn=bn, bk=bk,
                        out_dtype=out_dtype, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# fused expert-stack decode kernel
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(bits, group_size, n_k, bm, bn, bk, pad_rank, has_gates,
+                  x_ref, *refs):
+    """One grid step of the fused decode kernel (see fused_expert_matmul).
+
+    Grid (e, i, j, kk): expert e, token tile i, output tile j, K step kk
+    (innermost, sequential).  refs layout:
+      [planes..., scale, zero, u, u_scale, v, v_scale, me, (ge,)
+       rank_cap, expert_bits] + [out] + [acc, xu_acc scratch]
+    Everything accumulates in f32 VMEM scratch; only the finished
+    (bm, bn) gate-weighted tile is ever written back to HBM.
+    """
+    n_planes = len(PLANES[bits])
+    planes = refs[:n_planes]
+    pos = n_planes
+    scale_ref, zero_ref = refs[pos], refs[pos + 1]
+    u_ref, us_ref, v_ref, vs_ref = refs[pos + 2:pos + 6]
+    me_ref = refs[pos + 6]
+    pos += 7
+    if has_gates:
+        ge_ref = refs[pos]
+        pos += 1
+    cap_ref, eb_ref = refs[pos], refs[pos + 1]
+    out_ref, acc_ref, xu_ref = refs[pos + 2], refs[pos + 3], refs[pos + 4]
+
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xu_ref[...] = jnp.zeros_like(xu_ref)
+
+    # -- dequant at this expert's TRUE width: planes whose bit offset lies
+    # at or above expert_bits[e] carry no information (hetero stacks store
+    # sub-width codes in a shared container) and are masked out of the
+    # unpack, so the true width is first-class in the kernel rather than
+    # silently widened to the container.
+    eb = eb_ref[0, 0]
+    codes = None
+    for (p, off), pk in zip(PLANES[bits], [r[...] for r in planes]):
+        c = 8 // p
+        mask = jnp.uint8((1 << p) - 1)
+        blocks = pk.reshape(1, bk // PACK_BLOCK, PACK_BLOCK // c, bn)
+        chunks = [(blocks >> (j * p)) & mask for j in range(c)]
+        sub = jnp.stack(chunks, axis=2).reshape(bk, bn)
+        sub = jnp.where(eb > off, (sub << off).astype(jnp.uint8),
+                        jnp.uint8(0))
+        codes = sub if codes is None else codes | sub
+    w = _dequant_tile(codes, scale_ref[0], zero_ref[0], group_size, bk, bn)
+
+    x = x_ref[0].astype(jnp.float32)                       # (bm, bk)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    # -- rank-space compensator activation: (x * me) @ (U * u_scale),
+    # accumulated over K alongside the main matmul (j-invariant; cheap
+    # rank-R duplicate work per j tile beats an HBM round-trip for xu)
+    xm = x * me_ref[0][:, None].astype(jnp.float32)
+    ud = u_ref[0].astype(jnp.float32) * us_ref[0, 0]       # (bk, R)
+    xu_ref[...] += jnp.dot(xm, ud, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _done():
+        acc = acc_ref[...]
+        # traced rank cap: 0/1 mask over the padded rank dim (a plan-row
+        # change is data, never a recompile)
+        rmask = (jax.lax.broadcasted_iota(jnp.int32, (1, pad_rank), 1)
+                 < cap_ref[0, 0]).astype(jnp.float32)
+        xu = xu_ref[...] * rmask * vs_ref[0, :, 0][None, :]
+        vd = v_ref[0].astype(jnp.float32)                  # (R, bn)
+        acc = acc + jnp.dot(xu, vd, preferred_element_type=jnp.float32)
+        if has_gates:
+            # top-n combine epilogue: fold the router gate in-kernel so
+            # the (E, C, N) buffer leaves as ready-to-scatter partials
+            acc = acc * ge_ref[0][:, None].astype(jnp.float32)
+        out_ref[0] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "bm", "bn", "bk", "out_dtype", "interpret"))
+def fused_expert_matmul_pallas(xe: jax.Array, planes: Tuple[jax.Array, ...],
+                               scale: jax.Array, zero: jax.Array,
+                               u: jax.Array, u_scale: jax.Array,
+                               v: jax.Array, v_scale: jax.Array,
+                               me: jax.Array, ge: Optional[jax.Array],
+                               rank_cap: jax.Array, expert_bits: jax.Array,
+                               *, bits: int, group_size: int,
+                               bm: int = 8, bn: int = 256, bk: int = 512,
+                               out_dtype=jnp.float32, interpret: bool = False
+                               ) -> jax.Array:
+    """Fused decode-path expert FFN projection over a routed token block.
+
+    One kernel invocation covers every expert of one (layer, projection):
+
+        ye[e] = (xe[e] @ dequant_e(planes_e)            # true-width HQQ
+                 + ((xe[e] * me[e]) @ U_e) @ V_e)       # rank-capped comp
+                * ge[e]                                 # gate-weighted
+
+    xe: (E, C, K) dispatched tokens;  planes[i]: (E, K//c_i, N)
+    scale/zero: (E, K//G, N);  u: (E, K, R);  v: (E, R, N)
+    u_scale: (E, 1, R);  v_scale: (E, R, 1)
+    me: (E, C) top-n compensation mask;  ge: (E, C) router gates (None =
+    unweighted);  rank_cap: (1, 1) i32 traced plan value;
+    expert_bits: (E, 1) i32 TRUE per-expert widths.
+
+    The f32 accumulator and the (bm, R) rank-space activation live in
+    VMEM scratch for the whole K walk — no intermediate (dequantized
+    weight, compensator product, or pre-gate output) ever round-trips
+    to HBM.
+    """
+    e, m, k = xe.shape
+    n = scale.shape[-1]
+    r = u.shape[-1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (e, m, n, k, bm, bn, bk)
+    assert bk % PACK_BLOCK == 0 and bk % group_size == 0
+    n_k = k // bk
+    has_gates = ge is not None
+
+    in_specs = [pl.BlockSpec((1, bm, bk), lambda e, i, j, kk: (e, i, kk))]
+    in_specs += [pl.BlockSpec((1, bk // (8 // p), bn),
+                              lambda e, i, j, kk: (e, kk, j))
+                 for p, _ in PLANES[bits]]
+    in_specs += [pl.BlockSpec((1, bk // group_size, bn),
+                              lambda e, i, j, kk: (e, kk, j))] * 2
+    in_specs += [pl.BlockSpec((1, bk, r), lambda e, i, j, kk: (e, kk, 0)),
+                 pl.BlockSpec((1, 1, r), lambda e, i, j, kk: (e, 0, 0)),
+                 pl.BlockSpec((1, r, bn), lambda e, i, j, kk: (e, 0, j)),
+                 pl.BlockSpec((1, r, 1), lambda e, i, j, kk: (e, 0, 0)),
+                 pl.BlockSpec((1, bm), lambda e, i, j, kk: (e, i))]
+    args = [xe, *planes, scale, zero, u, u_scale, v, v_scale, me]
+    if has_gates:
+        in_specs += [pl.BlockSpec((1, bm), lambda e, i, j, kk: (e, i))]
+        args += [ge]
+    in_specs += [pl.BlockSpec((1, 1), lambda e, i, j, kk: (0, 0)),
+                 pl.BlockSpec((1, 1), lambda e, i, j, kk: (e, 0))]
+    args += [rank_cap, expert_bits]
+
+    kernel = functools.partial(_fused_kernel, bits, group_size, n_k,
+                               bm, bn, bk, r, has_gates)
+    return pl.pallas_call(
+        kernel,
+        grid=(e, m // bm, n // bn, n_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, kk: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        compiler_params=PallasCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+        name=f"fused_expert_b{bits}" + ("_gated" if has_gates else ""),
+    )(*args)

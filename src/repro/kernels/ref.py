@@ -63,3 +63,37 @@ def lowrank_comp_matmul_ref(x: jax.Array, planes: Tuple[jax.Array, ...],
     vd = v.astype(jnp.float32) * v_scale
     y = y + jnp.dot(xu, vd, preferred_element_type=jnp.float32)
     return y.astype(out_dtype)
+
+
+def fused_expert_matmul_ref(xe: jax.Array, planes: Tuple[jax.Array, ...],
+                            scale: jax.Array, zero: jax.Array, bits: int,
+                            group_size: int,
+                            u: jax.Array, v: jax.Array,
+                            u_scale: jax.Array, v_scale: jax.Array,
+                            me: jax.Array,
+                            ge: Optional[jax.Array] = None,
+                            rank_cap: Optional[jax.Array] = None,
+                            out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the fused decode kernel: per-expert compensated matmul
+    with the gate-weighted combine epilogue folded in.
+
+    xe: (E, C, K) dispatched tokens;  planes[i]: (E, K//c_i, N);
+    scale/zero: (E, K//G, N);  u: (E, K, R);  v: (E, R, N);
+    me: (E, C) top-n compensation mask;  ge: (E, C) router gates (None =
+    unweighted);  rank_cap: traced scalar ceiling (None = full pad rank).
+
+    Per-expert TRUE bit widths need no special handling here: hetero
+    stacks store sub-width codes in a shared container whose upper bit
+    planes are zero, so unpacking at the container width is bit-exact
+    (the kernel masks those planes explicitly; this oracle relies on the
+    container invariant).
+    """
+    def one(xe_e, planes_e, scale_e, zero_e, u_e, v_e, us_e, vs_e, me_e):
+        return lowrank_comp_matmul_ref(
+            xe_e, planes_e, scale_e, zero_e, bits, group_size,
+            u_e, v_e, us_e, vs_e, me_e, jnp.float32, rank_cap=rank_cap)
+
+    ye = jax.vmap(one)(xe, planes, scale, zero, u, v, u_scale, v_scale, me)
+    if ge is not None:
+        ye = ye * ge[..., None].astype(ye.dtype)
+    return ye.astype(out_dtype)

@@ -149,6 +149,106 @@ def derive_terms(arch: str, shape_name: str, mesh_name: str, *,
                          mem_per_device)
 
 
+# ---------------------------------------------------------------------------
+# kernel tile tables (seed candidates for kernels/autotune.py)
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 2 ** 20    # per-core VMEM (v5e-class); tiles must fit
+VMEM_BUDGET = 0.7            # leave headroom for double buffering
+
+# MXU/VPU-aligned tile menus: sublane multiples for the token dim (decode
+# blocks are tiny), lane multiples for N, PACK_BLOCK multiples for K
+BM_CANDIDATES = (8, 16, 32, 64, 128)
+BN_CANDIDATES = (128, 256, 512)
+BK_CANDIDATES = (128, 256, 512, 1024)
+
+
+def fused_tile_vmem_bytes(bm: int, bn: int, bk: int, bits: int,
+                          group_size: int, rank: int) -> int:
+    """Resident VMEM footprint of one fused-kernel grid step: x tile,
+    packed planes, scale/zero, compensator factors, f32 accumulator and
+    rank-space scratch (see ``kernels/quant_matmul.py::_fused_kernel``)."""
+    plane_b = sum(bk // (8 // p) * bn for p in _plane_widths(bits))
+    scales_b = 2 * (bk // group_size) * bn * 4
+    factors_b = bk * rank + rank * bn + rank * 4 + rank * 4
+    return (bm * bk * 4 + plane_b + scales_b + factors_b
+            + bm * bn * 4 + bm * rank * 4 + bm * bn * 4)
+
+
+def _plane_widths(bits: int):
+    from ..core.quantize import PLANES
+    return tuple(p for p, _ in PLANES[bits])
+
+
+def fused_tile_candidates(m: int, k: int, n: int, bits: int,
+                          group_size: int, rank: int):
+    """Roofline-derived (bm, bn, bk) candidates for the fused decode
+    kernel, best-first.
+
+    Ranking: prefer the largest K tile (amortizes the sequential-grid
+    revisits of x), then the largest N tile that keeps the step under
+    the VMEM budget; bm clamps to the token block (decode C is tiny, so
+    the small-m preset bm=8 dominates serving shapes).  This static
+    table seeds the autotuner; on-device timing can reorder it."""
+    out = []
+    for bm in BM_CANDIDATES:
+        if bm > max(8, m):
+            continue
+        for bn in BN_CANDIDATES:
+            if bn > n:
+                continue
+            for bk in BK_CANDIDATES:
+                if bk > k or bk % group_size or bk % 64:
+                    continue
+                if (fused_tile_vmem_bytes(bm, bn, bk, bits, group_size, rank)
+                        > VMEM_BYTES * VMEM_BUDGET):
+                    continue
+                out.append((bm, bn, bk))
+    # best-first: big K, then big N, then the smallest viable bm
+    out.sort(key=lambda t: (-t[2], -t[1], t[0]))
+    return out
+
+
+def fused_hbm_bytes(e: int, m: int, k: int, n: int, bits: int,
+                    group_size: int, rank: int, bm: int, bn: int,
+                    bk: int) -> int:
+    """Analytic HBM traffic of one fused-kernel invocation (per expert
+    stack), tile-multiplicity aware.
+
+    The grid is (E, m/bm, n/bn, k/bk) with K innermost-sequential;
+    every operand block is fetched once per grid step that maps to it
+    (conservative: Mosaic elides refetches of blocks whose index map is
+    constant across consecutive steps, so this is an upper bound):
+
+    - x:        (bm, bk) per (i, j, kk)   -> m*k*4      x  n/bn
+    - planes:   packed bits per (j, kk)   -> packed(k,n) x  m/bm
+    - scale/zero: f32 per (j, kk)         -> 2*(k/g)*n*4 x m/bm
+    - U (int8): (bk, r) per (i, j, kk)    -> k*r        x (m/bm)(n/bn)
+    - V (int8): (r, bn) per (i, j)        -> r*n        x  m/bm
+    - me/gates: (bm,) per (i, j)          -> m*4        x  n/bn (x2)
+    - out:      written once              -> m*n*4
+
+    The unfused op-sequence additionally round-trips the dequantized
+    weights (k*n*4), the rank-space activation, and the ungated output
+    through HBM — ``benchmarks/bench_kernels.py`` measures that side
+    from ``cost_analysis`` of the compiled XLA sequence and reports the
+    reduction against this bound.
+    """
+    from ..core.quantize import packed_nbytes
+    mi, nj = -(-m // bm), -(-n // bn)
+    planes_b = packed_nbytes(bits, k, n)
+    scales_b = 2 * (k // group_size) * n * 4
+    x_b = m * k * 4 * nj
+    u_b = k * rank * mi * nj
+    v_b = rank * n * mi
+    f_scales_b = rank * 4 * 2 * mi * nj
+    masks_b = 2 * m * 4 * nj
+    out_b = m * n * 4
+    per_expert = (x_b + planes_b * mi + scales_b * mi + u_b + v_b
+                  + f_scales_b + masks_b + out_b)
+    return e * per_expert
+
+
 def model_flops(cfg, shape, active_params: int) -> float:
     """MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference)."""
     if shape.kind == "train":

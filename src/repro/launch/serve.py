@@ -49,6 +49,33 @@ from ..serve import ServeEngine, synthetic_workload
 from .mesh import make_serve_mesh, parse_mesh_spec
 
 
+def _maybe_autotune(stacks_by_layer):
+    """``REPRO_AUTOTUNE=1`` boot-time tile sweep for the fused decode
+    kernel: time the roofline candidates once per unique (bits,
+    group_size, rank, K, N) decode shape on the local device and persist
+    the winners (``kernels/autotune.py``).  Only runs where the compiled
+    Mosaic kernel is the serving path — on CPU the lookup table already
+    decides, and interpreter timings would be meaningless."""
+    from ..kernels.autotune import autotune_enabled, tune_fused
+    from ..kernels.ops import resolve_impl
+    if not autotune_enabled() or resolve_impl(None) != "pallas":
+        return
+    seen = set()
+    for stacks in stacks_by_layer:
+        for name, stack in stacks.items():
+            e, k, n = stack.shape
+            key = (stack.bits, stack.group_size, stack.pad_rank, k, n)
+            if key in seen:
+                continue
+            seen.add(key)
+            xe = jnp.zeros((len(stack.ranks), 8, k), jnp.float32)
+            me = jnp.ones((len(stack.ranks), 8), jnp.float32)
+            tiles = tune_fused(xe, stack, me, None, None,
+                               out_dtype=jnp.float32, interpret=False)
+            print(f"autotune: fused b{stack.bits} k{k} n{n} -> "
+                  f"bm,bn,bk={tiles}")
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="serve synthetic traffic through the continuous-"
@@ -136,6 +163,7 @@ def main():
         else:
             qparams, cfg_q, stacks_by_layer = compress_moe_params(params,
                                                                   cfg)
+        _maybe_autotune(stacks_by_layer)
         eng = ServeEngine(cfg_q, qparams, quantized=True, mesh=mesh)
         eng.attach_offload(stacks_by_layer, policy="ours",
                            cache_capacity=args.cache_experts)

@@ -8,9 +8,13 @@ dense/quantized branch.  Backends:
   ``dense``   reference einsum over full-precision (E, d, f) stacks
   ``ref``     quantized + router-guided compensation via the batched einsum
               oracle (``core.restoration.compensated_expert_ffn``)
-  ``pallas``  fused dequant+low-rank Pallas kernel per projection
-              (``kernels.ops.compensated_matmul_stack``); also runs under
-              the Pallas interpreter on CPU (``pallas_interpret``)
+  ``pallas``  ONE fused Pallas kernel per projection over the whole expert
+              stack (``kernels.ops.fused_expert_matmul``): bitplane unpack
+              + dequant at each expert's true width, the rank-capped
+              compensator GEMM, and — on the down projection — the
+              gate-weighted combine, all inside the kernel
+              (``fuses_gates``); also runs under the Pallas interpreter
+              on CPU (``pallas_interpret``)
 
 Selection follows the kernel dispatch policy in ``kernels.ops``
 (``REPRO_KERNEL_IMPL`` env / ``impl`` argument: auto | pallas |
@@ -55,13 +59,21 @@ class ExpertBackend:
     ``rank_cap`` the traced per-layer compensator rank ceiling from the
     bandwidth controller's plan (None = full padded rank); both are
     ignored by the dense backend.
+
+    ``gates`` is the optional (E, C) slot-scattered router gate buffer.
+    Backends that set ``fuses_gates = True`` weight their output by it
+    in-kernel (the gate-weighted combine), and the MoE combine step then
+    skips its own gate multiply (``combine_tokens(pre_weighted=True)``).
+    Backends that leave it False ignore ``gates`` and the combine
+    applies them as before.
     """
 
     name = "base"
+    fuses_gates = False
 
     def __call__(self, xe: jax.Array, params: Dict, me: jax.Array,
-                 act: str, rank_cap: Optional[jax.Array] = None
-                 ) -> jax.Array:
+                 act: str, rank_cap: Optional[jax.Array] = None,
+                 gates: Optional[jax.Array] = None) -> jax.Array:
         raise NotImplementedError
 
 
@@ -70,7 +82,7 @@ class DenseBackend(ExpertBackend):
 
     name = "dense"
 
-    def __call__(self, xe, params, me, act, rank_cap=None):
+    def __call__(self, xe, params, me, act, rank_cap=None, gates=None):
         return expert_ffn_dense(xe, params["w1"], params["w3"], params["w2"],
                                 act)
 
@@ -80,7 +92,7 @@ class RefQuantBackend(ExpertBackend):
 
     name = "ref"
 
-    def __call__(self, xe, params, me, act, rank_cap=None):
+    def __call__(self, xe, params, me, act, rank_cap=None, gates=None):
         stacks = params["stacks"]
         return compensated_expert_ffn(
             xe, stacks["w1"], stacks.get("w3"), stacks["w2"], me,
@@ -88,38 +100,44 @@ class RefQuantBackend(ExpertBackend):
 
 
 class PallasQuantBackend(ExpertBackend):
-    """Fused dequant + router-guided low-rank epilogue per projection.
+    """One fused Pallas kernel invocation per (layer, projection).
 
     ``impl`` is the *resolved* kernel implementation ('pallas' or
     'pallas_interpret'); each projection runs
-    ``kernels.ops.compensated_matmul_stack`` so no dequantized weight is
-    ever materialized.
+    ``kernels.ops.fused_expert_matmul`` over the whole expert stack —
+    bitplane unpack + HQQ dequant at each expert's true per-expert
+    width, the rank-capped low-rank compensator GEMM, and (on the down
+    projection, when the caller threads ``gates``) the gate-weighted
+    combine — so no dequantized weight and no per-expert Python loop is
+    ever materialized, and the traced (top_n, rank_cap) plan row enters
+    as data.
     """
 
     name = "pallas"
+    fuses_gates = True
 
     def __init__(self, impl: str = "pallas"):
         self.impl = impl
 
-    def __call__(self, xe, params, me, act, rank_cap=None):
+    def __call__(self, xe, params, me, act, rank_cap=None, gates=None):
         stacks: Dict[str, CompressedExpertStack] = params["stacks"]
         f = activation(act)
-        h1 = ops.compensated_matmul_stack(xe, stacks["w1"], me,
-                                          impl=self.impl,
-                                          out_dtype=jnp.float32,
-                                          rank_cap=rank_cap)
+        h1 = ops.fused_expert_matmul(xe, stacks["w1"], me,
+                                     impl=self.impl,
+                                     out_dtype=jnp.float32,
+                                     rank_cap=rank_cap)
         if "w3" in stacks:
-            h3 = ops.compensated_matmul_stack(xe, stacks["w3"], me,
-                                              impl=self.impl,
-                                              out_dtype=jnp.float32,
-                                              rank_cap=rank_cap)
+            h3 = ops.fused_expert_matmul(xe, stacks["w3"], me,
+                                         impl=self.impl,
+                                         out_dtype=jnp.float32,
+                                         rank_cap=rank_cap)
             h = f(h1) * h3
         else:
             h = f(h1)
-        ye = ops.compensated_matmul_stack(h.astype(xe.dtype), stacks["w2"],
-                                          me, impl=self.impl,
-                                          out_dtype=jnp.float32,
-                                          rank_cap=rank_cap)
+        ye = ops.fused_expert_matmul(h.astype(xe.dtype), stacks["w2"],
+                                     me, gates=gates, impl=self.impl,
+                                     out_dtype=jnp.float32,
+                                     rank_cap=rank_cap)
         return ye.astype(xe.dtype)
 
 

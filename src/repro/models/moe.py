@@ -105,12 +105,31 @@ def dispatch_tokens(x2: jax.Array, d: Dispatch, num_experts: int
     return xe, me
 
 
-def combine_tokens(ye: jax.Array, d: Dispatch, num_tokens: int) -> jax.Array:
-    """Gather (E, C, dm) expert outputs back to (T, dm), gate-weighted."""
+def dispatch_gates(d: Dispatch, num_experts: int) -> jax.Array:
+    """Scatter router gates into the (E, C) slot layout.
+
+    Companion buffer for backends with ``fuses_gates``: the kernel
+    multiplies each expert-slot output by its gate (the gate-weighted
+    combine), and ``combine_tokens(pre_weighted=True)`` then just
+    gathers and scatter-adds.  Dropped assignments (slot >= C) are
+    out of bounds for the scatter and vanish via ``mode='drop'``."""
+    ge = jnp.zeros((num_experts, d.capacity), jnp.float32)
+    return ge.at[d.e_idx, d.slot].set(d.gates, mode="drop")
+
+
+def combine_tokens(ye: jax.Array, d: Dispatch, num_tokens: int, *,
+                   pre_weighted: bool = False) -> jax.Array:
+    """Gather (E, C, dm) expert outputs back to (T, dm), gate-weighted.
+
+    ``pre_weighted=True`` means the backend already folded the gates in
+    (``ExpertBackend.fuses_gates`` + ``dispatch_gates``): skip the gate
+    multiply here — the ``mode='fill'`` gather already zeroes dropped
+    assignments (slot >= C reads out of bounds)."""
     ya = ye.at[d.e_idx, d.slot].get(mode="fill", fill_value=0.0)  # (T*k, dm)
-    # dropped assignments (slot >= C) must contribute zero
-    keep = (d.slot < d.capacity).astype(ya.dtype)
-    ya = ya * (d.gates * keep)[:, None].astype(ya.dtype)
+    if not pre_weighted:
+        # dropped assignments (slot >= C) must contribute zero
+        keep = (d.slot < d.capacity).astype(ya.dtype)
+        ya = ya * (d.gates * keep)[:, None].astype(ya.dtype)
     y = jnp.zeros((num_tokens, ye.shape[-1]), ya.dtype)
     return y.at[d.t_idx].add(ya)
 
@@ -157,8 +176,10 @@ def moe_apply(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
     top_n, rank_cap = _plan_knobs(mcfg, quantized, plan)
     disp = make_dispatch(info, mcfg.num_experts, cap, top_n)
     xe, me = dispatch_tokens(x2, disp, mcfg.num_experts)
-    ye = backend(xe, params, me, act, rank_cap=rank_cap)
-    y = combine_tokens(ye, disp, t)
+    fuse = getattr(backend, "fuses_gates", False)
+    ge = dispatch_gates(disp, mcfg.num_experts) if fuse else None
+    ye = backend(xe, params, me, act, rank_cap=rank_cap, gates=ge)
+    y = combine_tokens(ye, disp, t, pre_weighted=fuse)
     return y.astype(x2.dtype), aux_losses(info, mcfg), info
 
 
@@ -189,12 +210,17 @@ def moe_apply_ep_a2a(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
     top_n, rank_cap = _plan_knobs(mcfg, quantized, plan)
     disp = make_dispatch(info, e_total, cap, top_n)
     xe, me = dispatch_tokens(x2, disp, e_total)          # (E, C, d) local
+    fuse = getattr(backend, "fuses_gates", False)
+    ge = dispatch_gates(disp, e_total) if fuse else None
     # -> (E_local, C * ep, d): every shard receives its experts' slots
     xe = jax.lax.all_to_all(xe, axis, split_axis=0, concat_axis=1, tiled=True)
     me = jax.lax.all_to_all(me, axis, split_axis=0, concat_axis=1, tiled=True)
-    ye = backend(xe, params, me, act, rank_cap=rank_cap)
+    if ge is not None:
+        ge = jax.lax.all_to_all(ge, axis, split_axis=0, concat_axis=1,
+                                tiled=True)
+    ye = backend(xe, params, me, act, rank_cap=rank_cap, gates=ge)
     ye = jax.lax.all_to_all(ye, axis, split_axis=1, concat_axis=0, tiled=True)
-    y = combine_tokens(ye, disp, t)
+    y = combine_tokens(ye, disp, t, pre_weighted=fuse)
     aux = jax.tree.map(lambda v: jax.lax.pmean(v, axis),
                        aux_losses(info, mcfg))
     return y.astype(x2.dtype), aux, info
@@ -226,8 +252,10 @@ def moe_apply_ep_replicated(x2: jax.Array, params: Dict, mcfg: MoEConfig, *,
     disp = make_dispatch(local_info, e_local + 1, t, top_n)
     xe, me = dispatch_tokens(x2, disp, e_local + 1)
     xe, me = xe[:e_local], me[:e_local]
-    ye = backend(xe, params, me, act, rank_cap=rank_cap)
+    fuse = getattr(backend, "fuses_gates", False)
+    ge = dispatch_gates(disp, e_local + 1)[:e_local] if fuse else None
+    ye = backend(xe, params, me, act, rank_cap=rank_cap, gates=ge)
     ye = jnp.concatenate([ye, jnp.zeros_like(ye[:1])], axis=0)
-    y = combine_tokens(ye, disp, t)
+    y = combine_tokens(ye, disp, t, pre_weighted=fuse)
     y = jax.lax.psum(y, axis)
     return y.astype(x2.dtype), aux_losses(info, mcfg), info

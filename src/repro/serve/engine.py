@@ -117,6 +117,25 @@ class ServeStats:
     def tokens_per_s(self) -> float:
         return self.generated_tokens / self.total_s if self.total_s else 0.0
 
+    @property
+    def busy_s(self) -> float:
+        """Engine busy time: prefill + decode compute, excluding the idle
+        gaps where the scheduler sat waiting on request arrivals."""
+        return self.prefill_s + self.decode_s
+
+    @property
+    def goodput_tokens_per_s(self) -> float:
+        """Accepted tokens per *busy* second.  Under open-loop (rated)
+        traffic the wall-clock ``tokens_per_s`` folds arrival idle time
+        into the denominator and collapses as the offered rate drops;
+        goodput is the engine-capacity view that stays comparable across
+        offered loads."""
+        return (self.generated_tokens / self.busy_s) if self.busy_s else 0.0
+
+    @property
+    def busy_frac(self) -> float:
+        return self.busy_s / self.total_s if self.total_s else 0.0
+
     def latency_percentiles(self, qs: Sequence[float] = (50.0, 95.0)
                             ) -> Dict[float, float]:
         lat = [r.latency_s for r in self.results]

@@ -1,0 +1,87 @@
+"""Autotuner policy: deterministic lookup, clamping contracts, and
+cache persistence (kernels/autotune.py)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import PACK_BLOCK
+from repro.kernels import autotune
+from repro.kernels.autotune import Autotuner, clamp_tiles, choose_tiles
+from repro.launch.roofline import (fused_tile_candidates,
+                                   fused_tile_vmem_bytes)
+
+
+def test_default_table_lookup_is_deterministic():
+    a = choose_tiles("fused", bits=2, group_size=64, rank=16,
+                     m=8, k=1024, n=1024)
+    b = choose_tiles("fused", bits=2, group_size=64, rank=16,
+                     m=8, k=1024, n=1024)
+    assert a == b == (8, 256, 512)      # the decode preset, clamp-stable
+
+
+def test_decode_preset_small_m():
+    """Single-token decode blocks must get bm=8 (the `_pad_m` waste fix),
+    never a 128-row tile."""
+    for m in (1, 2, 8):
+        bm, _, _ = choose_tiles("fused", bits=2, group_size=64, rank=16,
+                                m=m, k=512, n=512)
+        assert bm == 8
+
+
+def test_clamp_preserves_divisibility():
+    for m, k, n in ((1, 192, 384), (8, 512, 128), (33, 1024, 1024)):
+        bm, bn, bk = clamp_tiles(m, k, n, 128, 512, 1024, group_size=64)
+        assert k % bk == 0 and n % bn == 0
+        assert bk % PACK_BLOCK == 0 and bk % 64 == 0
+        assert bm % 8 == 0 and bm <= max(8, -(-m // 8) * 8)
+
+
+def test_roofline_candidates_fit_vmem_and_problem():
+    from repro.launch.roofline import VMEM_BUDGET, VMEM_BYTES
+    cands = fused_tile_candidates(8, 1024, 1024, 2, 64, 16)
+    assert cands, "decode shape must have at least one candidate"
+    for bm, bn, bk in cands:
+        assert bm <= 8 and bn <= 1024 and bk <= 1024
+        assert bk % 64 == 0
+        assert (fused_tile_vmem_bytes(bm, bn, bk, 2, 64, 16)
+                <= VMEM_BYTES * VMEM_BUDGET)
+    # best-first: the first candidate has the largest K tile
+    assert cands[0][2] == max(c[2] for c in cands)
+
+
+def test_record_and_disk_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    t = Autotuner()
+    t.record("fused", (8, 128, 256), 42.0, bits=2, group_size=64,
+             rank=16, m=8, k=512, n=512)
+    # a fresh tuner (fresh memory) must see the persisted winner
+    t2 = Autotuner()
+    assert t2.choose("fused", bits=2, group_size=64, rank=16,
+                     m=8, k=512, n=512) == (8, 128, 256)
+    data = json.loads((tmp_path / "autotune.json").read_text())
+    dev = next(iter(data.values()))
+    assert dev["fused/b2/g64/r16/m8/k512/n512"]["tiles"] == [8, 128, 256]
+
+
+def test_tune_fused_interpret_smoke(tmp_path, monkeypatch):
+    """tune_fused times the candidates under the interpreter and records
+    an in-memory winner without touching the disk cache."""
+    from repro.config import QuantConfig
+    from repro.core.pipeline import compress_expert_stack
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    rng = np.random.default_rng(0)
+    qcfg = QuantConfig(enabled=True, bits=2, group_size=64, rank_budget=8,
+                       top_n_restore=1, hqq_iters=1)
+    w = jnp.asarray(rng.standard_normal((2, 128, 128)), jnp.float32) * 0.05
+    stack, _ = compress_expert_stack(w, qcfg)
+    xe = jnp.asarray(rng.standard_normal((2, 8, 128)), jnp.float32)
+    me = jnp.ones((2, 8), jnp.float32)
+    best = autotune.tune_fused(xe, stack, me, None, None,
+                               out_dtype=jnp.float32, interpret=True,
+                               repeats=1)
+    assert 128 % best[2] == 0 and 128 % best[1] == 0
+    assert not (tmp_path / "autotune.json").exists()   # interpret: no persist

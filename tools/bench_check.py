@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the BENCH_serving.json trajectory.
+
+``benchmarks/bench_serving.py`` APPENDS every sweep to a per-mode run
+list; this tool compares the NEWEST run of each mode against the mode's
+committed ``baseline`` and fails (exit 1) when a gated metric regresses
+by more than the tolerance:
+
+- ``tok_s`` / ``goodput_tok_s`` / ``*_tok_s`` — higher is better; gated
+  at ``--tol-tok-s`` (default 0.10, i.e. fail below 90% of baseline).
+  Wall-clock throughput is noisy on shared CI hosts, so CI passes a
+  looser ``--tol-tok-s``; the deterministic byte metrics keep the tight
+  default.
+- ``mb_per_tok`` / ``kb_per_tok`` / ``*_bytes`` — lower is better
+  (offload wire traffic is deterministic given the trace); gated at
+  ``--tol-bytes`` (default 0.10).
+
+Rows pair by their ``name`` field; rows present only on one side are
+reported but never fail the gate (sweep points may come and go).
+
+Accepting an intended perf change:
+
+    python tools/bench_check.py --update-baseline
+
+moves each mode's baseline to its newest run (commit the result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SNAPSHOT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+# metric -> direction ('up' = bigger is better, gate on drops;
+# 'down' = smaller is better, gate on growth)
+GATED = {
+    "tok_s": "up",
+    "goodput_tok_s": "up",
+    "sim_tok_s": "up",
+    "mb_per_tok": "down",
+    "kb_per_tok": "down",
+    "req_mb_per_tok": "down",
+    "max_shard_kb_per_tok": "down",
+    "fused_hbm_mb": "down",
+    "hbm_reduction_x": "up",
+}
+_NOISY = {"tok_s", "goodput_tok_s", "sim_tok_s"}   # wall-clock-derived
+
+
+def _rows_by_name(entry):
+    return {r.get("name", str(i)): r
+            for i, r in enumerate(entry.get("rows", []))}
+
+
+def check_mode(mode: str, traj: dict, tol_tok_s: float,
+               tol_bytes: float) -> list:
+    """Returns a list of failure strings for one mode's trajectory."""
+    base, runs = traj.get("baseline"), traj.get("runs", [])
+    if not base or not runs:
+        return []
+    latest = runs[-1]
+    fails = []
+    base_rows, new_rows = _rows_by_name(base), _rows_by_name(latest)
+    for name, brow in base_rows.items():
+        nrow = new_rows.get(name)
+        if nrow is None:
+            print(f"  {mode}/{name}: row gone from latest run (not gated)")
+            continue
+        for metric, direction in GATED.items():
+            if metric not in brow or metric not in nrow:
+                continue
+            b, n = float(brow[metric]), float(nrow[metric])
+            if b <= 0.0:
+                continue
+            tol = tol_tok_s if metric in _NOISY else tol_bytes
+            if direction == "up":
+                ratio = n / b
+                bad = ratio < 1.0 - tol
+            else:
+                ratio = b / n if n > 0 else float("inf")
+                bad = ratio < 1.0 - tol
+            status = "FAIL" if bad else "ok"
+            print(f"  {mode}/{name} {metric}: base {b:.4g} -> {n:.4g} "
+                  f"({ratio:.2%} of baseline, tol {tol:.0%}) {status}")
+            if bad:
+                fails.append(f"{mode}/{name}/{metric}: {b:.4g} -> {n:.4g} "
+                             f"exceeds {tol:.0%} regression budget")
+    return fails
+
+
+def update_baseline(snap: dict) -> dict:
+    for mode, traj in snap.items():
+        runs = traj.get("runs", [])
+        if runs:
+            traj["baseline"] = runs[-1]
+            print(f"{mode}: baseline <- run from {runs[-1].get('time')}")
+    return snap
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="gate the newest BENCH_serving.json run of each mode "
+                    "against its committed baseline")
+    ap.add_argument("--snapshot", type=Path, default=SNAPSHOT)
+    ap.add_argument("--tol-tok-s", type=float, default=0.10,
+                    help="allowed fractional drop in throughput metrics "
+                         "(default 0.10; CI uses a looser value because "
+                         "wall-clock tok/s is noisy on shared hosts)")
+    ap.add_argument("--tol-bytes", type=float, default=0.10,
+                    help="allowed fractional growth in bytes/token "
+                         "metrics (deterministic; default 0.10)")
+    ap.add_argument("--mode", default=None,
+                    help="gate only this mode (default: every mode with "
+                         "both a baseline and at least one run)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="move each mode's baseline to its newest run "
+                         "(accepting an intended perf change); commit the "
+                         "rewritten snapshot")
+    args = ap.parse_args()
+
+    if not args.snapshot.exists():
+        print(f"no snapshot at {args.snapshot}; nothing to gate")
+        return 0
+    snap = json.loads(args.snapshot.read_text())
+    if args.update_baseline:
+        snap = update_baseline(snap)
+        args.snapshot.write_text(json.dumps(snap, indent=1, sort_keys=True)
+                                 + "\n")
+        print(f"baselines updated -> {args.snapshot}")
+        return 0
+
+    fails = []
+    for mode, traj in sorted(snap.items()):
+        if args.mode and mode != args.mode:
+            continue
+        if not isinstance(traj, dict) or "runs" not in traj:
+            continue
+        fails += check_mode(mode, traj, args.tol_tok_s, args.tol_bytes)
+    if fails:
+        print("\nbench-check FAILED:")
+        for f in fails:
+            print(f"  {f}")
+        print("(intended change? rerun the bench, then "
+              "`python tools/bench_check.py --update-baseline` and commit)")
+        return 1
+    print("\nbench-check ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
