@@ -19,14 +19,19 @@
 #   make tier1-kernels   fused-kernel parity tier under the Pallas
 #                        interpreter (REPRO_KERNEL_IMPL=pallas_interpret
 #                        forces the serving path through the kernel)
+#   make lint    repro-lint static analysis over src/ tools/ benchmarks/
+#                (jit purity, canonical byte accounting, tile legality;
+#                see tools/repro_lint.py --list-rules)
 #   make docs-check      every doc cross-reference resolves
+#   make check   the static gate bundle CI runs: lint + docs-check +
+#                bench-check (add gates HERE so CI cannot drift)
 #   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: tier1 tier1-dist tier1-kernels test bench-smoke bench-ep \
-	bench-frontier bench-kernels bench-check compress-smoke docs-check \
-	serve-example
+	bench-frontier bench-kernels bench-check compress-smoke lint \
+	docs-check check serve-example
 
 # dist-marked tests are excluded here only to avoid running them twice
 # in CI — tier1-dist runs exactly those, in-process on 8 host devices;
@@ -75,8 +80,15 @@ compress-smoke:
 		--artifact experiments/compress_smoke \
 		--batch 1 --prompt-len 8 --max-new 8
 
+lint:
+	python tools/repro_lint.py
+
 docs-check:
 	python tools/docs_check.py
+
+# single meta-target for every static gate: CI invokes this (not the
+# individual targets), so adding a gate here adds it to CI automatically
+check: lint docs-check bench-check
 
 serve-example:
 	$(PY) examples/serve_offload.py

@@ -1,0 +1,29 @@
+"""repro-lint: static invariant checking for the repro codebase.
+
+The runtime guarantees this repo leans on — plan changes never recompile
+the decode scan, metered wire bytes match compressed-artifact bytes,
+fused-kernel tiles fit the VMEM budget — are enforced at diff time by an
+AST-based lint pass (``tools/repro_lint.py`` / ``make lint``):
+
+- ``jitscope``    builds the jit-scope call graph (jit/scan/shard_map/
+                  pallas_call roots and everything reachable from them);
+- ``taint``       intra-procedural traced-value inference inside that scope;
+- ``rules_jit``   RL1xx purity rules (host sync, Python control flow on
+                  traced values, traced values into static/shape args) and
+                  RL4xx repo idioms (device_get, mesh output pinning);
+- ``rules_bytes`` RL2xx canonical wire-byte accounting (all bits/rank ->
+                  bytes arithmetic lives in ``core/quantize.py``);
+- ``rules_pallas``RL3xx Pallas tile legality (PACK_BLOCK divisibility and
+                  the roofline VMEM budget, including autotune defaults).
+
+Rules carry stable IDs; suppress a finding inline with
+``# repro-lint: disable=RL101`` or via the committed baseline file
+(see ``core.Baseline``).  README.md §Lint documents the workflow and
+ARCHITECTURE.md §Enforced invariants maps each rule to the runtime test
+that backs it.
+"""
+from .core import (Baseline, Finding, LintConfig, all_rules, lint_paths,
+                   run_lint)
+
+__all__ = ["Baseline", "Finding", "LintConfig", "all_rules", "lint_paths",
+           "run_lint"]

@@ -1,0 +1,258 @@
+"""Lint engine: rule registry, findings, suppression, baseline, runner.
+
+The engine is deliberately small — rules do the thinking.  A rule is a
+function ``(scope, ctx) -> List[Finding]`` registered under a stable ID
+via the :func:`rule` decorator; the runner builds one :class:`RepoIndex`
+over the requested paths, one :class:`JitScope` on top of it, then hands
+both to every registered rule through a shared :class:`RuleContext`
+(which caches per-function taint analyses so RL101–RL103 don't re-run
+the fixpoint three times per function).
+
+Findings are filtered twice before they reach the caller:
+
+1. inline suppressions — a ``# repro-lint: disable=RL101`` (or
+   ``disable=RL101,RL203`` / ``disable=all``) comment on the flagged
+   line silences it at the source;
+2. the committed baseline — ``tools/repro_lint_baseline.json`` entries
+   keyed by ``(rule, path, stripped line content)``, so a baselined
+   finding stays silenced across unrelated line-number churn but
+   resurfaces the moment the flagged code itself changes.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+from .jitscope import FunctionInfo, JitScope, RepoIndex, build_scope
+from .taint import TaintAnalysis
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+# directories never worth parsing
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "build", "dist",
+              ".cache"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                     # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+    content: str = ""             # stripped source line (baseline key)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+@dataclasses.dataclass
+class Rule:
+    rule_id: str
+    description: str
+    fn: Callable[[JitScope, "RuleContext"], List[Finding]]
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, description: str):
+    """Register a rule function under a stable ID."""
+    def wrap(fn):
+        _REGISTRY[rule_id] = Rule(rule_id, description, fn)
+        return fn
+    return wrap
+
+
+def all_rules() -> Dict[str, Rule]:
+    _load_rule_modules()
+    return dict(_REGISTRY)
+
+
+def _load_rule_modules():
+    # imported for their @rule side effects; lazy to avoid import cycles
+    from . import rules_bytes, rules_jit, rules_pallas  # noqa: F401
+
+
+class RuleContext:
+    """Shared per-run state handed to every rule."""
+
+    def __init__(self, index: RepoIndex, root: Path):
+        self.index = index
+        self.root = root
+        self._taints: Dict[str, TaintAnalysis] = {}
+        self._sources: Dict[str, List[str]] = {}
+
+    # -- taint cache ---------------------------------------------------------
+    def scope_taints(self, scope: JitScope):
+        """Yield (qualname, FunctionInfo, TaintAnalysis) per scope member."""
+        for q in sorted(scope.members):
+            info = scope.index.functions.get(q)
+            if info is None:
+                continue
+            ta = self._taints.get(q)
+            if ta is None:
+                ta = self._taints[q] = TaintAnalysis(info)
+            yield q, info, ta
+
+    # -- finding constructors ------------------------------------------------
+    def finding(self, rule_id: str, info: FunctionInfo, node: ast.AST,
+                message: str) -> Finding:
+        return self.finding_at(rule_id, info.path, node, message)
+
+    def finding_at(self, rule_id: str, path, node: ast.AST,
+                   message: str) -> Finding:
+        rel = self._rel(path)
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(rule_id, rel, line, col, message,
+                       self.source_line(rel, line))
+
+    # -- source access ---------------------------------------------------------
+    def source_line(self, rel: str, line: int) -> str:
+        lines = self._sources.get(rel)
+        if lines is None:
+            try:
+                lines = (self.root / rel).read_text().splitlines()
+            except OSError:
+                lines = []
+            self._sources[rel] = lines
+        if 1 <= line <= len(lines):
+            return lines[line - 1].strip()
+        return ""
+
+    def _rel(self, path) -> str:
+        p = Path(path)
+        try:
+            return p.resolve().relative_to(self.root.resolve()).as_posix()
+        except ValueError:
+            return p.as_posix()
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline
+# ---------------------------------------------------------------------------
+
+def _suppressed(finding: Finding) -> bool:
+    m = _SUPPRESS_RE.search(finding.content)
+    if not m:
+        return False
+    ids = {s.strip() for s in m.group(1).split(",")}
+    return "all" in ids or finding.rule in ids
+
+
+class Baseline:
+    """Committed list of accepted findings, content-addressed.
+
+    An entry silences every finding with the same (rule, path, stripped
+    line content) — stable across pure line-number churn, invalidated as
+    soon as the flagged line itself is edited.
+    """
+
+    def __init__(self, entries: Optional[Iterable[dict]] = None):
+        self._keys: Set[tuple] = set()
+        for e in entries or ():
+            self._keys.add((e.get("rule", ""), e.get("path", ""),
+                            e.get("content", "")))
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        try:
+            data = json.loads(Path(path).read_text())
+        except (OSError, ValueError):
+            return cls()
+        if isinstance(data, dict):
+            data = data.get("findings", [])
+        return cls(data if isinstance(data, list) else [])
+
+    def matches(self, finding: Finding) -> bool:
+        return (finding.rule, finding.path, finding.content) in self._keys
+
+    @staticmethod
+    def dump(findings: Sequence[Finding], path: Path) -> None:
+        entries = [{"rule": f.rule, "path": f.path, "content": f.content,
+                    "message": f.message} for f in findings]
+        entries.sort(key=lambda e: (e["path"], e["rule"], e["content"]))
+        Path(path).write_text(json.dumps({"findings": entries}, indent=2)
+                              + "\n")
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LintConfig:
+    paths: Sequence[Path]
+    root: Path
+    baseline_path: Optional[Path] = None
+    select: Optional[Set[str]] = None       # restrict to these rule IDs
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]                 # new, actionable
+    suppressed: int = 0
+    baselined: int = 0
+    files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def _iter_py_files(paths: Sequence[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in _SKIP_DIRS for part in f.parts):
+                    out.append(f)
+    return out
+
+
+def run_lint(config: LintConfig) -> LintResult:
+    rules = all_rules()
+    if config.select:
+        rules = {k: v for k, v in rules.items() if k in config.select}
+
+    index = RepoIndex()
+    files = _iter_py_files(config.paths)
+    for f in files:
+        index.add_file(f, config.root)
+    scope = build_scope(index)
+    ctx = RuleContext(index, Path(config.root))
+
+    findings: List[Finding] = []
+    for rid in sorted(rules):
+        findings.extend(rules[rid].fn(scope, ctx))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    live = [f for f in findings if not _suppressed(f)]
+    suppressed = len(findings) - len(live)
+
+    baselined = 0
+    if config.baseline_path is not None:
+        base = Baseline.load(config.baseline_path)
+        kept = [f for f in live if not base.matches(f)]
+        baselined = len(live) - len(kept)
+        live = kept
+
+    return LintResult(live, suppressed=suppressed, baselined=baselined,
+                      files=len(files))
+
+
+def lint_paths(paths: Sequence, root, baseline_path=None,
+               select: Optional[Set[str]] = None) -> LintResult:
+    """Convenience wrapper used by the CLI and the test suite."""
+    return run_lint(LintConfig([Path(p) for p in paths], Path(root),
+                               Path(baseline_path) if baseline_path else None,
+                               select))

@@ -1,0 +1,465 @@
+"""Jit-scope call graph: which functions execute at trace time.
+
+Roots are the places a Python callable crosses into JAX tracing:
+
+- ``@jax.jit`` / ``@functools.partial(jax.jit, static_argnames=...)``
+  decorated functions and ``jax.jit(f)`` / ``jax.jit(lambda ...)`` calls;
+- ``jax.lax.scan(body, ...)`` bodies (traced even outside jit);
+- ``shard_map(body, ...)`` bodies;
+- ``pl.pallas_call(kernel, ...)`` kernels, including kernels bound with
+  ``functools.partial(kernel, static0, static1, ...)`` — the leading
+  bound positionals are Python statics, the remaining params are refs.
+
+Everything reachable from a root through statically-resolvable calls
+(same-module functions, ``from``-imported functions, ``self.method``,
+``module.func`` through the import map, nested defs) is in scope.  The
+resolution is deliberately conservative: a call we cannot resolve adds
+no edge, so the scope under-approximates rather than hallucinating.
+
+Per function the scope also records which parameters are *static*
+(``self``/``cls``, jit ``static_argnames``, partial-bound kernel
+leaders, int/bool/str-annotated config scalars) — the seeds the taint
+pass needs to tell traced values from trace-time constants.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+# Parameter names that are config/static by repo convention even when
+# unannotated (threading ModelConfig/ExecContext/... through the stack).
+STATIC_PARAM_NAMES = {
+    "self", "cls", "cfg", "ctx", "mcfg", "scfg", "pcfg", "qcfg", "ccfg",
+    "config", "mesh", "act", "impl", "policy", "axis", "axis_name", "name",
+    "dtype", "out_dtype", "kernel_impl", "spec", "specs", "stack_meta",
+    "rules",
+}
+
+# Annotations marking a parameter as a Python-static scalar.
+STATIC_ANNOTATIONS = {"int", "bool", "str", "float"}
+
+# Container/typing heads transparent for staticness: Sequence[int] is as
+# static as int.  Anything else in an annotation (jax.Array, Dict[...,
+# Array], a dataclass) keeps the parameter traced.
+_STATIC_WRAPPERS = {"Optional", "Sequence", "Tuple", "List", "Iterable",
+                    "FrozenSet", "Set", "tuple", "list", "set", "typing"}
+
+
+def _annotation_static(ann: Optional[ast.AST]) -> bool:
+    """True when every name in the annotation is a static scalar type or
+    a transparent container/typing wrapper around one."""
+    if ann is None:
+        return False
+    names = []
+    for sub in ast.walk(ann):
+        if isinstance(sub, ast.Name):
+            names.append(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            names.append(sub.attr)
+    return bool(names) and all(
+        n in STATIC_ANNOTATIONS or n in _STATIC_WRAPPERS for n in names)
+
+_JIT_NAMES = {("jax", "jit"), ("jax.jit",), ("jit",)}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.lax.scan' for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str                 # module-qualified, e.g. repro.kernels.ops.f
+    module: str
+    path: Path
+    node: ast.AST                 # FunctionDef / AsyncFunctionDef / Lambda
+    params: Tuple[str, ...]
+    static_params: Set[str]
+    root_kinds: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def lineno(self) -> int:
+        return self.node.lineno
+
+
+class _ModuleVisitor(ast.NodeVisitor):
+    """Collect function defs (with nesting) and the import alias map."""
+
+    def __init__(self, module: str, path: Path, index: "RepoIndex"):
+        self.module = module
+        self.path = path
+        self.index = index
+        self.stack: List[str] = []            # class / function nesting
+
+    # -- imports -----------------------------------------------------------
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.index.imports[self.module][a.asname or a.name] = a.name
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        base = node.module or ""
+        if node.level:                          # resolve relative imports
+            parts = self.module.split(".")
+            # level 1 = current package (drop the module segment itself)
+            parts = parts[: len(parts) - node.level]
+            base = ".".join(parts + ([base] if base else []))
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.index.imports[self.module][a.asname or a.name] = \
+                f"{base}.{a.name}" if base else a.name
+
+    # -- defs --------------------------------------------------------------
+    def _qual(self, name: str) -> str:
+        return ".".join([self.module] + self.stack + [name])
+
+    def _add_function(self, node, name: str):
+        a = node.args
+        params = tuple(p.arg for p in
+                       list(getattr(a, "posonlyargs", [])) + a.args
+                       + a.kwonlyargs)
+        static = {p for p in params if p in STATIC_PARAM_NAMES}
+        for p in list(getattr(a, "posonlyargs", [])) + a.args + a.kwonlyargs:
+            if _annotation_static(getattr(p, "annotation", None)):
+                static.add(p.arg)
+        info = FunctionInfo(self._qual(name), self.module, self.path, node,
+                            params, static)
+        self.index.functions[info.qualname] = info
+        # short names resolve most-locally: record every visible alias
+        self.index.by_module.setdefault(self.module, {})
+        scope_key = ".".join([self.module] + self.stack)
+        self.index.local_names.setdefault(scope_key, {})[name] = info.qualname
+        if not self.stack:
+            self.index.by_module[self.module][name] = info.qualname
+        elif len(self.stack) == 1:  # class method or 1-deep nested def
+            self.index.by_module[self.module].setdefault(
+                f"{self.stack[0]}.{name}", info.qualname)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._add_function(node, node.name)
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+
+class RepoIndex:
+    """Parsed view of the lint roots: functions, imports, modules."""
+
+    def __init__(self):
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.by_module: Dict[str, Dict[str, str]] = {}
+        self.local_names: Dict[str, Dict[str, str]] = {}
+        self.imports: Dict[str, Dict[str, str]] = {}
+        self.trees: Dict[str, ast.Module] = {}          # module -> AST
+        self.module_paths: Dict[str, Path] = {}
+        self._lambda_n = 0
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def module_name(path: Path, root: Path) -> str:
+        rel = path.resolve().relative_to(root.resolve())
+        parts = list(rel.with_suffix("").parts)
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def add_file(self, path: Path, root: Path):
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError:
+            return                              # surfaced by the runner
+        module = self.module_name(path, root)
+        self.trees[module] = tree
+        self.module_paths[module] = path
+        self.imports.setdefault(module, {})
+        self.by_module.setdefault(module, {})
+        _ModuleVisitor(module, path, self).visit(tree)
+
+    def add_lambda(self, node: ast.Lambda, module: str,
+                   static: Set[str]) -> FunctionInfo:
+        self._lambda_n += 1
+        params = tuple(p.arg for p in node.args.args)
+        info = FunctionInfo(f"{module}.<lambda{self._lambda_n}>", module,
+                            self.module_paths[module], node, params,
+                            static | {p for p in params
+                                      if p in STATIC_PARAM_NAMES})
+        self.functions[info.qualname] = info
+        return info
+
+    # -- resolution --------------------------------------------------------
+    def resolve_call(self, func: ast.AST, caller: FunctionInfo
+                     ) -> Optional[str]:
+        """Resolve a call target to a known function qualname, or None."""
+        if isinstance(func, ast.Name):
+            return self._resolve_name(func.id, caller)
+        if isinstance(func, ast.Attribute):
+            base = func.value
+            if isinstance(base, ast.Name):
+                if base.id in ("self", "cls"):
+                    # method on the (syntactically) enclosing class
+                    parts = caller.qualname.split(".")
+                    for cut in range(len(parts) - 1, 0, -1):
+                        cand = ".".join(parts[:cut] + [func.attr])
+                        if cand in self.functions:
+                            return cand
+                    return None
+                target = self.imports.get(caller.module, {}).get(base.id)
+                if target:                       # module alias: lm.forward
+                    cand = f"{target}.{func.attr}"
+                    if cand in self.functions:
+                        return cand
+                    # from-imported module object (import x.y as z)
+                    return self.by_module.get(target, {}).get(func.attr) \
+                        and f"{target}.{func.attr}" or None
+            return None
+        return None
+
+    def _resolve_name(self, name: str, caller: FunctionInfo) -> Optional[str]:
+        # innermost enclosing scope outward (nested defs shadow globals)
+        parts = caller.qualname.split(".")
+        for cut in range(len(parts), 0, -1):
+            scope = ".".join(parts[:cut])
+            hit = self.local_names.get(scope, {}).get(name)
+            if hit:
+                return hit
+        hit = self.by_module.get(caller.module, {}).get(name)
+        if hit:
+            return hit
+        target = self.imports.get(caller.module, {}).get(name)
+        if target and target in self.functions:  # from m import f
+            return target
+        return None
+
+
+# ---------------------------------------------------------------------------
+# root discovery
+# ---------------------------------------------------------------------------
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            try:
+                v = ast.literal_eval(kw.value)
+            except ValueError:
+                return set()
+            return {v} if isinstance(v, str) else set(v)
+    return set()
+
+
+def _is_jit(node: ast.AST) -> Tuple[bool, Set[str]]:
+    """(is a jax.jit expression, static_argnames) for decorators/calls."""
+    if _dotted(node) in ("jax.jit", "jit"):
+        return True, set()
+    if isinstance(node, ast.Call):
+        head = _dotted(node.func)
+        if head in ("jax.jit", "jit"):
+            return True, _static_argnames(node)
+        if head in ("functools.partial", "partial") and node.args:
+            inner = _dotted(node.args[0])
+            if inner in ("jax.jit", "jit"):
+                return True, _static_argnames(node)
+    return False, set()
+
+
+def _callable_ref(node: ast.AST) -> Tuple[Optional[ast.AST], int]:
+    """Unwrap ``functools.partial(f, a, b)`` -> (f-expr, n bound args)."""
+    if isinstance(node, ast.Call) and \
+            _dotted(node.func) in ("functools.partial", "partial") and \
+            node.args:
+        return node.args[0], len(node.args) - 1
+    return node, 0
+
+
+class JitScope:
+    """The set of functions that run at trace time, with root metadata."""
+
+    def __init__(self, index: RepoIndex):
+        self.index = index
+        self.members: Set[str] = set()
+        self.roots: Dict[str, Set[str]] = {}     # qualname -> root kinds
+
+    def __contains__(self, qualname: str) -> bool:
+        return qualname in self.members
+
+    def info(self, qualname: str) -> FunctionInfo:
+        return self.index.functions[qualname]
+
+    # -- discovery ---------------------------------------------------------
+    def build(self) -> "JitScope":
+        work: List[str] = []
+
+        def add_root(qualname: Optional[str], kind: str,
+                     extra_static: Optional[Set[str]] = None,
+                     n_bound: int = 0):
+            if qualname is None or qualname not in self.index.functions:
+                return
+            info = self.index.functions[qualname]
+            info.root_kinds.add(kind)
+            if extra_static:
+                info.static_params |= extra_static
+            if n_bound:
+                info.static_params |= set(info.params[:n_bound])
+            self.roots.setdefault(qualname, set()).add(kind)
+            if qualname not in self.members:
+                self.members.add(qualname)
+                work.append(qualname)
+
+        # decorator roots
+        for q, info in list(self.index.functions.items()):
+            for dec in getattr(info.node, "decorator_list", []):
+                jit, statics = _is_jit(dec)
+                if jit:
+                    add_root(q, "jit", statics)
+
+        # call-site roots: jax.jit(f), lax.scan(body,...), shard_map(body),
+        # pl.pallas_call(kernel, ...)
+        for module, tree in self.index.trees.items():
+            owner = _ModuleOwners(self.index, module)
+            for call, enclosing in owner.calls(tree):
+                head = _dotted(call.func)
+                if head is None:
+                    continue
+                tail = head.split(".")[-1]
+                if tail == "jit" and head in ("jax.jit", "jit") and call.args:
+                    self._root_arg(call.args[0], enclosing, "jit",
+                                   _static_argnames(call), add_root)
+                elif tail == "scan" and head.endswith(("lax.scan", "jax.lax.scan")) \
+                        or head == "scan":
+                    if call.args:
+                        self._root_arg(call.args[0], enclosing, "scan",
+                                       set(), add_root)
+                elif tail == "shard_map":
+                    fn = call.args[0] if call.args else None
+                    for kw in call.keywords:
+                        if kw.arg == "f":
+                            fn = kw.value
+                    if fn is not None:
+                        self._root_arg(fn, enclosing, "shard_map", set(),
+                                       add_root)
+                elif tail == "pallas_call" and call.args:
+                    self._root_arg(call.args[0], enclosing, "pallas",
+                                   set(), add_root)
+
+        # closure over resolvable calls + nested defs
+        seen = set(work)
+        while work:
+            q = work.pop()
+            info = self.index.functions[q]
+            # nested defs only trace when referenced; still cheap to include
+            for child_q, child in self.index.functions.items():
+                if child_q != q and child_q.startswith(q + ".") and \
+                        "." not in child_q[len(q) + 1:]:
+                    if child_q not in self.members:
+                        self.members.add(child_q)
+                    if child_q not in seen:
+                        seen.add(child_q)
+                        work.append(child_q)
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = self.index.resolve_call(node.func, info)
+                if target and target not in self.members:
+                    self.members.add(target)
+                    work.append(target)
+        return self
+
+    def _root_arg(self, fn_expr: ast.AST, enclosing: Optional[FunctionInfo],
+                  kind: str, statics: Set[str], add_root):
+        fn_expr, n_bound = _callable_ref(fn_expr)
+        if isinstance(fn_expr, ast.Lambda):
+            module = enclosing.module if enclosing else None
+            if module is None:
+                return
+            info = self.index.add_lambda(fn_expr, module, statics)
+            info.root_kinds.add(kind)
+            self.roots.setdefault(info.qualname, set()).add(kind)
+            self.members.add(info.qualname)
+            # lambda bodies: add resolvable callees
+            for node in ast.walk(fn_expr.body):
+                if isinstance(node, ast.Call):
+                    target = self.index.resolve_call(node.func, info)
+                    if target and target not in self.members:
+                        self.members.add(target)
+                        self._extend(target)
+            return
+        if isinstance(fn_expr, (ast.Name, ast.Attribute)):
+            caller = enclosing or _module_level_caller(self.index, kind)
+            if caller is None:
+                return
+            target = self.index.resolve_call(fn_expr, caller) \
+                if isinstance(fn_expr, ast.Attribute) else \
+                self.index._resolve_name(fn_expr.id, caller)
+            add_root(target, kind, statics, n_bound)
+
+    def _extend(self, qualname: str):
+        """BFS continuation for lambda callees found after the main loop."""
+        work = [qualname]
+        while work:
+            q = work.pop()
+            info = self.index.functions[q]
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Call):
+                    t = self.index.resolve_call(node.func, info)
+                    if t and t not in self.members:
+                        self.members.add(t)
+                        work.append(t)
+
+
+class _ModuleOwners:
+    """Yield (Call, enclosing FunctionInfo|None) pairs for a module tree."""
+
+    def __init__(self, index: RepoIndex, module: str):
+        self.index = index
+        self.module = module
+
+    def calls(self, tree: ast.Module):
+        out = []
+
+        def walk(node, owner_qual: List[str]):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                owner_qual = owner_qual + [node.name]
+            if isinstance(node, ast.Call):
+                q = ".".join([self.module] + owner_qual)
+                info = None
+                # innermost enclosing *function*
+                while q:
+                    cand = self.index.functions.get(q)
+                    if cand is not None and not isinstance(cand.node,
+                                                           ast.ClassDef):
+                        info = cand
+                        break
+                    q = q.rpartition(".")[0]
+                out.append((node, info))
+            for child in ast.iter_child_nodes(node):
+                walk(child, owner_qual)
+
+        walk(tree, [])
+        return out
+
+
+def _module_level_caller(index: RepoIndex, module: str
+                         ) -> Optional[FunctionInfo]:
+    return None
+
+
+def build_scope(index: RepoIndex) -> JitScope:
+    return JitScope(index).build()

@@ -1,0 +1,115 @@
+"""RL2xx canonical wire-byte accounting rules.
+
+The bandwidth-accuracy claims of the paper reproduction hinge on ONE
+pair of formulas — ``core/quantize.py::quant_wire_bytes`` /
+``factor_wire_bytes`` — backing compression, offload metering, the
+bandwidth controller, and the serialized artifacts alike (PR 5
+consolidated them; these rules keep them consolidated).
+
+RL201 handrolled-wire-bytes   arithmetic deriving bytes from a bit-width
+                              or rank outside ``core/quantize.py``:
+                              either dividing a bits-bearing expression
+                              by 8, or the ``8 // plane_width``
+                              values-per-byte idiom.  Kernel modules
+                              (``kernels/quant_matmul.py``,
+                              ``kernels/ref.py``) are exempt for the
+                              latter only — they implement the packed
+                              *layout*, not byte *accounting*.
+RL202 scale-wire-bytes        referencing ``SCALE_WIRE_BYTES`` outside
+                              ``core/quantize.py`` — scale/zero wire
+                              cost is an implementation detail of the
+                              canonical formulas; composing with it
+                              elsewhere re-derives what
+                              ``quant_wire_bytes`` already owns.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .core import Finding, rule
+from .jitscope import _dotted
+
+# the module that owns byte accounting, and the modules allowed the
+# values-per-byte layout idiom (they implement pack/unpack itself)
+CANONICAL = ("core/quantize.py",)
+LAYOUT_OK = ("kernels/quant_matmul.py", "kernels/ref.py")
+
+BITS_NAMES = {"bits", "factor_bits", "nbits", "bitwidth", "bit_width",
+              "store_bits"}
+
+
+def _mentions_bits(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in BITS_NAMES:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in BITS_NAMES:
+            return True
+    return False
+
+
+def _path_matches(path: str, suffixes) -> bool:
+    norm = path.replace("\\", "/")
+    return any(norm.endswith(s) for s in suffixes)
+
+
+@rule("RL201", "hand-rolled bits/rank -> bytes arithmetic outside "
+               "core/quantize.py")
+def rl201(scope, ctx) -> List[Finding]:
+    out = []
+    for module, tree in ctx.index.trees.items():
+        path = str(ctx.index.module_paths[module])
+        if _path_matches(path, CANONICAL):
+            continue
+        layout_ok = _path_matches(path, LAYOUT_OK)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.BinOp) or \
+                    not isinstance(node.op, (ast.Div, ast.FloorDiv)):
+                continue
+            # <expr-with-bits> // 8 : a wire-byte formula re-derivation
+            if isinstance(node.right, ast.Constant) and \
+                    node.right.value == 8 and _mentions_bits(node.left):
+                out.append(ctx.finding_at(
+                    "RL201", ctx.index.module_paths[module], node,
+                    "bits-to-bytes arithmetic outside core/quantize.py; "
+                    "use quant_wire_bytes/factor_wire_bytes/packed_nbytes "
+                    "so metering and compression cannot drift"))
+                continue
+            # 8 // p : the values-per-byte packing idiom (layout modules
+            # implement it; everyone else must call the canonical helpers)
+            if not layout_ok and isinstance(node.left, ast.Constant) and \
+                    node.left.value == 8 and \
+                    isinstance(node.op, ast.FloorDiv):
+                out.append(ctx.finding_at(
+                    "RL201", ctx.index.module_paths[module], node,
+                    "`8 // plane_width` packed-layout arithmetic outside "
+                    "the kernel layout modules; byte counts must come "
+                    "from core/quantize.py (packed_nbytes / "
+                    "quant_wire_bytes)"))
+    return out
+
+
+@rule("RL202", "SCALE_WIRE_BYTES referenced outside core/quantize.py")
+def rl202(scope, ctx) -> List[Finding]:
+    out = []
+    for module, tree in ctx.index.trees.items():
+        path = str(ctx.index.module_paths[module])
+        if _path_matches(path, CANONICAL):
+            continue
+        for node in ast.walk(tree):
+            name = None
+            if isinstance(node, ast.Name) and node.id == "SCALE_WIRE_BYTES":
+                name = node.id
+            elif isinstance(node, ast.Attribute) and \
+                    node.attr == "SCALE_WIRE_BYTES":
+                name = node.attr
+            elif isinstance(node, ast.ImportFrom) and \
+                    any(a.name == "SCALE_WIRE_BYTES" for a in node.names):
+                name = "SCALE_WIRE_BYTES"
+            if name:
+                out.append(ctx.finding_at(
+                    "RL202", ctx.index.module_paths[module], node,
+                    "scale/zero wire cost is owned by quant_wire_bytes/"
+                    "factor_wire_bytes; composing with SCALE_WIRE_BYTES "
+                    "elsewhere re-derives canonical accounting"))
+    return out

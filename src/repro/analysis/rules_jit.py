@@ -1,0 +1,228 @@
+"""RL1xx jit-scope purity rules and RL4xx repo-idiom rules.
+
+RL101 host-sync-in-jit        .item()/.tolist()/.block_until_ready(),
+                              float()/int()/bool(), np.asarray/np.array on
+                              a traced value inside jit scope — a forced
+                              device sync (or a trace-time concretization
+                              error waiting for the first real input).
+RL102 traced-control-flow     Python ``if``/``while`` testing a traced
+                              value, or ``for``/``while`` over
+                              ``range(traced)`` — concretizes the tracer;
+                              when it survives (cond on a leading-axis
+                              bool) it recompiles per value.  The traced
+                              plan row must stay data (``jnp.where`` /
+                              ``lax.cond``), never Python control flow.
+RL103 traced-static-arg       traced value flowing into a shape/static
+                              argument (``jnp.zeros(shape=...)``,
+                              ``.reshape``, ``ShapeDtypeStruct``, a
+                              callee's ``static_argnames``) — every new
+                              value is a fresh compile of the decode scan.
+RL104 device-get-in-jit       ``jax.device_get`` anywhere in jit scope
+                              (scan bodies included) — the repo idiom is
+                              to return values and fetch on the host.
+RL401 unpinned-mesh-output    a jitted entry point in a mesh-path module
+                              (one importing ``tree_constraint``) returns
+                              a bare ``caches``/``logits`` value without
+                              routing it through a pinning helper —
+                              sharding-propagation churn shows up as a
+                              spurious recompile per chunk.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from .core import Finding, rule
+from .jitscope import JitScope, _dotted
+from .taint import TaintAnalysis, _is_none_check
+
+SYNC_METHODS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+SYNC_CASTS = {"float", "int", "bool"}
+NP_SYNC = {"np.asarray", "np.array", "np.copy", "numpy.asarray",
+           "numpy.array", "numpy.copy", "onp.asarray", "onp.array"}
+
+SHAPE_KWARGS = {"shape", "new_sizes", "length", "num", "total_repeat_length"}
+SHAPE_FUNCS = {  # positional index of the shape/static-size argument
+    "jnp.zeros": 0, "jnp.ones": 0, "jnp.full": 0, "jnp.empty": 0,
+    "jnp.arange": 0, "jax.ShapeDtypeStruct": 0,
+    "jnp.broadcast_to": 1,                      # (array, shape)
+    "lax.broadcasted_iota": 1,                  # (dtype, shape, dim)
+    "jax.lax.broadcasted_iota": 1,
+}
+
+PIN_HELPERS = {"tree_constraint", "with_sharding_constraint", "_pin_caches",
+               "_pin_logits", "_pin_outputs"}
+_MESH_OUT_RE = re.compile(r"(^|_)(caches|logits)$")
+
+
+def _iter_scope(scope: JitScope):
+    for q in sorted(scope.members):
+        info = scope.index.functions.get(q)
+        if info is None:
+            continue
+        yield q, info, TaintAnalysis(info)
+
+
+@rule("RL101", "host sync on a traced value inside jit scope")
+def rl101(scope: JitScope, ctx) -> List[Finding]:
+    out = []
+    for q, info, ta in ctx.scope_taints(scope):
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            head = _dotted(node.func)
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in SYNC_METHODS and \
+                    ta.expr_tainted(node.func.value):
+                out.append(ctx.finding(
+                    "RL101", info,  node,
+                    f".{node.func.attr}() on a traced value in jit scope "
+                    f"({q.split('.')[-1]}) forces a host sync"))
+            elif head in SYNC_CASTS and node.args and \
+                    ta.expr_tainted(node.args[0]):
+                out.append(ctx.finding(
+                    "RL101", info, node,
+                    f"{head}() on a traced value in jit scope concretizes "
+                    f"the tracer"))
+            elif head in NP_SYNC and node.args and \
+                    ta.expr_tainted(node.args[0]):
+                out.append(ctx.finding(
+                    "RL101", info, node,
+                    f"{head}() on a traced value in jit scope pulls the "
+                    f"array to host"))
+    return out
+
+
+@rule("RL102", "Python control flow on a traced value inside jit scope")
+def rl102(scope: JitScope, ctx) -> List[Finding]:
+    out = []
+    for q, info, ta in ctx.scope_taints(scope):
+        for node in ast.walk(info.node):
+            if isinstance(node, (ast.If, ast.While)):
+                if _is_none_check(node.test):
+                    continue
+                if ta.expr_tainted(node.test):
+                    kw = "if" if isinstance(node, ast.If) else "while"
+                    out.append(ctx.finding(
+                        "RL102", info, node,
+                        f"Python `{kw}` on a traced value in jit scope "
+                        f"({q.split('.')[-1]}); keep plan/gate values as "
+                        f"data (jnp.where / lax.cond)"))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                it = node.iter
+                if isinstance(it, ast.Call) and \
+                        _dotted(it.func) == "range" and \
+                        any(ta.expr_tainted(a) for a in it.args):
+                    out.append(ctx.finding(
+                        "RL102", info, node,
+                        "`for ... in range(<traced>)` in jit scope "
+                        "concretizes the tracer; use lax.fori_loop/scan"))
+    return out
+
+
+@rule("RL103", "traced value flowing into a shape/static argument")
+def rl103(scope: JitScope, ctx) -> List[Finding]:
+    out = []
+    for q, info, ta in ctx.scope_taints(scope):
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            head = _dotted(node.func) or ""
+            # shape-taking constructors: the shape positional
+            if head in SHAPE_FUNCS and \
+                    len(node.args) > SHAPE_FUNCS[head] and \
+                    ta.expr_tainted(node.args[SHAPE_FUNCS[head]]):
+                out.append(ctx.finding(
+                    "RL103", info, node,
+                    f"traced value as the shape argument of {head}() — "
+                    f"recompiles per value"))
+                continue
+            # .reshape(...) with traced dims
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "reshape" and \
+                    any(ta.expr_tainted(a) for a in node.args):
+                out.append(ctx.finding(
+                    "RL103", info, node,
+                    "traced value in .reshape() dims — recompiles per "
+                    "value (derive dims from .shape instead)"))
+                continue
+            # shape-named keywords anywhere
+            for kwarg in node.keywords:
+                if kwarg.arg in SHAPE_KWARGS and ta.expr_tainted(kwarg.value):
+                    out.append(ctx.finding(
+                        "RL103", info, node,
+                        f"traced value into static `{kwarg.arg}=` of "
+                        f"{head or 'call'}() — recompiles per value"))
+            # calls into a known jitted callee's static_argnames
+            target = scope.index.resolve_call(node.func, info)
+            if target and target in scope.members:
+                tinfo = scope.index.functions[target]
+                if "jit" in tinfo.root_kinds:
+                    for kwarg in node.keywords:
+                        if kwarg.arg in tinfo.static_params and \
+                                kwarg.arg not in ("self", "cls") and \
+                                ta.expr_tainted(kwarg.value):
+                            out.append(ctx.finding(
+                                "RL103", info, node,
+                                f"traced value bound to static arg "
+                                f"`{kwarg.arg}` of jitted "
+                                f"{target.split('.')[-1]}() — every new "
+                                f"value is a fresh compile"))
+    return out
+
+
+@rule("RL104", "jax.device_get inside jit scope")
+def rl104(scope: JitScope, ctx) -> List[Finding]:
+    out = []
+    for q, info, _ta in ctx.scope_taints(scope):
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Call) and \
+                    _dotted(node.func) in ("jax.device_get", "device_get"):
+                out.append(ctx.finding(
+                    "RL104", info, node,
+                    f"jax.device_get in jit scope ({q.split('.')[-1]}); "
+                    f"return the value and fetch on the host"))
+    return out
+
+
+@rule("RL401", "unpinned cache/logits output on a mesh-path jit entry")
+def rl401(scope: JitScope, ctx) -> List[Finding]:
+    out = []
+    for q in sorted(scope.roots):
+        info = scope.index.functions.get(q)
+        if info is None or "jit" not in scope.roots[q]:
+            continue
+        # mesh-path modules self-identify by importing tree_constraint
+        imports = scope.index.imports.get(info.module, {})
+        if not any(k in PIN_HELPERS or v.split(".")[-1] in PIN_HELPERS
+                   for k, v in imports.items()):
+            continue
+        pinned: set = set()
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                head = _dotted(node.value.func) or ""
+                if head.split(".")[-1] in PIN_HELPERS:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            pinned.add(t.id)
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Return) or node.value is None:
+                continue
+            elts = node.value.elts if isinstance(node.value, ast.Tuple) \
+                else [node.value]
+            for el in elts:
+                if isinstance(el, ast.Call):
+                    head = _dotted(el.func) or ""
+                    if head.split(".")[-1] in PIN_HELPERS:
+                        continue
+                if isinstance(el, ast.Name) and \
+                        _MESH_OUT_RE.search(el.id) and el.id not in pinned:
+                    out.append(ctx.finding(
+                        "RL401", info, node,
+                        f"jitted mesh-path entry {q.split('.')[-1]}() "
+                        f"returns `{el.id}` without a sharding pin "
+                        f"(tree_constraint/with_sharding_constraint) — "
+                        f"propagation churn recompiles per chunk"))
+    return out

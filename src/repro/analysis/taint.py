@@ -1,0 +1,187 @@
+"""Intra-procedural traced-value ("taint") inference for jit-scope rules.
+
+Inside a jit-scope function, *traced* values are the ones whose concrete
+value is unavailable at trace time — branching on them, host-converting
+them, or passing them into a static/shape argument is a recompile or
+concretization hazard.  The inference is deliberately shallow (one
+function at a time, two forward passes to a fixpoint) and tuned for
+precision over recall: a missed taint costs a missed finding, a false
+taint costs developer trust.
+
+Seeds: every parameter not classified static by ``jitscope`` (self/cls,
+jit ``static_argnames``, partial-bound kernel leaders, int/bool/str
+annotations, repo-conventional config names), plus the results of
+``jnp.* / jax.* / lax.*`` calls.
+
+Sanitizers (results are trace-time statics):
+- ``.shape`` / ``.dtype`` / ``.ndim`` / ``.size`` and ``len(...)``;
+- known static metadata attributes of registered dataclasses
+  (``bits``, ``group_size``, ``pad_rank``, ...);
+- ``x is None`` / ``x is not None`` comparisons (Python-level identity);
+- plain attribute access on tainted objects, EXCEPT the well-known
+  array-field names of the repo's containers (``planes``, ``scale``,
+  ``caches``...) — dataclass meta fields vastly outnumber data fields
+  at typical use sites.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from .jitscope import FunctionInfo, _dotted
+
+# attribute reads that are static under jit no matter the base
+STATIC_ATTRS = {
+    "shape", "dtype", "ndim", "size", "bits", "group_size", "pad_rank",
+    "factor_bits", "expert_bits", "top_k", "num_experts", "d_model",
+    "n_layers", "ranks", "kind",
+}
+
+# attribute reads that carry array data through a (possibly tainted) object
+TRACED_ATTRS = {
+    "planes", "scale", "zero", "u", "v", "u_scale", "v_scale",
+    "caches", "logits", "trace", "aux", "segments",
+}
+
+# calls whose result is always a trace-time static
+UNTAINT_CALLS = {
+    "len", "isinstance", "hasattr", "type", "str", "repr", "getattr",
+    "min", "max",  # min/max of statics stay static; of tainted -> arg rule
+}
+
+_TRACING_HEADS = ("jnp.", "jax.", "lax.", "pl.", "pltpu.")
+
+
+class TaintAnalysis:
+    """Tainted-name set + expression classifier for one function."""
+
+    def __init__(self, info: FunctionInfo):
+        self.info = info
+        self.tainted: Set[str] = {
+            p for p in info.params if p not in info.static_params}
+        self._run()
+
+    # -- statement pass ----------------------------------------------------
+    def _run(self):
+        body = getattr(self.info.node, "body", None)
+        if body is None:                        # Lambda
+            return
+        if not isinstance(body, list):
+            body = [body]
+        for _ in range(2):                      # tiny fixpoint
+            before = set(self.tainted)
+            for stmt in body:
+                self._stmt(stmt)
+            if self.tainted == before:
+                break
+
+    def _stmt(self, node: ast.AST):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = node.value
+            if value is not None and self.expr_tainted(value):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    self._taint_target(t)
+        # walk nested statements (if/for/while/with/try bodies)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.stmt):
+                self._stmt(child)
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            # iterating a traced container yields traced elements
+            if self.expr_tainted(node.iter):
+                self._taint_target(node.target)
+        if isinstance(node, ast.With):
+            for item in node.items:
+                if item.optional_vars is not None and \
+                        self.expr_tainted(item.context_expr):
+                    self._taint_target(item.optional_vars)
+
+    def _taint_target(self, t: ast.AST):
+        if isinstance(t, ast.Name):
+            self.tainted.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                self._taint_target(el)
+        elif isinstance(t, ast.Starred):
+            self._taint_target(t.value)
+
+    # -- expression classifier ---------------------------------------------
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            if node.id.isupper():               # module constants
+                return False
+            return node.id in self.tainted
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            if node.attr in TRACED_ATTRS and self.expr_tainted(node.value):
+                return True
+            return False                        # meta fields dominate
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            head = _dotted(node.func) or ""
+            tail = head.split(".")[-1]
+            if tail in UNTAINT_CALLS and tail not in ("min", "max"):
+                return False
+            if head.startswith(_TRACING_HEADS) or head in ("jnp", "jax"):
+                return True
+            if isinstance(node.func, ast.Attribute) and \
+                    self.expr_tainted(node.func.value):
+                return True                     # method on traced value
+            return any(self.expr_tainted(a) for a in node.args) or \
+                any(self.expr_tainted(k.value) for k in node.keywords)
+        if isinstance(node, ast.BinOp):
+            return self.expr_tainted(node.left) or \
+                self.expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in node.values
+                       if not _is_none_check(v))
+        if isinstance(node, ast.Compare):
+            if _is_none_check(node):
+                return False
+            if _is_key_membership(node):
+                return False
+            return self.expr_tainted(node.left) or \
+                any(self.expr_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return self.expr_tainted(node.body) or \
+                self.expr_tainted(node.orelse) or self.expr_tainted(node.test)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Lambda):
+            return False
+        return False
+
+
+def _is_key_membership(node: ast.AST) -> bool:
+    """``"key" in tree`` / ``"key" not in tree`` — pytree *structure*
+    tests (dict key membership), static under jit even on traced trees."""
+    return (isinstance(node, ast.Compare)
+            and len(node.ops) == 1
+            and isinstance(node.ops[0], (ast.In, ast.NotIn))
+            and isinstance(node.left, ast.Constant)
+            and isinstance(node.left.value, str))
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — a Python-identity test, always
+    legal on traced optionals (the value itself is never inspected)."""
+    return (isinstance(node, ast.Compare)
+            and len(node.ops) == 1
+            and isinstance(node.ops[0], (ast.Is, ast.IsNot))
+            and isinstance(node.comparators[0], ast.Constant)
+            and node.comparators[0].value is None)
+
+
+def analysis_for(info: FunctionInfo) -> TaintAnalysis:
+    return TaintAnalysis(info)

@@ -41,9 +41,15 @@ def plane_widths(bits: int) -> Tuple[int, ...]:
     return tuple(p for p, _ in PLANES[bits])
 
 
+def packed_rows(p: int, k: int) -> int:
+    """Row count of one width-``p`` bit plane over ``k`` K rows (the
+    packed layout stores ``8 // p`` values per byte along K)."""
+    return k // (8 // p)
+
+
 def packed_nbytes(bits: int, k: int, n: int) -> int:
     """Exact packed byte count for a (k, n) matrix at ``bits`` width."""
-    return sum((k // (8 // p)) * n for p, _ in PLANES[bits])
+    return sum(packed_rows(p, k) * n for p, _ in PLANES[bits])
 
 
 SCALE_WIRE_BYTES = 2  # scale/zero (and factor scales) travel as bf16

@@ -88,11 +88,12 @@ class Autotuner:
         if self._disk is None:
             self._disk = {}
             p = cache_path()
-            if p.exists():
-                try:
-                    self._disk = json.loads(p.read_text())
-                except ValueError:
-                    self._disk = {}
+            try:
+                loaded = json.loads(p.read_text())
+                if isinstance(loaded, dict):
+                    self._disk = loaded
+            except (OSError, ValueError):
+                pass        # missing/corrupt/truncated cache -> defaults
         return self._disk
 
     def _store_disk(self, key: str, tiles: Tuple[int, int, int],
@@ -103,8 +104,15 @@ class Autotuner:
                     "time": time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                           time.gmtime())}
         p = cache_path()
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(disk, indent=1, sort_keys=True) + "\n")
+        try:
+            p.parent.mkdir(parents=True, exist_ok=True)
+            # write-then-rename: a reader (or a crash) mid-write must see
+            # either the old complete file or the new one, never a torn mix
+            tmp = p.with_name(f"{p.name}.tmp.{os.getpid()}")
+            tmp.write_text(json.dumps(disk, indent=1, sort_keys=True) + "\n")
+            os.replace(tmp, p)
+        except OSError:
+            pass            # cache persistence is best-effort
 
     # -- lookup ------------------------------------------------------------
     def _default(self, kind: str, bits: int, group_size: int, rank: int,
@@ -124,8 +132,15 @@ class Autotuner:
         key = _key_str(kind, bits, group_size, rank, m, k, n)
         if key in self._mem:
             return self._mem[key]
-        hit = self._load_disk().get(device_kind(), {}).get(key)
-        tiles = tuple(hit["tiles"]) if hit else None
+        disk = self._load_disk().get(device_kind(), {})
+        hit = disk.get(key) if isinstance(disk, dict) else None
+        try:
+            tiles = tuple(hit["tiles"]) if hit else None
+            if tiles is not None and (len(tiles) != 3 or not all(
+                    isinstance(t, int) and t > 0 for t in tiles)):
+                tiles = None
+        except (KeyError, TypeError):
+            tiles = None    # structurally corrupt entry -> defaults
         if tiles is None:
             tiles = self._default(kind, bits, group_size, rank, m)
         if tiles is None:

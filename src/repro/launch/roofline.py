@@ -168,7 +168,7 @@ def fused_tile_vmem_bytes(bm: int, bn: int, bk: int, bits: int,
     """Resident VMEM footprint of one fused-kernel grid step: x tile,
     packed planes, scale/zero, compensator factors, f32 accumulator and
     rank-space scratch (see ``kernels/quant_matmul.py::_fused_kernel``)."""
-    plane_b = sum(bk // (8 // p) * bn for p in _plane_widths(bits))
+    plane_b = _packed_nbytes(bits, bk, bn)
     scales_b = 2 * (bk // group_size) * bn * 4
     factors_b = bk * rank + rank * bn + rank * 4 + rank * 4
     return (bm * bk * 4 + plane_b + scales_b + factors_b
@@ -178,6 +178,11 @@ def fused_tile_vmem_bytes(bm: int, bn: int, bk: int, bits: int,
 def _plane_widths(bits: int):
     from ..core.quantize import PLANES
     return tuple(p for p, _ in PLANES[bits])
+
+
+def _packed_nbytes(bits: int, k: int, n: int) -> int:
+    from ..core.quantize import packed_nbytes
+    return packed_nbytes(bits, k, n)
 
 
 def fused_tile_candidates(m: int, k: int, n: int, bits: int,

@@ -15,7 +15,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..config import (ModelConfig, ParallelConfig, QuantConfig, ShapeConfig,
                       TrainConfig)
-from ..core.quantize import PLANES
+from ..core.quantize import PLANES, packed_rows
 from ..core.pipeline import CompressedExpertStack
 from ..distributed.moe_parallel import make_moe_ep_fn
 from ..distributed.sharding import (CACHE_RULES, PARAM_RULES, constraint_fn,
@@ -39,7 +39,7 @@ def make_abstract_stack(prefix: Tuple[int, ...], e: int, k: int, n: int,
                         qcfg: QuantConfig) -> CompressedExpertStack:
     g = qcfg.group_size
     r = max(qcfg.rank_budget, 1)
-    planes = tuple(jnp.zeros(prefix + (e, k // (8 // p), n), jnp.uint8)
+    planes = tuple(jnp.zeros(prefix + (e, packed_rows(p, k), n), jnp.uint8)
                    for p, _ in PLANES[qcfg.bits])
     f_dt = jnp.bfloat16 if qcfg.factor_bits >= 16 else jnp.int8
     s_dt = jnp.bfloat16 if qcfg.scale_dtype == "bf16" else jnp.float32

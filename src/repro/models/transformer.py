@@ -868,7 +868,8 @@ def _unstack_scan_traces(trs) -> List[jax.Array]:
     (repeat, T, k) arrays; global order interleaves positions within each
     repeat: [rep0/pos0, rep0/pos1, ..., rep1/pos0, ...].
     """
-    if not trs:
+    # tuple emptiness test, not array truthiness:
+    if not trs:  # repro-lint: disable=RL102
         return []
     stacked = jnp.stack(trs, axis=1)          # (repeat, npos, T, k)
     r, p, t, k = stacked.shape

@@ -85,3 +85,51 @@ def test_tune_fused_interpret_smoke(tmp_path, monkeypatch):
                                repeats=1)
     assert 128 % best[2] == 0 and 128 % best[1] == 0
     assert not (tmp_path / "autotune.json").exists()   # interpret: no persist
+
+
+def test_store_disk_is_atomic(tmp_path, monkeypatch):
+    """The cache write must go through a same-directory temp file and
+    os.replace, leaving no partial file behind."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    t = Autotuner()
+    t.record("fused", (8, 128, 256), 1.0, bits=2, group_size=64,
+             rank=16, m=8, k=512, n=512)
+    t.record("fused", (8, 256, 512), 2.0, bits=4, group_size=64,
+             rank=16, m=8, k=1024, n=1024)
+    leftovers = [p for p in tmp_path.iterdir() if p.name != cache.name]
+    assert leftovers == [], leftovers
+    data = json.loads(cache.read_text())       # complete, parseable JSON
+    dev = next(iter(data.values()))
+    assert len(dev) == 2
+
+
+def test_corrupt_disk_cache_falls_back_to_defaults(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    expected = Autotuner().choose("fused", bits=2, group_size=64, rank=16,
+                                  m=8, k=1024, n=1024)
+    for payload in ('{"truncated', '[1, 2, 3]', '"just a string"', ""):
+        cache.write_text(payload)
+        t = Autotuner()
+        assert t.choose("fused", bits=2, group_size=64, rank=16,
+                        m=8, k=1024, n=1024) == expected
+        # and a later record must recover the file to valid JSON
+        t.record("fused", (8, 128, 256), 1.0, bits=2, group_size=64,
+                 rank=16, m=8, k=512, n=512)
+        assert isinstance(json.loads(cache.read_text()), dict)
+
+
+def test_structurally_corrupt_entry_is_ignored(tmp_path, monkeypatch):
+    """Valid JSON whose entries have the wrong shape must not raise."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    expected = Autotuner().choose("fused", bits=2, group_size=64, rank=16,
+                                  m=8, k=1024, n=1024)
+    key = "fused/b2/g64/r16/m8/k1024/n1024"
+    from repro.kernels.autotune import device_kind
+    for bad in (None, 7, {"us": 1.0}, {"tiles": "wat"},
+                {"tiles": [8, 128]}, {"tiles": [8, "x", 512]}):
+        cache.write_text(json.dumps({device_kind(): {key: bad}}))
+        assert Autotuner().choose("fused", bits=2, group_size=64, rank=16,
+                                  m=8, k=1024, n=1024) == expected

@@ -1,0 +1,88 @@
+"""Perf-regression gate behavior: detection, tolerance, baseline update,
+and malformed-input exit codes (tools/bench_check.py)."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_check", REPO / "tools" / "bench_check.py")
+bench_check = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_check)
+
+
+def _snapshot(base_tok_s=100.0, new_tok_s=100.0,
+              base_mb=2.0, new_mb=2.0):
+    row = lambda tok, mb: [{"name": "b4/g64/r16", "tok_s": tok,
+                            "mb_per_tok": mb}]
+    return {"serve": {
+        "baseline": {"time": "t0", "rows": row(base_tok_s, base_mb)},
+        "runs": [{"time": "t1", "rows": row(new_tok_s, new_mb)}],
+    }}
+
+
+def _write(tmp_path, snap):
+    p = tmp_path / "BENCH_serving.json"
+    p.write_text(json.dumps(snap))
+    return p
+
+
+def test_within_tolerance_passes(tmp_path, capsys):
+    p = _write(tmp_path, _snapshot(new_tok_s=95.0))   # -5% under 10% tol
+    assert bench_check.main(["--snapshot", str(p)]) == 0
+    assert "bench-check ok" in capsys.readouterr().out
+
+
+def test_throughput_regression_detected(tmp_path, capsys):
+    p = _write(tmp_path, _snapshot(new_tok_s=80.0))   # -20% over 10% tol
+    assert bench_check.main(["--snapshot", str(p)]) == 1
+    assert "regression budget" in capsys.readouterr().out
+
+
+def test_bytes_regression_detected(tmp_path):
+    # deterministic byte metric growing 50%: fails even at a loose
+    # wall-clock tolerance (tok/s noise must not loosen the byte gate)
+    p = _write(tmp_path, _snapshot(new_mb=3.0))
+    assert bench_check.main(["--snapshot", str(p),
+                             "--tol-tok-s", "0.40"]) == 1
+
+
+def test_loose_tok_s_tolerance_is_respected(tmp_path):
+    p = _write(tmp_path, _snapshot(new_tok_s=70.0))   # -30%
+    assert bench_check.main(["--snapshot", str(p)]) == 1
+    assert bench_check.main(["--snapshot", str(p),
+                             "--tol-tok-s", "0.40"]) == 0
+
+
+def test_update_baseline_roundtrip(tmp_path):
+    p = _write(tmp_path, _snapshot(new_tok_s=80.0))
+    assert bench_check.main(["--snapshot", str(p)]) == 1
+    assert bench_check.main(["--snapshot", str(p),
+                             "--update-baseline"]) == 0
+    # baseline moved to the newest run -> the same run now gates clean
+    assert bench_check.main(["--snapshot", str(p)]) == 0
+    snap = json.loads(p.read_text())
+    assert snap["serve"]["baseline"] == snap["serve"]["runs"][-1]
+
+
+@pytest.mark.parametrize("payload", ["{truncated", "[1, 2]", '"nope"'])
+def test_malformed_snapshot_exits_2(tmp_path, payload):
+    p = tmp_path / "BENCH_serving.json"
+    p.write_text(payload)
+    assert bench_check.main(["--snapshot", str(p)]) == 2
+
+
+def test_missing_snapshot_is_not_an_error(tmp_path):
+    assert bench_check.main(
+        ["--snapshot", str(tmp_path / "nope.json")]) == 0
+
+
+def test_vanished_row_reported_not_gated(tmp_path, capsys):
+    snap = _snapshot()
+    snap["serve"]["runs"][-1]["rows"] = []            # row gone entirely
+    p = _write(tmp_path, snap)
+    assert bench_check.main(["--snapshot", str(p)]) == 0
+    assert "row gone" in capsys.readouterr().out

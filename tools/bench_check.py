@@ -23,6 +23,9 @@ Accepting an intended perf change:
     python tools/bench_check.py --update-baseline
 
 moves each mode's baseline to its newest run (commit the result).
+
+Exit codes: 0 within tolerance (or nothing to gate), 1 regression,
+2 malformed snapshot JSON.
 """
 from __future__ import annotations
 
@@ -99,7 +102,7 @@ def update_baseline(snap: dict) -> dict:
     return snap
 
 
-def main() -> int:
+def parse_args(argv=None):
     ap = argparse.ArgumentParser(
         description="gate the newest BENCH_serving.json run of each mode "
                     "against its committed baseline")
@@ -118,12 +121,24 @@ def main() -> int:
                     help="move each mode's baseline to its newest run "
                          "(accepting an intended perf change); commit the "
                          "rewritten snapshot")
-    args = ap.parse_args()
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
 
     if not args.snapshot.exists():
         print(f"no snapshot at {args.snapshot}; nothing to gate")
         return 0
-    snap = json.loads(args.snapshot.read_text())
+    try:
+        snap = json.loads(args.snapshot.read_text())
+        if not isinstance(snap, dict):
+            raise ValueError(f"expected a mode->trajectory object, got "
+                             f"{type(snap).__name__}")
+    except (OSError, ValueError) as e:
+        print(f"bench-check: malformed snapshot {args.snapshot}: {e}",
+              file=sys.stderr)
+        return 2
     if args.update_baseline:
         snap = update_baseline(snap)
         args.snapshot.write_text(json.dumps(snap, indent=1, sort_keys=True)

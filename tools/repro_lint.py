@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""repro-lint: AST lint for jit purity, byte accounting, and tile legality.
+
+Usage:
+    python tools/repro_lint.py [paths...]            # default: src tools benchmarks
+    python tools/repro_lint.py --list-rules
+    python tools/repro_lint.py --update-baseline     # accept current findings
+
+Exit codes: 0 clean, 1 findings, 2 internal error / bad invocation.
+
+Suppress a single finding inline with ``# repro-lint: disable=RL101``
+(comma-separate multiple IDs, or ``disable=all``); accept a legacy batch
+into ``tools/repro_lint_baseline.json`` with ``--update-baseline``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import Baseline, all_rules, lint_paths  # noqa: E402
+
+DEFAULT_PATHS = ("src", "tools", "benchmarks")
+DEFAULT_BASELINE = REPO_ROOT / "tools" / "repro_lint_baseline.json"
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(prog="repro-lint", description=__doc__)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src tools benchmarks)")
+    ap.add_argument("--root", default=str(REPO_ROOT),
+                    help="repo root for relative paths and module names")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline JSON (use 'none' to disable)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write current findings into the baseline and exit 0")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule IDs to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rules and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+
+    if args.list_rules:
+        for rid, r in sorted(all_rules().items()):
+            print(f"{rid}  {r.description}")
+        return 0
+
+    root = Path(args.root)
+    paths = [root / p for p in (args.paths or DEFAULT_PATHS)]
+    paths = [p for p in paths if p.exists()]
+    if not paths:
+        print("repro-lint: no lintable paths", file=sys.stderr)
+        return 2
+    baseline = None if args.baseline.lower() == "none" else Path(args.baseline)
+    select = set(args.select.split(",")) if args.select else None
+
+    if args.update_baseline:
+        # run without the baseline filter, then accept everything live
+        result = lint_paths(paths, root, baseline_path=None, select=select)
+        Baseline.dump(result.findings, baseline or DEFAULT_BASELINE)
+        print(f"repro-lint: baselined {len(result.findings)} finding(s) "
+              f"-> {baseline or DEFAULT_BASELINE}")
+        return 0
+
+    result = lint_paths(paths, root, baseline_path=baseline, select=select)
+    for f in result.findings:
+        print(f.render())
+    if not args.quiet:
+        print(f"repro-lint: {len(result.findings)} finding(s) over "
+              f"{result.files} file(s) "
+              f"({result.suppressed} suppressed, "
+              f"{result.baselined} baselined)")
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except KeyboardInterrupt:
+        sys.exit(2)
