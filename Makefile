@@ -19,19 +19,25 @@
 #   make tier1-kernels   fused-kernel parity tier under the Pallas
 #                        interpreter (REPRO_KERNEL_IMPL=pallas_interpret
 #                        forces the serving path through the kernel)
+#   make tier1-stream    async expert-streaming tier: the metered-bytes
+#                        oracle, staging-ring state machine (hypothesis),
+#                        and transfer fault-injection tests
+#   make bench-stream    compute/transfer overlap sweep (streamed vs
+#                        resident decode; appends to BENCH_serving.json)
 #   make lint    repro-lint static analysis over src/ tools/ benchmarks/
 #                (jit purity, canonical byte accounting, tile legality;
 #                see tools/repro_lint.py --list-rules)
 #   make docs-check      every doc cross-reference resolves
-#   make check   the static gate bundle CI runs: lint + docs-check +
-#                bench-check (add gates HERE so CI cannot drift)
+#   make check   the gate bundle CI runs: lint + docs-check +
+#                bench-check + tier1-stream (add gates HERE so CI
+#                cannot drift)
 #   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 tier1-dist tier1-kernels test bench-smoke bench-ep \
-	bench-frontier bench-kernels bench-check compress-smoke lint \
-	docs-check check serve-example
+.PHONY: tier1 tier1-dist tier1-kernels tier1-stream test bench-smoke \
+	bench-ep bench-frontier bench-kernels bench-stream bench-check \
+	compress-smoke lint docs-check check serve-example
 
 # dist-marked tests are excluded here only to avoid running them twice
 # in CI — tier1-dist runs exactly those, in-process on 8 host devices;
@@ -50,6 +56,13 @@ tier1-kernels:
 		tests/test_fused_kernel.py tests/test_expert_backend.py \
 		tests/test_autotune.py tests/test_kernels_quant_matmul.py
 
+# the async-streaming correctness tier: metered bytes == observed
+# transfer-engine copies (the oracle), ring state-machine properties,
+# and the delay/stall fault-injection suite
+tier1-stream:
+	$(PY) -m pytest -x -q tests/test_streaming_oracle.py \
+		tests/test_staging_ring.py tests/test_fault_tolerance.py
+
 test:
 	$(PY) -m pytest -q
 
@@ -65,6 +78,9 @@ bench-frontier:
 
 bench-kernels:
 	$(PY) -m benchmarks.bench_kernels --quick
+
+bench-stream:
+	$(PY) benchmarks/bench_serving.py --quick --stream
 
 # wall-clock tok/s is noisy on shared CI hosts: gate it loosely there via
 # TOL_TOK_S; the deterministic bytes/token metrics keep the tight 10%
@@ -86,9 +102,11 @@ lint:
 docs-check:
 	python tools/docs_check.py
 
-# single meta-target for every static gate: CI invokes this (not the
-# individual targets), so adding a gate here adds it to CI automatically
-check: lint docs-check bench-check
+# single meta-target for the gate bundle CI runs (not the individual
+# targets), so adding a gate here adds it to CI automatically; the
+# streaming tier rides along because its oracle is the cheap end-to-end
+# proof that the offload byte meter still matches real data movement
+check: lint docs-check bench-check tier1-stream
 
 serve-example:
 	$(PY) examples/serve_offload.py

@@ -335,6 +335,39 @@ class ControlConfig:
 
 
 @dataclass(frozen=True)
+class StreamConfig:
+    """True asynchronous expert streaming (offload/staging.py).
+
+    When enabled, offloaded serving actually *moves* expert bytes: the
+    compressed stacks live in a host-memory wire image, a per-layer
+    staging ring issues async H2D copies for every byte the offload
+    meter charges, and the decode scan reads mutable device stack
+    containers assembled from the streamed payloads (initialized to a
+    device-resident ``fallback_bits`` "little expert" copy).
+
+    ``miss_policy``:
+      'block'    a chunk that routed to a not-yet-streamed expert stalls,
+                 stages it, and re-runs from a cache snapshot — streamed
+                 decode is token-identical to the all-resident path;
+      'degrade'  never stall: the missed expert is served from the
+                 resident low-bit fallback (MoBiLE little-expert
+                 semantics) and the affected tokens count as degraded.
+    A copy stalled longer than ``stall_timeout_s`` degrades even under
+    'block' (a wedged link must not hang decode forever).
+    """
+    enabled: bool = False
+    ring_slots: int = 2                # per-layer staging depth (double buffer)
+    miss_policy: str = "block"         # block | degrade
+    fallback_bits: int = 2             # resident low-bit fallback width
+    stall_timeout_s: float = 5.0       # stalled-copy degrade threshold
+    max_reruns: int = 8                # fixpoint re-run bound per chunk
+
+    def __post_init__(self):
+        assert self.miss_policy in ("block", "degrade"), self.miss_policy
+        assert self.ring_slots >= 1, self.ring_slots
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     max_seq_len: int = 4096
     prefill_chunk: int = 512
@@ -351,6 +384,9 @@ class ServeConfig:
     # ServeEngine.attach_offload auto-attaches the controller (the
     # controller feeds on the offload byte meters)
     control: ControlConfig = field(default_factory=ControlConfig)
+    # true async expert streaming; when enabled, attach_offload
+    # auto-attaches the transfer engine (it feeds the same byte meters)
+    stream: StreamConfig = field(default_factory=StreamConfig)
 
 
 @dataclass(frozen=True)

@@ -28,6 +28,14 @@ admits, retires, and refills requests between chunks:
   the bytes/token a ``--link-bw`` link affords at T tokens/s), budgeting
   either the aggregate link or (``--budget-scope per_shard``) the
   hottest shard's link;
+- ``--stream`` (with ``--offload``): serve through the REAL async
+  expert-streaming engine — compressed experts live in host memory and
+  stream into device containers through per-layer staging rings
+  overlapped with decode; ``--stream-miss block`` keeps decode
+  token-identical to all-resident (stage + re-run on a true miss),
+  ``--stream-miss degrade`` serves misses from the device-resident
+  ``--stream-fallback-bits`` fallback instead of stalling; the report
+  adds overlap efficiency, stalls, and the metered==observed byte check;
 - ``--mesh ep=N``: expert-parallel sharded serving — experts (and their
   quantized planes + compensator factors) partition over an N-way
   ``('model',)`` mesh, decode runs resident-expert partials + psum under
@@ -123,6 +131,24 @@ def main():
                     choices=("aggregate", "per_shard"),
                     help="what the byte budget constrains under --mesh: "
                          "the summed links or the hottest shard's link")
+    # -- async expert streaming -------------------------------------------
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the async expert-streaming engine "
+                         "(needs --offload): experts live in host memory "
+                         "and stream into device containers via per-layer "
+                         "staging rings; decode blocks only on a true miss")
+    ap.add_argument("--stream-ring", type=int, default=2,
+                    help="staging-ring slots per layer (in-flight H2D "
+                         "copies; 2 = double buffer)")
+    ap.add_argument("--stream-miss", default="block",
+                    choices=("block", "degrade"),
+                    help="on a routed expert whose copy has not landed: "
+                         "'block' stages + re-runs the chunk (token-"
+                         "identical to all-resident), 'degrade' serves it "
+                         "from the resident low-bit fallback")
+    ap.add_argument("--stream-fallback-bits", type=int, default=2,
+                    help="bit width of the device-resident fallback copy "
+                         "that serves missed experts under 'degrade'")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full_config)
@@ -143,6 +169,12 @@ def main():
     if args.artifact and not args.offload:
         ap.error("--artifact needs --offload (it replaces the startup "
                  "compression of the offload path)")
+    if args.stream and not args.offload:
+        ap.error("--stream needs --offload (the stream engine is driven "
+                 "by the offload stores' metering events)")
+    if args.stream and args.mesh:
+        ap.error("--stream requires the single-device serving path "
+                 "(mesh-sharded streaming is not supported)")
     if args.offload:
         if cfg.moe is None:
             ap.error(f"--offload needs an MoE arch; {cfg.name} has none")
@@ -172,6 +204,12 @@ def main():
                 enabled=True, bytes_per_token=args.bytes_per_token,
                 tokens_per_s=args.target_tokens_per_s,
                 link_bw=args.link_bw, budget_scope=args.budget_scope))
+        if args.stream:
+            from ..config import StreamConfig
+            eng.attach_streaming(StreamConfig(
+                enabled=True, ring_slots=args.stream_ring,
+                miss_policy=args.stream_miss,
+                fallback_bits=args.stream_fallback_bits))
     else:
         eng = ServeEngine(cfg, params, mesh=mesh)
 
@@ -202,6 +240,16 @@ def main():
                 print(f"  per-shard links (ep={rep['ep']}): [{shares}] KiB, "
                       f"hottest {rep['max_shard_bytes_per_token'] / 2**10:.1f}"
                       f" KiB/token")
+        sr = stats.stream_report
+        if sr is not None:
+            print(f"stream ({sr['miss_policy']}, ring {sr['ring_slots']}): "
+                  f"overlap {sr['overlap_efficiency']:.0%}, "
+                  f"{sr['observed_copies']} copies "
+                  f"({sr['observed_copy_bytes'] / 2**20:.1f} MiB observed "
+                  f"== {sr['metered_bytes'] / 2**20:.1f} MiB metered), "
+                  f"{sr['stalls']} stalls ({sr['stall_s'] * 1e3:.0f}ms), "
+                  f"{sr['reruns']} re-runs, "
+                  f"{sr['degraded_tokens']} degraded tokens")
         if eng.controller is not None and eng.controller.history:
             c = eng.controller
             tail = c.history[len(c.history) // 2:]
@@ -226,6 +274,15 @@ def main():
         print(f"offload ({rep['policy']}): "
               f"{rep['bytes_per_token'] / 2**10:.1f} KiB/token, "
               f"cache hit {rep['hit_rate']:.0%}")
+    if res.stream_report is not None:
+        sr = res.stream_report
+        print(f"stream ({sr['miss_policy']}, ring {sr['ring_slots']}): "
+              f"overlap {sr['overlap_efficiency']:.0%}, "
+              f"{sr['observed_copies']} copies "
+              f"({sr['observed_copy_bytes'] / 2**20:.1f} MiB observed == "
+              f"{sr['metered_bytes'] / 2**20:.1f} MiB metered), "
+              f"{sr['stalls']} stalls, {sr['degraded_tokens']} degraded "
+              f"tokens")
 
 
 if __name__ == "__main__":

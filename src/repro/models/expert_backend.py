@@ -52,6 +52,25 @@ def expert_ffn_dense(xe: jax.Array, w1, w3, w2, act: str) -> jax.Array:
     return jnp.einsum("ecf,efd->ecd", h, w2)
 
 
+def expert_stacks(params: Dict) -> Dict[str, CompressedExpertStack]:
+    """The layer's live compressed stacks — the single read point the
+    quantized backends go through.
+
+    Streamed-container contract (``serve`` ``attach_streaming`` /
+    ``offload/staging.py``): under async expert streaming this dict holds
+    the mutable device CONTAINERS — booted from the low-bit fallback,
+    with true expert payloads scattered in between scan chunks.  The
+    stream engine only ever replaces entry VALUES with pytree/shape/
+    dtype-identical stacks (meta fields — the jit signature — never
+    change), so backends must (a) re-read the dict each call rather than
+    caching stacks across calls, and (b) never assume a stack leaf aliases
+    the offline-compressed original.  Both quantized backends below
+    already satisfy this by construction; new backends should fetch
+    stacks through this helper to inherit the contract.
+    """
+    return params["stacks"]
+
+
 class ExpertBackend:
     """Executes the expert FFN over dispatched (E, C, d) buffers.
 
@@ -93,7 +112,7 @@ class RefQuantBackend(ExpertBackend):
     name = "ref"
 
     def __call__(self, xe, params, me, act, rank_cap=None, gates=None):
-        stacks = params["stacks"]
+        stacks = expert_stacks(params)
         return compensated_expert_ffn(
             xe, stacks["w1"], stacks.get("w3"), stacks["w2"], me,
             act=activation(act), dtype=xe.dtype, rank_cap=rank_cap)
@@ -120,7 +139,7 @@ class PallasQuantBackend(ExpertBackend):
         self.impl = impl
 
     def __call__(self, xe, params, me, act, rank_cap=None, gates=None):
-        stacks: Dict[str, CompressedExpertStack] = params["stacks"]
+        stacks = expert_stacks(params)
         f = activation(act)
         h1 = ops.fused_expert_matmul(xe, stacks["w1"], me,
                                      impl=self.impl,

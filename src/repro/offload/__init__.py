@@ -1,9 +1,15 @@
-"""Offloading emulation: expert store, LRU cache, bandwidth cost models,
-layer-ahead prefetch, and the fig-7 event-driven throughput simulator."""
+"""Offloading: expert store, LRU cache, bandwidth cost models, layer-ahead
+prefetch, the fig-7 event-driven throughput simulator, and the async
+expert-streaming engine (pinned host images + staging rings) that turns
+the byte meter into a verified data path."""
 from .bandwidth import GPU_NDP, GPU_ONLY, TPU_V5E_OFFLOAD, HardwareProfile
 from .cache import *  # noqa
+from .hostmem import (HostExpertImage, build_fallback_stack,
+                      build_fallback_stacks)
 from .prefetch import LayerAheadPrefetcher, PrefetchStats
 from .simulator import LayerSpecSim, SimResult, make_router_trace, simulate_decode
+from .staging import (DeviceTransferBackend, ExpertStreamEngine,
+                      FakeTransferBackend, StagingRing, StagingSlot)
 from .store import (ExpertCache, ExpertStore, FetchStats,
                     ShardedExpertStore, make_expert_stores,
                     meter_decode_trace, offload_report, replay_decode_trace,

@@ -84,8 +84,12 @@ def simulate_decode(trace: np.ndarray, spec: LayerSpecSim,
     Two-resource pipeline (link, device).  On-demand mode (default,
     Mixtral-Offloading semantics): a layer's fetch is issued only after the
     previous layer computed (the router decides what to fetch).  With
-    ``prefetch=True`` the fetch may start as soon as the link is free
-    (oracle layer-ahead prediction).
+    ``prefetch=True`` the fetch is issued as soon as the link is free AND
+    the layer-ahead prediction exists — the prediction for layer ``l``
+    becomes available when layer ``l``'s router last ran (the previous
+    token's pass), matching the real transfer engine's
+    ``LayerAheadPrefetcher``: a first-touch layer has no prediction yet
+    and falls back to on-demand issue.
 
     ``policy='ours_adaptive'`` (or ``'ours_adaptive_ndp'``) runs the
     bandwidth-budget controller in the loop: every ``ctrl_interval``
@@ -114,6 +118,14 @@ def simulate_decode(trace: np.ndarray, spec: LayerSpecSim,
         ctrl = None
         plan = None
     caches = [ExpertCache(cache_capacity) for _ in range(num_layers)]
+    # per-cache resident compensator rank caps, ExpertStore._comp_resident
+    # semantics (e -> cap, None = full rank, absent = none resident):
+    # factors ride the cache with their expert, a later cap raise moves
+    # only the delta rows — keeps sim bytes identical to the store meter
+    comp_res: List[Dict[int, Optional[int]]] = [{} for _ in range(num_layers)]
+    # prediction availability per trace layer: the time layer l's router
+    # last ran (None until first touch — no prediction to act on yet)
+    pred_ready: List[Optional[float]] = [None] * trace.shape[1]
     t_link = 0.0      # link busy-until
     t_dev = 0.0       # device busy-until
     busy_link = 0.0
@@ -129,6 +141,7 @@ def simulate_decode(trace: np.ndarray, spec: LayerSpecSim,
     for tok in range(tokens):
         for layer in range(trace.shape[1]):
             cache = caches[layer % num_layers]
+            resident = comp_res[layer % num_layers]
             experts = trace[tok, layer]
             if plan is not None:
                 layer_top_n = int(plan.top_n[layer])
@@ -151,15 +164,34 @@ def simulate_decode(trace: np.ndarray, spec: LayerSpecSim,
                     continue
                 nbytes = (spec.bytes_fp16 if base_policy == "fp16"
                           else spec.bytes_quant)
-                if restored:
-                    nbytes += _capped_comp_bytes(spec, e, layer_cap)
                 if not cache.access(e, nbytes):
                     move += nbytes
+                if cache.last_evicted is not None:
+                    resident.pop(cache.last_evicted, None)
+                if restored:
+                    # compensators ride the cache with their expert
+                    # (ExpertStore.access_token semantics): fetch only the
+                    # rank rows not already resident
+                    have = resident.get(e, -1)        # -1 = absent
+                    need = _capped_comp_bytes(spec, e, layer_cap)
+                    if have is not None:
+                        held = (0 if have < 0
+                                else _capped_comp_bytes(spec, e, have))
+                        if need > held:
+                            move += need - held
+                        if (have < 0 or layer_cap is None
+                                or layer_cap > have):
+                            resident[e] = layer_cap
+                    nbytes += need
                 dev_flops += eflops
                 dev_bytes += nbytes
             # fetch issue time: on-demand waits for the router (= prev
-            # layer's compute); prefetch only for the link itself
-            issue = t_link if prefetch else max(t_link, t_dev)
+            # layer's compute); prefetch for the link AND the layer-ahead
+            # prediction (causal: layer l's router must have run once)
+            if prefetch and pred_ready[layer] is not None:
+                issue = max(t_link, pred_ready[layer])
+            else:
+                issue = max(t_link, t_dev)
             tt = profile.transfer_time(move) if move else 0.0
             t_ready = issue + tt
             t_link = t_ready
@@ -168,6 +200,9 @@ def simulate_decode(trace: np.ndarray, spec: LayerSpecSim,
             comp = max(profile.compute_time(dev_flops),
                        profile.hbm_time(dev_bytes))
             start = max(t_ready, t_dev)
+            # layer l's router runs as its compute begins: from here on a
+            # prefetch of the NEXT token's layer-l prediction may issue
+            pred_ready[layer] = start
             t_dev = start + comp + ndp_time
             busy_dev += comp + ndp_time
             total_bytes += move

@@ -113,6 +113,14 @@ class ExpertStore:
         self.comp_bytes_moved = 0
         self.prefetch_bytes = 0
         self.wasted_prefetch_bytes = 0
+        # async transfer engine (offload/staging.py).  When attached, the
+        # meter drives real copies: every metering event calls back into
+        # the engine, and the engine acknowledges each copy it puts on
+        # the link via ``note_copy`` — the observed side of the
+        # metered-bytes == observed-copies oracle.
+        self._engine = None
+        self.observed_copies = 0
+        self.observed_copy_bytes = 0
         # expert -> rank cap its device-resident compensator factors were
         # fetched at (None = uncapped / full true rank); factors ride the
         # LRU with their expert (evicted together, refetched on the next
@@ -143,6 +151,43 @@ class ExpertStore:
         if self.cache.last_evicted is not None:
             self._comp_resident.pop(self.cache.last_evicted, None)
 
+    # -- transfer-engine plumbing ------------------------------------------
+    def attach_engine(self, hook):
+        """Attach a transfer-engine hook (``on_demand`` / ``on_factors`` /
+        ``on_prefetch``); pass None to detach."""
+        self._engine = hook
+
+    def note_copy(self, nbytes: int):
+        """Transfer-engine acknowledgement that ``nbytes`` were put on the
+        link for a metering event of this store (counted at copy issue)."""
+        self.observed_copies += 1
+        self.observed_copy_bytes += int(nbytes)
+
+    def absorb_external_copy(self, e: int, nbytes: int,
+                             comp_rank: Optional[int] = None,
+                             comp_bytes: int = 0) -> int:
+        """Meter a copy the engine performed that no demand/compensator
+        event claimed (an optimistic stage the accepted trace never
+        touched): insert the expert so residency matches the container,
+        charge the traffic as prefetch, and acknowledge the copy.
+        Returns the bytes metered (the caller attributes them to
+        ``wasted_prefetch_bytes``)."""
+        e = int(e)
+        moved = 0
+        if nbytes:
+            if self.cache.insert(e, int(nbytes)):
+                self._drop_evicted()
+                moved += int(nbytes)
+        if comp_bytes:
+            have = self._comp_resident.get(e, -1)
+            if have is not None:
+                self._comp_resident[e] = comp_rank
+                moved += int(comp_bytes)
+        if moved:
+            self.prefetch_bytes += moved
+            self.note_copy(moved)
+        return moved
+
     def access_token(self, topk: np.ndarray, top_n: int, policy: str,
                      rank_cap: Optional[int] = None) -> int:
         """Meter one token's expert fetches; returns bytes moved.
@@ -155,8 +200,10 @@ class ExpertStore:
             e = int(e)
             if e < 0:
                 continue
-            self.cache.access(e, self.expert_bytes(e, policy))
+            hit = self.cache.access(e, self.expert_bytes(e, policy))
             self._drop_evicted()
+            if not hit and self._engine is not None:
+                self._engine.on_demand(self, e, self.expert_bytes(e, policy))
             if policy == "ours" and rank < top_n:
                 # compensators ride the cache with their expert: fetch
                 # only what is not already resident (a raised cap fetches
@@ -168,6 +215,9 @@ class ExpertStore:
                 held = 0 if have < 0 else self.compensator_bytes(e, have)
                 if need > held:
                     self.comp_bytes_moved += need - held
+                    if self._engine is not None:
+                        self._engine.on_factors(self, e, have, rank_cap,
+                                                need - held)
                 if have < 0 or rank_cap is None or rank_cap > have:
                     self._comp_resident[e] = rank_cap
         return self.total_bytes - before
@@ -185,10 +235,18 @@ class ExpertStore:
             if e < 0:
                 continue
             nb = self.expert_bytes(e, policy)
-            if self.cache.insert(e, nb):
-                self._drop_evicted()
-                self.prefetch_bytes += nb
-                fetched[e] = nb
+            if e in self.cache:
+                self.cache.insert(e, nb)          # refresh LRU position
+                continue
+            if self._engine is not None and not self._engine.on_prefetch(
+                    self, e, nb):
+                # staging ring full: the copy cannot move, so the store
+                # must neither meter it nor warm the LRU with it
+                continue
+            self.cache.insert(e, nb)
+            self._drop_evicted()
+            self.prefetch_bytes += nb
+            fetched[e] = nb
         return fetched
 
     @property
@@ -287,6 +345,29 @@ class ShardedExpertStore:
             fetched.update(self.shards[self._owner(e)].prefetch([e], policy))
         return fetched
 
+    # -- transfer-engine plumbing ------------------------------------------
+    def attach_engine(self, hook):
+        """Attach one transfer-engine hook to every shard.  Expert
+        ownership is disjoint across shards, so the shared per-layer
+        engine state (containers, ring, ledger) sees each expert's
+        events from exactly one shard."""
+        for s in self.shards:
+            s.attach_engine(hook)
+
+    def absorb_external_copy(self, e: int, nbytes: int,
+                             comp_rank: Optional[int] = None,
+                             comp_bytes: int = 0) -> int:
+        return self.shards[self._owner(e)].absorb_external_copy(
+            e, nbytes, comp_rank=comp_rank, comp_bytes=comp_bytes)
+
+    @property
+    def observed_copies(self) -> int:
+        return sum(s.observed_copies for s in self.shards)
+
+    @property
+    def observed_copy_bytes(self) -> int:
+        return sum(s.observed_copy_bytes for s in self.shards)
+
     # -- aggregate views (same API surface as ExpertStore) -----------------
     @property
     def comp_bytes_moved(self) -> int:
@@ -359,6 +440,11 @@ def snapshot_offload(stores: List[ExpertStore], prefetcher=None) -> Dict:
         "misses": sum(s.cache.stats.misses for s in stores),
         "per_shard": sum(np.asarray(s.shard_totals, np.int64)
                          for s in stores),
+        # observed transfer-engine copies (0 until streaming is attached);
+        # the oracle pins observed == total per store, so these columns
+        # let reports cross-check metered traffic against real copies
+        "observed": sum(s.observed_copy_bytes for s in stores),
+        "copies": sum(s.observed_copies for s in stores),
         "pf_issued": prefetcher.stats.issued if prefetcher is not None else 0,
         "pf_useful": prefetcher.stats.useful if prefetcher is not None else 0,
     }
@@ -389,6 +475,8 @@ def offload_report(stores: List[ExpertStore], prefetcher, snap: Dict,
         "per_shard_bytes": [int(b) for b in per_shard],
         "max_shard_bytes_per_token": (int(per_shard.max())
                                       / max(tokens, 1)),
+        "observed_copy_bytes": int(d["observed"]),
+        "observed_copies": int(d["copies"]),
     }
 
 

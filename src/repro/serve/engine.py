@@ -78,6 +78,9 @@ class GenerationResult:
     router_trace: Optional[np.ndarray] = None
     # live offload metering (attach_offload): bytes/token, hit rate, ...
     offload_report: Optional[Dict[str, float]] = None
+    # async streaming engine counters (attach_streaming): overlap
+    # efficiency, stalls, degraded tokens, observed copies, ...
+    stream_report: Optional[Dict] = None
 
     @property
     def decode_tokens_per_s(self) -> float:
@@ -112,6 +115,9 @@ class ServeStats:
     # (ep,) wire bytes that crossed each expert-parallel shard's link
     # (the per-shard reduction; length 1 on the single-device path)
     shard_bytes: Optional[np.ndarray] = None
+    # async streaming counters (attach_streaming): overlap efficiency,
+    # transfer/stall seconds, degraded tokens, observed copies, ...
+    stream_report: Optional[Dict] = None
 
     @property
     def tokens_per_s(self) -> float:
@@ -199,6 +205,8 @@ class ServeEngine:
         self._prefetcher = None
         self._offload_policy = "ours"
         self._controller = None        # BandwidthController (attach_controller)
+        self._stream = None            # ExpertStreamEngine (attach_streaming)
+        self._prefill_traced = None    # lazy trace-collecting prefill jit
         self._prefill_ctx = make_context(cfg, "prefill", quantized=quantized,
                                          exact_capacity=True,
                                          kernel_impl=kernel_impl,
@@ -223,9 +231,6 @@ class ServeEngine:
                 out.logits, (plen - 1)[:, None, None], axis=1)[:, 0]
             return self._pin_logits(logits), self._pin_caches(caches)
 
-        @functools.partial(jax.jit,
-                           static_argnames=("max_new", "temperature"),
-                           donate_argnums=(1,))
         def decode_loop(params, caches, logits0, key, plan, max_new,
                         temperature):
             """scan over decode steps: sample on device, step, stack trace.
@@ -267,7 +272,16 @@ class ServeEngine:
             return self._pin_caches(caches), self._pin_logits(logits)
 
         self._prefill = prefill
-        self._decode_loop = decode_loop
+        # the same decode body, wrapped twice: the donating loop is the
+        # steady-state path (cache buffers reused in place); the
+        # NON-donating twin runs the streaming fixpoint's speculative
+        # attempts — a rejected attempt must leave the input caches
+        # valid for the re-run, which donation would invalidate
+        self._decode_loop = jax.jit(
+            decode_loop, static_argnames=("max_new", "temperature"),
+            donate_argnums=(1,))
+        self._decode_loop_spec = jax.jit(
+            decode_loop, static_argnames=("max_new", "temperature"))
         self._claim = claim
 
     # -- compile accounting ------------------------------------------------
@@ -314,7 +328,72 @@ class ServeEngine:
             # ServeConfig-driven controller: budgeted serving without a
             # separate attach_controller call (which can still override)
             self.attach_controller(self.scfg.control)
+        if self.scfg.stream.enabled:
+            self.attach_streaming()
         return self
+
+    def attach_streaming(self, stream=None, backend=None) -> "ServeEngine":
+        """Turn the metered offload into a real streamed data path.
+
+        The MoE layers' serving stacks are pointer-swapped for
+        fallback-initialized device *containers* (same pytree / shapes /
+        dtypes — the jitted loops never recompile); an
+        ``ExpertStreamEngine`` stages true expert payloads into them from
+        pinned host images, driven by the stores' metering events, with a
+        per-layer ring of async H2D copies for the prefetcher's
+        layer-ahead predictions.  Decode runs optimistically on the
+        current containers and blocks only on a true miss
+        (``StreamConfig.miss_policy='block'``: stage + re-run until the
+        routing is fully served, token-identical to all-resident;
+        ``'degrade'``: accept the chunk served by the resident low-bit
+        fallback and stage in the background).
+
+        ``stream``: ``StreamConfig`` override (default ``scfg.stream``);
+        ``backend``: transfer backend override (fault injection).
+        Requires ``attach_offload`` on the LIVE serving stacks, the
+        single-device path (store-level ``ep`` sharding still applies),
+        and an 'ours'/'quant' fetch policy.
+        """
+        from ..offload.staging import ExpertStreamEngine
+        stream = stream or self.scfg.stream
+        if self._stores is None:
+            raise ValueError("attach_offload must be called before "
+                             "attach_streaming (the stream engine is "
+                             "driven by its metered stores)")
+        if self.mesh is not None:
+            raise ValueError("streaming requires the single-device serving "
+                             "path; expert-parallel byte accounting still "
+                             "works via attach_offload(ep=...)")
+        if not self.collect_router_trace:
+            raise ValueError("streaming detects misses from the router "
+                             "trace; collect_router_trace must be on")
+        if self._offload_policy not in ("ours", "quant"):
+            raise ValueError("streaming moves compressed containers; fetch "
+                             f"policy {self._offload_policy!r} unsupported")
+        moe_params = [lp["moe"] for seg in self.params["segments"]
+                      for lp in seg
+                      if isinstance(lp, dict) and isinstance(lp.get("moe"),
+                                                             dict)
+                      and "stacks" in lp["moe"]]
+        if len(moe_params) != len(self._stores):
+            raise ValueError(f"{len(moe_params)} compressed MoE layers in "
+                             f"params vs {len(self._stores)} stores")
+        for mp, store in zip(moe_params, self._stores):
+            if mp["stacks"] is not store.stacks:
+                raise ValueError("attach_offload was given stacks that are "
+                                 "not the live serving stacks; streaming "
+                                 "must stage into the containers the "
+                                 "decode loop reads")
+        self._stream = ExpertStreamEngine(self._stores, stream,
+                                          policy=self._offload_policy,
+                                          backend=backend)
+        for li, mp in enumerate(moe_params):
+            mp["stacks"] = self._stream.layer_containers(li)
+        return self
+
+    @property
+    def stream(self):
+        return self._stream
 
     def attach_controller(self, control: ControlConfig
                           ) -> "ServeEngine":
@@ -437,9 +516,99 @@ class ServeEngine:
         request, against a fresh cache of the serve run's bucket length."""
         toks = self._pad_prompt(np.asarray(req.tokens,
                                            np.int32).reshape(1, -1))
+        plen = jnp.full((1,), req.prompt_len, jnp.int32)
+        if self._stream is not None:
+            return self._prefill_streamed(toks, plen, cache_len)
         caches = self._make_caches(1, cache_len)
-        return self._prefill(self.params, caches, jnp.asarray(toks),
-                             jnp.full((1,), req.prompt_len, jnp.int32))
+        return self._prefill(self.params, caches, jnp.asarray(toks), plen)
+
+    def _prefill_streamed(self, toks: np.ndarray, plen, cache_len: int):
+        """Prefill under streaming: run optimistically on the current
+        containers, stage every expert the prompt's routing touched that
+        is not yet resident (at the static top_n, full rank), and re-run
+        until the routing is fully served by true weights — so a streamed
+        request's FIRST sampled token already matches the all-resident
+        path.  Prefill always blocks on its stages (it is off the decode
+        critical path); a stalled copy degrades the prefill after
+        ``stall_timeout_s`` like any other miss."""
+        eng = self._stream
+        if self._prefill_traced is None:
+            ctx = make_context(self.cfg, "prefill", quantized=self.quantized,
+                               exact_capacity=True,
+                               kernel_impl=self.kernel_impl, mesh=self.mesh,
+                               pcfg=self.pcfg, collect_trace=True)
+
+            @jax.jit
+            def prefill_traced(params, caches, tokens, plen):
+                out = lm.forward(params, tokens, self.cfg, ctx,
+                                 caches=caches)
+                caches = mask_cache_padding(self.cfg, out.caches, plen)
+                logits = jnp.take_along_axis(
+                    out.logits, (plen - 1)[:, None, None], axis=1)[:, 0]
+                return (self._pin_logits(logits), self._pin_caches(caches),
+                        out.trace)
+
+            self._prefill_traced = prefill_traced
+        top_n = (self.cfg.moe.quant.top_n_restore
+                 if self.cfg.moe is not None else 0)
+        b = toks.shape[0]
+        lg = rc = None
+        for _ in range(eng.cfg.max_reruns + 1):
+            caches = self._make_caches(b, cache_len)
+            lg, rc, tr = self._prefill_traced(self.params, caches,
+                                              jnp.asarray(toks), plen)
+            needs = eng.missing_for_forward_trace(np.asarray(tr), top_n)
+            if not needs:
+                return lg, rc
+            unresolved = eng.demand_stage(needs)
+            eng.reruns += 1
+            if unresolved:
+                break          # stalled copies: serve this prefill degraded
+        return lg, rc
+
+    def _run_chunk(self, caches, logits, key, plan, steps: int, active):
+        """One decode chunk under streaming.
+
+        Warm steady state (``may_miss`` False) runs the donating loop
+        untouched.  Otherwise: optimistic execution on the current
+        containers through the NON-donating twin, then — on a true miss —
+        either stage-and-re-run to a fixpoint (miss_policy 'block':
+        accepted chunk is token-identical to all-resident) or accept the
+        fallback-served chunk and stage asynchronously for later chunks
+        ('degrade').  Returns ``((logits, caches, key, ys), degraded)``.
+        """
+        eng = self._stream
+        eng.integrate_ready()
+        top_ns, caps = eng.plan_vectors(
+            len(self._stores), plan,
+            self.cfg.moe.quant.top_n_restore if self.cfg.moe else 0)
+        plan_dev = self._plan_device(plan)
+        temp = self.scfg.temperature
+        if not eng.may_miss(top_ns, caps):
+            return self._decode_loop(self.params, caches, logits, key,
+                                     plan_dev, steps, temp), 0
+        out = needs = None
+        for _ in range(eng.cfg.max_reruns + 1):
+            out = self._decode_loop_spec(self.params, caches, logits, key,
+                                         plan_dev, steps, temp)
+            tr = np.asarray(out[3][2])
+            needs = eng.missing_for_trace(tr, active, top_ns, caps)
+            if not needs:
+                return out, 0
+            if eng.cfg.miss_policy == "degrade":
+                eng.stage_async(needs)
+                break
+            unresolved = eng.demand_stage(needs)
+            eng.reruns += 1
+            if unresolved:
+                bad = set(unresolved)
+                needs = [n for n in needs if (n[0], n[1]) in bad]
+                break
+        degraded = eng.count_affected_tokens(
+            np.asarray(out[3][2]), active,
+            [(l, e) for (l, e, _w, _f) in needs])
+        eng.degraded_tokens += degraded
+        return out, degraded
 
     # -- generation (one fixed batch) --------------------------------------
     def generate(self, prompt_tokens: np.ndarray, max_new: int = 32,
@@ -448,20 +617,28 @@ class ServeEngine:
         b, plen = prompt_tokens.shape
         padded = self._pad_prompt(np.asarray(prompt_tokens, np.int32))
         cache_len = bucket_len(padded.shape[1] + max_new + 1)
-        caches = self._make_caches(b, cache_len)
+        plen_arr = jnp.full((b,), plen, jnp.int32)
         t0 = time.time()
-        logits, caches = self._prefill(
-            self.params, caches, jnp.asarray(padded),
-            jnp.full((b,), plen, jnp.int32))
+        if self._stream is not None:
+            logits, caches = self._prefill_streamed(padded, plen_arr,
+                                                    cache_len)
+        else:
+            caches = self._make_caches(b, cache_len)
+            logits, caches = self._prefill(
+                self.params, caches, jnp.asarray(padded), plen_arr)
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
         plan = self._current_plan()
+        key = self._place_replicated(jax.random.key(seed))
         t1 = time.time()
-        logits, caches, _key, ys = self._decode_loop(
-            self.params, caches, logits,
-            self._place_replicated(jax.random.key(seed)),
-            self._plan_device(plan), max_new, self.scfg.temperature)
+        if self._stream is not None:
+            (logits, caches, _key, ys), _deg = self._run_chunk(
+                caches, logits, key, plan, max_new, np.ones((b,), bool))
+        else:
+            logits, caches, _key, ys = self._decode_loop(
+                self.params, caches, logits, key,
+                self._plan_device(plan), max_new, self.scfg.temperature)
         logits.block_until_ready()
         t_decode = time.time() - t1
 
@@ -469,13 +646,37 @@ class ServeEngine:
         logprobs = np.asarray(ys[1]).T                # (B, max_new)
         trace = (np.asarray(ys[2])
                  if self.collect_router_trace and ys[2] is not None else None)
-        report = (self._meter_offload(trace, plan)
-                  if trace is not None and self._stores else None)
+        report = None
+        if trace is not None and self._stores:
+            if self._stream is not None:
+                # replay the accepted routing (ledgered stages are
+                # consumed), then flush staged-but-unrouted copies as
+                # wasted prefetch INSIDE the report window, so the report
+                # covers every byte the chunk put on the link
+                from ..offload.store import (offload_report,
+                                             replay_decode_trace,
+                                             snapshot_offload)
+                top_n = (cfg.moe.quant.top_n_restore if plan is None
+                         else plan.top_n)
+                snap = snapshot_offload(self._stores, self._prefetcher)
+                ntok, _sb = replay_decode_trace(
+                    self._stores, trace, policy=self._offload_policy,
+                    top_n=top_n,
+                    rank_caps=None if plan is None else plan.rank_cap,
+                    prefetcher=self._prefetcher)
+                self._stream.flush_unclaimed()
+                report = offload_report(self._stores, self._prefetcher,
+                                        snap, ntok, self._offload_policy)
+            else:
+                report = self._meter_offload(trace, plan)
         if report is not None and self._controller is not None:
             self._controller.update(report["total_bytes"], report["tokens"],
                                     shard_bytes=report["per_shard_bytes"])
-        return GenerationResult(toks, logprobs, t_prefill, t_decode, max_new,
-                                router_trace=trace, offload_report=report)
+        return GenerationResult(
+            toks, logprobs, t_prefill, t_decode, max_new,
+            router_trace=trace, offload_report=report,
+            stream_report=(self._stream.report()
+                           if self._stream is not None else None))
 
     # -- continuous-batching serving ---------------------------------------
     def serve(self, requests: Iterable[Request], *,
@@ -546,9 +747,13 @@ class ServeEngine:
 
             plan = self._current_plan()
             td = time.perf_counter()
-            logits, caches, key, ys = self._decode_loop(
-                self.params, caches, logits, key, self._plan_device(plan),
-                chunk, self.scfg.temperature)
+            if self._stream is not None:
+                (logits, caches, key, ys), _deg = self._run_chunk(
+                    caches, logits, key, plan, chunk, sched.active_mask())
+            else:
+                logits, caches, key, ys = self._decode_loop(
+                    self.params, caches, logits, key,
+                    self._plan_device(plan), chunk, self.scfg.temperature)
             logits.block_until_ready()
             decode_s += time.perf_counter() - td
             chunks += 1
@@ -576,6 +781,12 @@ class ServeEngine:
                         prefetcher=self._prefetcher)
                     metered_tokens += ntok
                     sched.add_slot_bytes(slot_bytes, uid_map)
+                    if self._stream is not None:
+                        # staged copies the accepted routing never
+                        # touched become wasted prefetch THIS chunk, so
+                        # the controller's `moved` sees every byte the
+                        # chunk put on the link
+                        self._stream.flush_unclaimed()
                     if self._controller is not None:
                         # chunk boundary: the chunk's wire bytes (demand +
                         # compensator + prefetch) close the control loop;
@@ -600,7 +811,10 @@ class ServeEngine:
                           plan_trace=(np.stack(plans) if plans else None),
                           shard_bytes=(np.asarray(report["per_shard_bytes"],
                                                   np.int64)
-                                       if report is not None else None))
+                                       if report is not None else None),
+                          stream_report=(self._stream.report()
+                                         if self._stream is not None
+                                         else None))
 
     def generate_many(self, prompts: Sequence[np.ndarray],
                       max_new: int = 32, *,

@@ -1,5 +1,10 @@
 """Fault tolerance: checkpoint/restart continuity, torn-write recovery,
-straggler monitoring, failure injection."""
+straggler monitoring, failure injection — and transfer-fault injection
+for the async expert-streaming path (delay/stall backends against the
+``offload/staging.py`` engine: slow copies may only block on a true
+miss, a stalled copy degrades to the resident low-bit fallback instead
+of wedging decode, and the stall/degraded-token counts surface in
+``ServeStats.stream_report``)."""
 import json
 import os
 
@@ -9,7 +14,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
-from repro.config import ModelConfig, TrainConfig
+from repro.config import (ModelConfig, MoEConfig, QuantConfig, ServeConfig,
+                          StreamConfig, TrainConfig)
+from repro.models import init_params
 from repro.train import FailureInjector, StragglerMonitor, train
 
 
@@ -89,6 +96,104 @@ def test_straggler_monitor_flags_and_aborts():
     mon2.observe(1, 0.1)
     with pytest.raises(TimeoutError):
         mon2.observe(2, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# transfer-fault injection: async expert streaming under slow/wedged DMA
+# ---------------------------------------------------------------------------
+
+def _stream_setup():
+    cfg = ModelConfig(
+        name="stream-fault", family="moe", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=128,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2, rank_budget=16,
+                                        top_n_restore=1, hqq_iters=2)))
+    params = init_params(jax.random.key(1), cfg, jnp.float32)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, 128, (int(n),)).astype(np.int32)
+               for n in (4, 6)]
+    return cfg, params, prompts
+
+
+def _stream_engine(cfg, params, stream_cfg=None, backend=None):
+    from repro.models.transformer import compress_moe_params
+    from repro.serve import ServeEngine
+    qp, cq, stacks = compress_moe_params(params, cfg)
+    eng = ServeEngine(cq, qp, ServeConfig(temperature=0.0), quantized=True)
+    eng.attach_offload(stacks, policy="ours", cache_capacity=8)
+    eng.attach_streaming(stream_cfg or StreamConfig(enabled=True),
+                         backend=backend)
+    return eng
+
+
+def _serve(eng, prompts):
+    return eng.generate_many(prompts, max_new=6, num_slots=2, chunk=4)
+
+
+def test_slow_copies_block_only_on_true_miss():
+    """A uniformly slow link (every copy delayed) stalls the cold first
+    pass — and may not add a single stall or copy once every routed
+    expert is staged (the warm pass has no true miss to block on)."""
+    from repro.offload.staging import FakeTransferBackend
+    cfg, params, prompts = _stream_setup()
+    backend = FakeTransferBackend(delay_s=0.01)
+    eng = _stream_engine(cfg, params, backend=backend)
+    stats = _serve(eng, prompts)
+    sr = stats.stream_report
+    assert sr["stalls"] > 0 and sr["stall_s"] > 0      # cold misses blocked
+    assert sr["degraded_tokens"] == 0                  # ...but were served
+    copies0, stalls0 = backend.copies, eng.stream.stalls
+    stats2 = _serve(eng, prompts)
+    assert backend.copies == copies0, "warm pass issued copies"
+    assert eng.stream.stalls == stalls0, "warm pass blocked without a miss"
+    # delayed copies change timing only, never tokens
+    ref = _serve(_stream_engine(cfg, params), prompts)
+    assert [r.tokens.tolist() for r in stats2.results] == \
+        [r.tokens.tolist() for r in ref.results]
+
+
+def test_stalled_copy_degrades_to_fallback():
+    """A wedged DMA channel (copies for one expert never complete) must
+    not wedge decode: after ``stall_timeout_s`` the affected tokens are
+    served by the device-resident low-bit fallback, the stalled slot is
+    abandoned, and the counts surface in ``ServeStats.stream_report``."""
+    from repro.offload.staging import FakeTransferBackend
+    cfg, params, prompts = _stream_setup()
+    backend = FakeTransferBackend(stall=(1,))        # expert 1 never lands
+    eng = _stream_engine(
+        cfg, params,
+        StreamConfig(enabled=True, miss_policy="degrade",
+                     stall_timeout_s=0.05),
+        backend=backend)
+    stats = _serve(eng, prompts)                     # must terminate
+    sr = stats.stream_report
+    assert sr["degraded_tokens"] > 0
+    assert sr["abandoned_copies"] > 0 or sr["in_flight"] > 0
+    # the meter never counts the wedged expert as served at full fidelity:
+    # metered bytes still reconcile with observed copies exactly
+    for s in eng._stores:
+        assert s.total_bytes == s.observed_copy_bytes
+
+
+def test_stall_under_block_policy_degrades_after_timeout():
+    """miss_policy='block' waits for a stalled copy up to the timeout,
+    then degrades the chunk rather than hanging the scan."""
+    from repro.offload.staging import FakeTransferBackend
+    cfg, params, prompts = _stream_setup()
+    backend = FakeTransferBackend(stall=(2,))
+    eng = _stream_engine(
+        cfg, params,
+        StreamConfig(enabled=True, miss_policy="block",
+                     stall_timeout_s=0.05, max_reruns=2),
+        backend=backend)
+    stats = _serve(eng, prompts)
+    sr = stats.stream_report
+    assert sr["stalls"] > 0
+    assert sr["degraded_tokens"] > 0
+    for s in eng._stores:
+        assert s.total_bytes == s.observed_copy_bytes
 
 
 def test_elastic_restore_onto_new_sharding(tmp_path):

@@ -1,0 +1,269 @@
+"""Hypothesis property tests for the staging-ring state machine.
+
+The ``StagingRing`` (offload/staging.py) is the fixed-capacity slot pool
+each layer's async H2D copies move through: FREE --issue--> IN_FLIGHT
+--poll--> READY --release--> FREE, with ``abandon`` the stalled-copy
+escape hatch.  The serve engine carries ring bookkeeping across scan
+chunks via ``snapshot``/``restore``.  Invariants pinned here:
+
+- a slot is never handed out again while its copy is in flight (or
+  staged-but-unconsumed): issue only ever claims FREE slots, and a held
+  slot's ``generation`` stays fixed until release/abandon,
+- capacity is respected under arbitrary issue/complete/release/abandon
+  interleavings — ``try_issue`` returns None at occupancy == capacity,
+  it never queues past the ring,
+- bookkeeping state round-trips exactly through ``snapshot``/``restore``
+  at any point in the interleaving (the chunk-boundary contract).
+
+The stateful hypothesis machine needs the ``hypothesis`` package (CI
+installs it); the deterministic edge tests and the seeded-interleaving
+fallback below run everywhere, so the ring tier is never a no-op.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, precondition, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+from repro.offload.staging import (FREE, IN_FLIGHT, READY,
+                                   FakeTransferBackend, StagingRing)
+
+
+def _payload():
+    return np.zeros((2,), np.float32)
+
+
+def make_ring(capacity, delay_s=0.0, stall=None, clock=None):
+    clock = clock or (lambda: 0.0)
+    backend = FakeTransferBackend(delay_s=delay_s, stall=stall, clock=clock)
+    return StagingRing(capacity, backend, clock=clock, tag=0), backend
+
+
+# ---------------------------------------------------------------------------
+# stateful interleaving machine
+# ---------------------------------------------------------------------------
+
+class _RingDriver:
+    """Shared op interpreter: one step of the ring interleaving, with
+    every state-machine invariant asserted.  The hypothesis machine and
+    the seeded fallback below both drive this, so the checked properties
+    are identical with and without hypothesis installed."""
+
+    def __init__(self, cap: int):
+        self.blocked = set()
+        self.ring, self.backend = make_ring(
+            cap, stall=lambda tag: tag in self.blocked)
+        self.next_expert = 0
+        # slot index -> (expert, generation at issue, kind); present
+        # while we hold the slot (IN_FLIGHT or READY)
+        self.held = {}
+
+    def issue(self, kind):
+        e = self.next_expert
+        self.next_expert += 1
+        self.blocked.add((0, e, kind))
+        before = self.ring.occupancy
+        slot = self.ring.try_issue(e, _payload(), 16, kind=kind)
+        if before == self.ring.capacity:
+            assert slot is None, "issued past ring capacity"
+            self.blocked.discard((0, e, kind))
+            return
+        assert slot is not None
+        assert slot.index not in self.held, \
+            "issue handed out a slot still held by an earlier copy"
+        assert slot.state == IN_FLIGHT and slot.expert == e
+        self.held[slot.index] = (e, slot.generation, kind)
+
+    def complete_and_release(self, idx):
+        slot = self.ring.slots[idx]
+        e, gen, kind = self.held[idx]
+        self.blocked.discard((0, e, kind))
+        self.ring.poll()
+        assert slot.state == READY, "unstalled copy did not become READY"
+        assert slot.generation == gen, "slot reused while held"
+        self.ring.release(slot)
+        assert slot.state == FREE and slot.expert == -1
+        del self.held[idx]
+
+    def abandon(self, idx):
+        slot = self.ring.slots[idx]
+        e, gen, kind = self.held[idx]
+        assert slot.state == IN_FLIGHT and slot.generation == gen
+        self.ring.abandon(slot)          # stalled-copy escape hatch
+        assert slot.state == FREE
+        del self.held[idx]
+
+    def poll_is_stable(self):
+        snap = [(s.state, s.expert, s.generation) for s in self.ring.slots]
+        self.ring.poll()                  # every copy still blocked or READY
+        self.ring.poll()
+        after = [(s.state, s.expert, s.generation) for s in self.ring.slots]
+        # a stalled IN_FLIGHT copy must stay IN_FLIGHT; READY stays READY
+        for (st0, e0, g0), (st1, e1, g1) in zip(snap, after):
+            if st0 in (FREE, READY):
+                assert st1 == st0
+            assert (e1, g1) == (e0, g0)
+
+    def snapshot_roundtrip(self):
+        snap = self.ring.snapshot()
+        self.ring.restore(snap)
+        assert self.ring.snapshot() == snap
+
+    def in_flight_indices(self):
+        return [s.index for s in self.ring.slots if s.state == IN_FLIGHT]
+
+    def check_invariants(self):
+        assert self.ring.occupancy <= self.ring.capacity
+        # every slot we hold is still ours: same expert, same generation
+        for idx, (e, gen, _kind) in self.held.items():
+            slot = self.ring.slots[idx]
+            assert slot.state in (IN_FLIGHT, READY)
+            assert slot.expert == e and slot.generation == gen
+        # and every non-FREE slot is accounted for
+        busy = {s.index for s in self.ring.slots if s.state != FREE}
+        assert busy == set(self.held)
+
+
+if HAVE_HYPOTHESIS:
+    class RingMachine(RuleBasedStateMachine):
+        """Arbitrary op interleavings; every copy starts stalled (its
+        tag sits in ``driver.blocked``), so the machine — not wall
+        time — decides when each copy completes, making in-flight
+        windows arbitrarily long relative to the other operations."""
+
+        @initialize(cap=st.integers(1, 4))
+        def setup(self, cap):
+            self.driver = _RingDriver(cap)
+
+        @rule(kind=st.sampled_from(["w", "f"]))
+        def issue(self, kind):
+            self.driver.issue(kind)
+
+        @precondition(lambda self: self.driver.in_flight_indices())
+        @rule(pick=st.randoms(use_true_random=False))
+        def complete_and_release(self, pick):
+            self.driver.complete_and_release(
+                pick.choice(self.driver.in_flight_indices()))
+
+        @precondition(lambda self: self.driver.in_flight_indices())
+        @rule(pick=st.randoms(use_true_random=False))
+        def abandon(self, pick):
+            self.driver.abandon(
+                pick.choice(self.driver.in_flight_indices()))
+
+        @rule()
+        def poll_is_stable(self):
+            self.driver.poll_is_stable()
+
+        @rule()
+        def snapshot_roundtrip(self):
+            self.driver.snapshot_roundtrip()
+
+        @invariant()
+        def ring_invariants(self):
+            # setup() is itself a rule: hypothesis checks invariants
+            # once before @initialize has run
+            if hasattr(self, "driver"):
+                self.driver.check_invariants()
+
+    TestRingMachine = RingMachine.TestCase
+    TestRingMachine.settings = settings(max_examples=40, deadline=None,
+                                        stateful_step_count=30)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_seeded_interleavings(seed):
+    """Hypothesis-free fallback over the same driver + invariants."""
+    rng = np.random.default_rng(seed)
+    drv = _RingDriver(int(rng.integers(1, 5)))
+    for _ in range(120):
+        op = rng.integers(0, 5)
+        inflight = drv.in_flight_indices()
+        if op == 0 or not inflight:
+            drv.issue("w" if rng.integers(2) else "f")
+        elif op == 1:
+            drv.complete_and_release(int(rng.choice(inflight)))
+        elif op == 2:
+            drv.abandon(int(rng.choice(inflight)))
+        elif op == 3:
+            drv.poll_is_stable()
+        else:
+            drv.snapshot_roundtrip()
+        drv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# deterministic edges
+# ---------------------------------------------------------------------------
+
+def test_capacity_one_ring_blocks_second_issue():
+    ring, _ = make_ring(1)
+    s0 = ring.try_issue(0, _payload(), 8)
+    assert s0 is not None and ring.occupancy == 1
+    assert ring.try_issue(1, _payload(), 8) is None
+    ring.poll()
+    assert s0.state == READY             # delay 0, no stall
+    ring.release(s0)
+    assert ring.try_issue(1, _payload(), 8) is not None
+
+
+def test_delay_gates_readiness_on_injected_clock():
+    t = [0.0]
+    ring, _ = make_ring(2, delay_s=1.0, clock=lambda: t[0])
+    slot = ring.try_issue(3, _payload(), 8)
+    ring.poll()
+    assert slot.state == IN_FLIGHT       # 0s elapsed < 1s delay
+    t[0] = 0.999
+    ring.poll()
+    assert slot.state == IN_FLIGHT
+    t[0] = 1.0
+    ring.poll()
+    assert slot.state == READY
+
+
+def test_stalled_copy_never_ready_and_wait_times_out():
+    ring, _ = make_ring(2, stall=lambda tag: True,
+                        clock=__import__("time").monotonic)
+    slot = ring.try_issue(5, _payload(), 8)
+    assert not ring.wait(slot, timeout_s=0.05)
+    assert slot.state == IN_FLIGHT
+    ring.abandon(slot)                   # the degrade path frees the slot
+    assert slot.state == FREE and ring.occupancy == 0
+
+
+def test_wait_returns_true_for_ready_copy():
+    ring, _ = make_ring(2, clock=__import__("time").monotonic)
+    slot = ring.try_issue(7, _payload(), 8)
+    assert ring.wait(slot, timeout_s=1.0)
+    assert slot.state == READY
+
+
+def test_release_requires_ready_and_abandon_requires_in_flight():
+    ring, _ = make_ring(2, stall=lambda tag: True)
+    slot = ring.try_issue(0, _payload(), 8)
+    with pytest.raises(AssertionError):
+        ring.release(slot)               # still IN_FLIGHT
+    ring.abandon(slot)
+    with pytest.raises(AssertionError):
+        ring.abandon(slot)               # already FREE
+
+
+def test_snapshot_restore_capacity_mismatch_rejected():
+    ring, _ = make_ring(2)
+    other, _ = make_ring(3)
+    with pytest.raises(ValueError):
+        other.restore(ring.snapshot())
+
+
+def test_find_locates_staged_expert_by_kind():
+    ring, _ = make_ring(2)
+    ring.try_issue(4, _payload(), 8, kind="w")
+    ring.try_issue(4, _payload(), 8, kind="f")
+    assert ring.find(4, "w").kind == "w"
+    assert ring.find(4, "f").kind == "f"
+    assert ring.find(9, "w") is None

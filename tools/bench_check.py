@@ -48,8 +48,10 @@ GATED = {
     "max_shard_kb_per_tok": "down",
     "fused_hbm_mb": "down",
     "hbm_reduction_x": "up",
+    "overlap_efficiency": "up",
 }
-_NOISY = {"tok_s", "goodput_tok_s", "sim_tok_s"}   # wall-clock-derived
+_NOISY = {"tok_s", "goodput_tok_s", "sim_tok_s",
+          "overlap_efficiency"}   # wall-clock-derived
 
 
 def _rows_by_name(entry):
