@@ -22,8 +22,15 @@
 #   make tier1-stream    async expert-streaming tier: the metered-bytes
 #                        oracle, staging-ring state machine (hypothesis),
 #                        and transfer fault-injection tests
+#   make tier1-paged     paged-KV-cache tier: paged-vs-contiguous token
+#                        identity across ragged mixes, page-pool
+#                        refcount/aliasing properties, prefix reuse,
+#                        scheduler timing fixes
 #   make bench-stream    compute/transfer overlap sweep (streamed vs
 #                        resident decode; appends to BENCH_serving.json)
+#   make bench-paged     paged-cache HBM bytes/token + prefix-reuse sweep
+#                        vs the bucketed baseline (appends to
+#                        BENCH_serving.json; cache_mb_per_tok gated down)
 #   make lint    repro-lint static analysis over src/ tools/ benchmarks/
 #                (jit purity, canonical byte accounting, tile legality;
 #                see tools/repro_lint.py --list-rules)
@@ -35,9 +42,10 @@
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 tier1-dist tier1-kernels tier1-stream test bench-smoke \
-	bench-ep bench-frontier bench-kernels bench-stream bench-check \
-	compress-smoke lint docs-check check serve-example
+.PHONY: tier1 tier1-dist tier1-kernels tier1-stream tier1-paged test \
+	bench-smoke bench-ep bench-frontier bench-kernels bench-stream \
+	bench-paged bench-check compress-smoke lint docs-check check \
+	serve-example
 
 # dist-marked tests are excluded here only to avoid running them twice
 # in CI — tier1-dist runs exactly those, in-process on 8 host devices;
@@ -63,6 +71,15 @@ tier1-stream:
 	$(PY) -m pytest -x -q tests/test_streaming_oracle.py \
 		tests/test_staging_ring.py tests/test_fault_tolerance.py
 
+# the paged-KV-cache correctness tier: paged decode token-identical to
+# the contiguous path across ragged/int8/local-window mixes, page-pool
+# refcount + no-aliasing properties, shared-prefix reuse, and the
+# scheduler timing/termination regressions
+# dist-marked rows (ep=2 parity) run under tier1-dist like every other
+# dist test; this tier is the single-device matrix
+tier1-paged:
+	$(PY) -m pytest -x -q -m "not dist" tests/test_paged_cache.py
+
 test:
 	$(PY) -m pytest -q
 
@@ -81,6 +98,9 @@ bench-kernels:
 
 bench-stream:
 	$(PY) benchmarks/bench_serving.py --quick --stream
+
+bench-paged:
+	$(PY) benchmarks/bench_serving.py --quick --paged
 
 # wall-clock tok/s is noisy on shared CI hosts: gate it loosely there via
 # TOL_TOK_S; the deterministic bytes/token metrics keep the tight 10%
@@ -105,8 +125,10 @@ docs-check:
 # single meta-target for the gate bundle CI runs (not the individual
 # targets), so adding a gate here adds it to CI automatically; the
 # streaming tier rides along because its oracle is the cheap end-to-end
-# proof that the offload byte meter still matches real data movement
-check: lint docs-check bench-check tier1-stream
+# proof that the offload byte meter still matches real data movement,
+# and the paged tier because token identity vs the contiguous cache is
+# the paged path's correctness oracle
+check: lint docs-check bench-check tier1-stream tier1-paged
 
 serve-example:
 	$(PY) examples/serve_offload.py

@@ -33,9 +33,15 @@ compute/transfer overlap efficiency next to the metered-bytes oracle
 (observed ring-copy bytes == metered wire bytes, asserted), with the
 streamed decode checked token-identical to the resident baseline.
 
+``--paged`` serves the same ragged workload against the bucketed-
+contiguous cache, the paged cache, and the paged cache with shared-
+prefix reuse, reporting cache HBM bytes/token (gated 'down') and the
+prefix hit rate — with token identity between all three asserted.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --quick
       PYTHONPATH=src python benchmarks/bench_serving.py --quick --frontier
       PYTHONPATH=src python benchmarks/bench_serving.py --quick --stream
+      PYTHONPATH=src python benchmarks/bench_serving.py --quick --paged
 """
 from __future__ import annotations
 
@@ -123,6 +129,7 @@ def run(quick: bool = True, rates: Optional[Tuple[float, ...]] = None,
             "p95_ms": lat[95.0] * 1e3,
             "requests": float(len(stats.results)),
             "chunks": float(stats.chunks),
+            "cache_mb_per_tok": stats.cache_hbm_bytes_per_token / 2 ** 20,
         }
         rep = stats.offload_report
         if rep is not None:
@@ -136,6 +143,76 @@ def run(quick: bool = True, rates: Optional[Tuple[float, ...]] = None,
             })
         rows.append(row)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (--paged): HBM bytes/token vs the bucketed baseline
+# ---------------------------------------------------------------------------
+
+def run_paged(quick: bool = True) -> List[Dict]:
+    """Paged-KV-cache sweep: the same ragged workload served three ways —
+    bucketed-contiguous baseline, paged, and paged with shared-prefix
+    reuse (every request carrying a common system prompt).
+
+    Token identity between all paged rows and their contiguous baseline
+    is asserted here (not just in the test tier), so the bench never
+    reports HBM savings won by serving different tokens.  Gated columns:
+    ``cache_mb_per_tok`` (down — the paged cache's reason to exist) and
+    ``prefix_hit_rate`` (up, prefix row only).
+    """
+    n = 8 if quick else 24
+    max_new = 12 if quick else 32
+    slots, chunk, ps = 2, 4, 16
+    eng = _engine(offload=False)
+    vocab = eng.cfg.vocab_size
+
+    def workload(prefix_len: int = 0):
+        reqs = synthetic_workload(n, vocab, max_new=max_new)
+        if prefix_len:
+            sysp = np.arange(1, prefix_len + 1, dtype=np.int32) % vocab
+            for r in reqs:
+                r.tokens = np.concatenate([sysp, np.asarray(r.tokens)])
+        return reqs
+
+    def serve_warm(reqs_fn, **kw):
+        # each cache layout (and pool envelope) compiles its own decode
+        # loop: serve the workload once to warm it, measure the re-serve
+        eng.serve(reqs_fn(), num_slots=slots, chunk=chunk, **kw)
+        return eng.serve(reqs_fn(), num_slots=slots, chunk=chunk, **kw)
+
+    def row(name, stats):
+        pr = stats.page_report or {}
+        return {
+            "name": f"paged/{name}",
+            "tok_s": stats.tokens_per_s,
+            "cache_mb": stats.cache_hbm_bytes / 2 ** 20,
+            "cache_mb_per_tok": stats.cache_hbm_bytes_per_token / 2 ** 20,
+            "prefill_tokens": float(stats.prefill_tokens),
+            "prefix_hit_rate": pr.get("prefix_hit_rate", 0.0),
+            "peak_shared_ref": float(pr.get("peak_shared_ref", 0)),
+            "chunks": float(stats.chunks),
+        }
+
+    def toks(stats):
+        return [r.tokens.tolist() for r in stats.results]
+
+    base = serve_warm(workload)
+    paged = serve_warm(workload, page_size=ps)
+    assert toks(paged) == toks(base), "paged decode diverged from bucketed"
+    assert paged.cache_hbm_bytes < base.cache_hbm_bytes, (
+        "paged cache must hold strictly less HBM than the bucketed pool")
+
+    # shared-system-prompt traffic: prefix reuse vs the same paged run
+    pfx = 4 * ps if quick else 8 * ps
+    pwork = lambda: workload(pfx)
+    pbase = serve_warm(pwork, page_size=ps)
+    pre = serve_warm(pwork, page_size=ps, prefix_cache=True)
+    assert toks(pre) == toks(pbase), "prefix reuse diverged from paged"
+    assert pre.page_report["peak_shared_ref"] >= 2
+    assert pre.prefill_tokens < pbase.prefill_tokens, (
+        "shared-span prefill was not reused")
+    return [row("contiguous", base), row("paged", paged),
+            row("prefix-base", pbase), row("prefix", pre)]
 
 
 # ---------------------------------------------------------------------------
@@ -469,6 +546,10 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="async expert-streaming sweep: overlap efficiency "
                          "+ metered-bytes oracle vs the resident baseline")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV-cache sweep: cache HBM bytes/token and "
+                         "prefix reuse vs the bucketed-contiguous "
+                         "baseline (token identity asserted)")
     ap.add_argument("--mesh", default="",
                     help="'ep=N': sweep expert-parallel shard counts 1..N "
                          "(CPU needs XLA_FLAGS=--xla_force_host_platform_"
@@ -489,6 +570,9 @@ def main():
     elif args.stream:
         mode = "stream"
         rows = run_stream(quick=args.quick)
+    elif args.paged:
+        mode = "paged"
+        rows = run_paged(quick=args.quick)
     elif args.frontier:
         mode = "frontier"
         rows = run_frontier(quick=args.quick)

@@ -380,6 +380,13 @@ class ServeConfig:
     # (the scheduler refills completed slots between fixed-shape chunks)
     num_slots: int = 4
     chunk_steps: int = 8
+    # paged KV cache: page_size > 0 (power of two) switches the serve
+    # cache's global-attention layers to block-table paging; prefix_cache
+    # additionally refcount-shares physical pages across requests whose
+    # prompts share full leading pages (prefill for the shared span runs
+    # once)
+    page_size: int = 0
+    prefix_cache: bool = False
     # adaptive top-n restoration under a bandwidth budget; when enabled,
     # ServeEngine.attach_offload auto-attaches the controller (the
     # controller feeds on the offload byte meters)

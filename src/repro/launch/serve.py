@@ -104,6 +104,16 @@ def main():
     ap.add_argument("--chunk", type=int, default=8,
                     help="decode steps per scan chunk; the scheduler "
                          "refills finished slots between chunks")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: allocate attention cache in "
+                         "pages of this many tokens (power of two; 0 = "
+                         "contiguous bucketed cache). Capacity is "
+                         "per-request instead of worst-case-bucketed, "
+                         "decode still compiles once")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcount-share physical pages across requests "
+                         "with a common prompt prefix so the shared "
+                         "span's prefill runs once (needs --page-size)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="",
                     help="expert-parallel serving mesh, e.g. 'ep=4': "
@@ -219,7 +229,8 @@ def main():
             max_new=args.max_new, min_len=max(args.prompt_len // 2, 1),
             max_len=args.prompt_len, seed=args.seed)
         stats = eng.serve(reqs, num_slots=args.slots, chunk=args.chunk,
-                          seed=args.seed)
+                          seed=args.seed, page_size=args.page_size,
+                          prefix_cache=args.prefix_cache)
         lat = stats.latency_percentiles((50.0, 95.0))
         print(f"{cfg.name}: {args.requests} requests on {args.slots} slots "
               f"(chunk {args.chunk}, rate "
@@ -228,6 +239,17 @@ def main():
               f"latency p50 {lat[50.0] * 1e3:.0f}ms "
               f"p95 {lat[95.0] * 1e3:.0f}ms, "
               f"{stats.chunks} chunks, compiles {eng.num_compiles}")
+        print(f"cache: {stats.cache_hbm_bytes / 2**20:.2f} MiB HBM "
+              f"({stats.cache_hbm_bytes_per_token / 2**10:.1f} KiB/token), "
+              f"{stats.prefill_tokens} prefill tokens")
+        pr = stats.page_report
+        if pr is not None:
+            print(f"pages ({pr['num_pages']}x{pr['page_size']}): "
+                  f"{pr['allocs']} allocs, prefix hit "
+                  f"{pr['prefix_hit_rate']:.0%} "
+                  f"({pr['prefix_hits']}/{pr['prefix_queries']}), "
+                  f"peak shared ref {pr['peak_shared_ref']}, "
+                  f"{pr['evictions']} evictions")
         rep = stats.offload_report
         if rep is not None:
             print(f"offload ({rep['policy']}): "

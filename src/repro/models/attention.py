@@ -128,34 +128,37 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      scale: Optional[float] = None,
                      k_scale: Optional[jax.Array] = None,
                      v_scale: Optional[jax.Array] = None) -> jax.Array:
-    """One-token attention against a (possibly ring) KV cache.
+    """Step-mode attention against a (possibly ring or paged) KV cache.
 
-    q: (B, 1, H, hd); caches: (B, Sc, KVH, hd); kv_pos: (B, Sc) absolute
-    positions with -1 for unwritten slots; cur_pos: (B,) current position.
+    q: (B, Sq, H, hd); caches: (B, Sc, KVH, hd); kv_pos: (B, Sc) absolute
+    positions with -1 for unwritten slots; cur_pos: (B,) current position,
+    or (B, Sq) per-query positions (suffix prefill over a reused-prefix
+    cache appends Sq > 1 tokens in one step).
 
     int8 KV: when k_scale/v_scale (B, Sc, KVH) are given, the caches hold
     int8 codes; the per-slot scales fold into the score matrix and the
     softmax weights — the dequantized KV never materializes, so HBM reads
     stay at the packed byte count.
     """
-    b, _, h, hd = q.shape
+    b, sq, h, hd = q.shape
     kvh = k_cache.shape[2]
     g = h // kvh
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
-    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32) * scale
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32) * scale
     s = _gqa_scores(qg, k_cache.astype(jnp.float32))
     if k_scale is not None:   # (B, Sc, KVH) -> (B, KVH, 1, 1, Sc)
         s = s * jnp.moveaxis(k_scale.astype(jnp.float32), 1, -1)[:, :, None,
                                                                  None, :]
     s = softcap(s, attn_softcap)
-    bias = _mask_bias(cur_pos[:, None], kv_pos, True, window)
+    q_pos = cur_pos[:, None] if cur_pos.ndim == 1 else cur_pos
+    bias = _mask_bias(q_pos, kv_pos, True, window)
     s = s + bias[:, None, None, :, :]
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:   # fold V scales into the softmax weights
         p = p * jnp.moveaxis(v_scale.astype(jnp.float32), 1, -1)[:, :, None,
                                                                  None, :]
     out = _gqa_out(p, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -93,6 +93,182 @@ def dequant_scales(cache: Dict[str, jax.Array]):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (block-table paging, vLLM-style)
+# ---------------------------------------------------------------------------
+#
+# Instead of one contiguous (slots, max_len, ...) buffer per plane, the
+# serve engine can keep a physical *page pool* (num_pages, page_size, ...)
+# shared by every slot, plus a per-slot block table (slots, max_blocks) of
+# int32 page ids (-1 = unmapped).  Token capacity is then allocated in
+# page_size quanta per request instead of a power-of-two bucket per slot,
+# and two slots may map the same physical page (refcounted shared prefix).
+#
+# Physical page 0 is reserved as a WRITE SINK: decode steps on retired /
+# empty slots (block entry -1, or a position past the slot's mapped range)
+# scatter into it instead of corrupting live pages, and it is never
+# gathered (gathers mask positions where the block entry is negative).
+
+TRASH_PAGE = 0
+
+
+def is_paged(cache) -> bool:
+    return isinstance(cache, dict) and "block" in cache
+
+
+def init_paged_attn_cache(num_slots: int, num_pages: int, page_size: int,
+                          max_blocks: int, kv_heads: int, head_dim: int,
+                          dtype=jnp.bfloat16, kv_bits: int = 16
+                          ) -> Dict[str, jax.Array]:
+    """Page pool + block table.  ``num_pages`` INCLUDES the trash page."""
+    out = {
+        "block": jnp.full((num_slots, max_blocks), -1, jnp.int32),
+        "pos": jnp.full((num_pages, page_size), -1, jnp.int32),
+    }
+    kv_shape = (num_pages, page_size, kv_heads, head_dim)
+    if kv_bits == 8:
+        out["k"] = jnp.zeros(kv_shape, jnp.int8)
+        out["v"] = jnp.zeros(kv_shape, jnp.int8)
+        out["k_scale"] = jnp.zeros(kv_shape[:3], jnp.bfloat16)
+        out["v_scale"] = jnp.zeros(kv_shape[:3], jnp.bfloat16)
+    else:
+        out["k"] = jnp.zeros(kv_shape, dtype)
+        out["v"] = jnp.zeros(kv_shape, dtype)
+    return out
+
+
+def _page_targets(cache: Dict[str, jax.Array], pos: jax.Array):
+    """(page, offset) scatter targets for absolute positions ``pos``
+    (B, S): look the page id up through the block table, routing unmapped
+    or out-of-range positions to the trash page."""
+    ps = cache["k"].shape[1]
+    nb = cache["block"].shape[1]
+    blk = pos // ps
+    b_idx = jnp.arange(pos.shape[0])[:, None]
+    page = cache["block"][b_idx, jnp.clip(blk, 0, nb - 1)]
+    page = jnp.where((blk >= 0) & (blk < nb), page, -1)
+    return jnp.maximum(page, TRASH_PAGE), pos % ps
+
+
+def paged_update_attn_cache(cache: Dict[str, jax.Array], k_new: jax.Array,
+                            v_new: jax.Array, pos: jax.Array
+                            ) -> Dict[str, jax.Array]:
+    """Write S_new tokens at absolute positions ``pos`` (B, S_new) through
+    the block table into the page pool (the paged twin of
+    ``update_attn_cache``; no ring wraparound — global layers only)."""
+    page, off = _page_targets(cache, pos)
+    out = {"block": cache["block"],
+           "pos": cache["pos"].at[page, off].set(pos)}
+    if "k_scale" in cache:
+        kq, ks = _kv_quant(k_new)
+        vq, vs = _kv_quant(v_new)
+        out["k"] = cache["k"].at[page, off].set(kq)
+        out["v"] = cache["v"].at[page, off].set(vq)
+        out["k_scale"] = cache["k_scale"].at[page, off].set(ks)
+        out["v_scale"] = cache["v_scale"].at[page, off].set(vs)
+        return out
+    out["k"] = cache["k"].at[page, off].set(k_new.astype(cache["k"].dtype))
+    out["v"] = cache["v"].at[page, off].set(v_new.astype(cache["v"].dtype))
+    return out
+
+
+def paged_gather(cache: Dict[str, jax.Array]):
+    """Materialize each slot's logical KV view from the page pool.
+
+    Returns ``(k, v, kv_pos, k_scale, v_scale)`` with k/v shaped
+    (slots, max_blocks * page_size, KV, hd) — the exact shapes
+    ``decode_attention`` consumes, so the gather is the ONLY paged-
+    specific op in the decode scan.  Positions under unmapped block
+    entries come back -1 (masked like any empty cache slot), which is
+    what keeps one compiled decode signature valid for every length mix.
+    """
+    bt = cache["block"]
+    s, nb = bt.shape
+    ps = cache["k"].shape[1]
+    page = jnp.maximum(bt, 0)
+
+    def flat(plane):
+        return plane[page].reshape((s, nb * ps) + plane.shape[2:])
+
+    kv_pos = jnp.where(jnp.repeat(bt < 0, ps, axis=1), -1, flat(cache["pos"]))
+    ks = flat(cache["k_scale"]) if "k_scale" in cache else None
+    vs = flat(cache["v_scale"]) if "v_scale" in cache else None
+    return flat(cache["k"]), flat(cache["v"]), kv_pos, ks, vs
+
+
+def paged_claim(cache: Dict[str, jax.Array], req_cache: Dict[str, jax.Array],
+                slot: int, pages: jax.Array, write_mask: jax.Array
+                ) -> Dict[str, jax.Array]:
+    """Map ``pages`` into row ``slot`` of the block table and scatter the
+    request's contiguous prefilled planes into its freshly-allocated pages.
+
+    ``req_cache`` planes are batch-1 contiguous of page-aligned length L;
+    ``pages``: (max_blocks,) physical page ids (-1 pad past the request's
+    allocation); ``write_mask``: (max_blocks,) — True for pages whose
+    content this claim owns (fresh prompt pages get the matching req-cache
+    chunk, fresh decode pages get the empty fill), False for
+    prefix-SHARED pages (their content predates this request and must not
+    be touched) and for -1 pads.  Masked-out writes land on the trash
+    page.  ``slot`` / ``pages`` / ``write_mask`` are traced, so one
+    compile serves every admission of a given prompt-length bucket."""
+    ps = cache["k"].shape[1]
+    nb = pages.shape[0]
+    n_src = req_cache["k"].shape[1] // ps
+    tgt = jnp.where(write_mask, jnp.maximum(pages, 0), TRASH_PAGE)
+
+    def chunks(plane, fill):
+        src = plane[0].reshape((n_src, ps) + plane.shape[2:])
+        if nb > n_src:
+            pad = jnp.full((nb - n_src, ps) + plane.shape[2:], fill,
+                           src.dtype)
+            src = jnp.concatenate([src, pad], axis=0)
+        return src[:nb]
+
+    out = {"block": jax.lax.dynamic_update_slice_in_dim(
+        cache["block"], pages[None].astype(jnp.int32), slot, 0)}
+    out["pos"] = cache["pos"].at[tgt].set(
+        chunks(req_cache["pos"].astype(jnp.int32), -1))
+    for name in (n for n in ("k", "v", "k_scale", "v_scale") if n in cache):
+        out[name] = cache[name].at[tgt].set(
+            chunks(req_cache[name].astype(cache[name].dtype), 0))
+    return out
+
+
+def paged_reset(cache: Dict[str, jax.Array], slot: int
+                ) -> Dict[str, jax.Array]:
+    """Unmap row ``slot`` of the block table (pages are freed host-side by
+    the allocator; pool contents are rewritten on the next claim)."""
+    row = jnp.full((1, cache["block"].shape[1]), -1, jnp.int32)
+    out = dict(cache)
+    out["block"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["block"], row, slot, 0)
+    return out
+
+
+def paged_seed_prefix(req_cache: Dict[str, jax.Array],
+                      cache: Dict[str, jax.Array], pages: jax.Array
+                      ) -> Dict[str, jax.Array]:
+    """Gather the shared-prefix pages of ``pages`` (-1 past the prefix)
+    into the leading span of a batch-1 contiguous request cache, so a
+    suffix-only prefill can attend over the reused prefix KV without
+    recomputing it."""
+    ps = cache["k"].shape[1]
+    m = req_cache["k"].shape[1] // ps          # static: req pages
+    pg = pages[:m]
+    page = jnp.maximum(pg, 0)
+
+    def pull(plane):
+        return plane[page].reshape((1, m * ps) + plane.shape[2:])
+
+    out = dict(req_cache)
+    out["pos"] = jnp.where(jnp.repeat(pg < 0, ps)[None, :], -1,
+                           pull(cache["pos"]))
+    for name in (n for n in ("k", "v", "k_scale", "v_scale")
+                 if n in req_cache):
+        out[name] = pull(cache[name]).astype(req_cache[name].dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # slot claim / reset (continuous-batching scheduler)
 # ---------------------------------------------------------------------------
 #
@@ -105,7 +281,7 @@ def _slot_fill(name: str, dtype) -> jax.Array:
     """Empty-slot fill value per cache plane: position planes use -1
     (= unwritten, masked by decode attention), xLSTM max-state planes use
     -inf (softmax-stabilizer identity), everything else zero."""
-    if name == "pos":
+    if name in ("pos", "block"):
         return jnp.asarray(-1, dtype)
     if name == "m":
         return jnp.asarray(-jnp.inf, dtype)

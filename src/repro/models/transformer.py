@@ -18,7 +18,10 @@ from ..config import ModelConfig
 from .attention import attention, decode_attention
 from .ffn import ffn_apply, ffn_apply_quantized
 from .kvcache import (claim_slot, init_attn_cache, init_mlstm_cache,
-                      init_rglru_cache, init_slstm_cache, prefill_attn_cache,
+                      init_paged_attn_cache, init_rglru_cache,
+                      init_slstm_cache, paged_claim, paged_gather,
+                      paged_reset, paged_seed_prefix,
+                      paged_update_attn_cache, prefill_attn_cache,
                       reset_slot, update_attn_cache)
 from .layers import (apply_mrope, apply_rope, dense_init, embed_init,
                      rms_norm, softcap)
@@ -457,6 +460,59 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return {"segments": tuple(segs), "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+def init_paged_caches(cfg: ModelConfig, num_slots: int, num_pages: int,
+                      page_size: int, max_blocks: int,
+                      dtype=jnp.bfloat16) -> Dict:
+    """Slotted serve cache with *paged* global-attention layers.
+
+    Global layers get a (num_pages, page_size, ...) physical pool plus a
+    (num_slots, max_blocks) block table — each layer owns its own pool
+    buffers, but all layers share one logical page-id space, so the host
+    allocator hands out a single page list per request.  Local ring
+    caches are already window-bounded (no padded-prefill waste to
+    reclaim) and recurrent/xLSTM states are O(1), so those stay in their
+    contiguous slot-indexed form.
+    """
+    plan = derive_plan(cfg)
+
+    def one_cache(spec: LayerSpec):
+        if spec.mixer == "global":
+            if spec.cross:
+                raise NotImplementedError("paged cache with cross-attention")
+            return init_paged_attn_cache(num_slots, num_pages, page_size,
+                                         max_blocks, cfg.num_kv_heads,
+                                         cfg.head_dim, dtype,
+                                         kv_bits=cfg.kv_bits)
+        if spec.mixer == "local":
+            length = min(cfg.window_size, max_blocks * page_size)
+            return init_attn_cache(num_slots, length, cfg.num_kv_heads,
+                                   cfg.head_dim, dtype, kv_bits=cfg.kv_bits)
+        if spec.mixer == "recurrent":
+            return init_rglru_cache(num_slots, cfg.lru_width or cfg.d_model,
+                                    cfg.conv1d_width)
+        if spec.mixer == "mlstm":
+            di = 2 * cfg.d_model
+            return init_mlstm_cache(num_slots, cfg.num_heads,
+                                    di // cfg.num_heads)
+        if spec.mixer == "slstm":
+            return init_slstm_cache(num_slots, cfg.num_heads,
+                                    cfg.d_model // cfg.num_heads)
+        raise ValueError(spec.mixer)
+
+    segs = []
+    for seg in plan:
+        pos = []
+        for spec in seg.layers:
+            c = one_cache(spec)
+            if seg.repeat > 1:
+                c = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (seg.repeat,) + x.shape), c)
+            pos.append(c)
+        segs.append(tuple(pos))
+    return {"segments": tuple(segs),
+            "pos": jnp.zeros((num_slots,), jnp.int32)}
+
+
 # ---------------------------------------------------------------------------
 # slot-indexed cache ops (continuous-batching scheduler)
 # ---------------------------------------------------------------------------
@@ -496,6 +552,65 @@ def cache_reset_slot(cfg: ModelConfig, caches: Dict, slot: int) -> Dict:
     return {"segments": segs, "pos": pos}
 
 
+def cache_claim_slot_paged(cfg: ModelConfig, caches: Dict, req_caches: Dict,
+                           slot, pages, write_mask) -> Dict:
+    """Paged twin of ``cache_claim_slot``: paged layers map ``pages`` into
+    their block-table row and scatter the request's contiguous prefilled
+    chunks into the pool; non-paged layers (local rings, recurrent state)
+    claim their slot row as before.  ``slot``/``pages``/``write_mask``
+    are traced, so one compile serves every admission of a given
+    prompt-length bucket."""
+    def claim(g, r, ax: int):
+        if "block" in g:
+            if ax == 1:   # scanned segment: map over the repeat axis
+                return jax.vmap(
+                    lambda gc, rc: paged_claim(gc, rc, slot, pages,
+                                               write_mask))(g, r)
+            return paged_claim(g, r, slot, pages, write_mask)
+        return claim_slot(g, r, slot, ax)
+
+    segs = _map_segments(cfg, claim, caches, req_caches)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        caches["pos"], req_caches["pos"].astype(jnp.int32), slot, 0)
+    return {"segments": segs, "pos": pos}
+
+
+def cache_reset_slot_paged(cfg: ModelConfig, caches: Dict, slot) -> Dict:
+    """Paged twin of ``cache_reset_slot``: paged layers only unmap the
+    slot's block-table row (page contents are rewritten on next claim)."""
+    def reset(g, ax: int):
+        if "block" in g:
+            if ax == 1:
+                return jax.vmap(lambda gc: paged_reset(gc, slot))(g)
+            return paged_reset(g, slot)
+        return reset_slot(g, slot, ax)
+
+    segs = _map_segments(cfg, reset, caches)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        caches["pos"], jnp.zeros((1,), jnp.int32), slot, 0)
+    return {"segments": segs, "pos": pos}
+
+
+def cache_seed_prefix(cfg: ModelConfig, req_caches: Dict, caches: Dict,
+                      pages) -> Dict:
+    """Seed a batch-1 contiguous request cache with the shared-prefix
+    pages of a paged serve cache (``pages``: (max_blocks,) page ids, -1
+    past the shared span), so a suffix-only prefill attends over reused
+    prefix KV without recomputing it.  Only paged (global) layers seed;
+    prefix reuse requires an all-global plan, so there is nothing to
+    seed elsewhere."""
+    def seed(r, g, ax: int):
+        if "block" not in g:
+            return r
+        if ax == 1:
+            return jax.vmap(
+                lambda rc, gc: paged_seed_prefix(rc, gc, pages))(r, g)
+        return paged_seed_prefix(r, g, pages)
+
+    segs = _map_segments(cfg, seed, req_caches, caches)
+    return {"segments": segs, "pos": req_caches["pos"]}
+
+
 def mask_cache_padding(cfg: ModelConfig, caches: Dict, plen: jax.Array
                        ) -> Dict:
     """Invalidate cache entries written by right-padded prefill tokens.
@@ -508,6 +623,8 @@ def mask_cache_padding(cfg: ModelConfig, caches: Dict, plen: jax.Array
     unpolluted this way; callers only right-pad attention-only plans."""
     def mask(c, ax):
         if not (isinstance(c, dict) and "pos" in c):
+            return c
+        if "block" in c:   # paged pos plane is pool-shaped, not per-slot
             return c
         lim = plen[None, :, None] if ax == 1 else plen[:, None]
         out = dict(c)
@@ -561,13 +678,25 @@ def _attn_layer(x, ap, cfg: ModelConfig, ctx: ExecContext, spec: LayerSpec,
         new_cache = dict(cache)
         kv_keys = ("k", "v", "pos") + (("k_scale", "v_scale")
                                        if "k_scale" in cache else ())
-        upd = update_attn_cache({kk: cache[kk] for kk in kv_keys},
-                                k, v, positions)
-        new_cache.update(upd)
-        out = decode_attention(q, upd["k"], upd["v"], upd["pos"],
-                               positions[:, 0], window=window,
-                               k_scale=upd.get("k_scale"),
-                               v_scale=upd.get("v_scale"))
+        if "block" in cache:
+            # paged: scatter through the block table, then gather each
+            # slot's logical view back out of the pool — block-table
+            # contents are data, so one compile covers every length mix
+            upd = paged_update_attn_cache(
+                {kk: cache[kk] for kk in kv_keys + ("block",)},
+                k, v, positions)
+            new_cache.update(upd)
+            kf, vf, posf, ksf, vsf = paged_gather(upd)
+            out = decode_attention(q, kf, vf, posf, positions,
+                                   window=window, k_scale=ksf, v_scale=vsf)
+        else:
+            upd = update_attn_cache({kk: cache[kk] for kk in kv_keys},
+                                    k, v, positions)
+            new_cache.update(upd)
+            out = decode_attention(q, upd["k"], upd["v"], upd["pos"],
+                                   positions, window=window,
+                                   k_scale=upd.get("k_scale"),
+                                   v_scale=upd.get("v_scale"))
     else:
         out = attention(q, k, v, positions, positions, causal=True,
                         window=window, q_block=ctx.q_block,

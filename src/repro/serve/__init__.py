@@ -5,4 +5,5 @@ from .controller import (BandwidthController, ControllerPlan,
                          ControllerRecord, static_plan)
 from .engine import (GenerationResult, ServeEngine, ServeStats, bucket_len,
                      router_trace, sample)
+from .paging import PagePool, PoolStats, prefix_page_hashes
 from .scheduler import Request, RequestResult, Scheduler, synthetic_workload

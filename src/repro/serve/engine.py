@@ -50,10 +50,14 @@ from ..distributed.moe_parallel import ep_size
 from ..distributed.sharding import (CACHE_RULES, PARAM_RULES,
                                     tree_constraint, tree_shardings)
 from ..models import model as lm
-from ..models.transformer import (ExecContext, cache_claim_slot, init_caches,
-                                  layer_specs, mask_cache_padding)
+from ..models.transformer import (ExecContext, cache_claim_slot,
+                                  cache_claim_slot_paged, cache_reset_slot_paged,
+                                  cache_seed_prefix, init_caches,
+                                  init_paged_caches, layer_specs,
+                                  mask_cache_padding)
 from ..launch.steps import make_context
 from .controller import BandwidthController, ControllerPlan
+from .paging import PagePool, prefix_page_hashes
 from .scheduler import Request, RequestResult, Scheduler
 
 PROMPT_BUCKET_MIN = 16     # smallest padded-prompt length
@@ -64,6 +68,10 @@ def bucket_len(n: int, minimum: int = CACHE_BUCKET_MIN) -> int:
     """Round ``n`` up to the next power of two (>= minimum) — the length
     buckets that keep jit cache keys finite under ragged traffic."""
     return max(minimum, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
 
 
 @dataclasses.dataclass
@@ -118,6 +126,33 @@ class ServeStats:
     # async streaming counters (attach_streaming): overlap efficiency,
     # transfer/stall seconds, degraded tokens, observed copies, ...
     stream_report: Optional[Dict] = None
+    # device bytes held by the serve run's KV/recurrent cache (every
+    # plane, incl. page pools + block tables on the paged path) — the
+    # HBM-side cost the paged cache exists to shrink
+    cache_hbm_bytes: int = 0
+    # padded prompt tokens pushed through prefill (suffix-only prefills
+    # count only their suffix, so shared-prefix reuse shows up here)
+    prefill_tokens: int = 0
+    # page-pool accounting (paged runs): allocs/frees, prefix hit rate,
+    # peak shared refcount, evictions (None on the contiguous path)
+    page_report: Optional[Dict] = None
+
+    def __post_init__(self):
+        # zero-token requests carry first_token_s = NaN (an explicit
+        # sentinel, excluded from percentiles); any *negative* finite
+        # latency is a scheduler timing bug and must never leak out
+        for r in self.results:
+            if r.latency_s < 0:
+                raise AssertionError(
+                    f"negative latency {r.latency_s} for uid {r.uid}")
+            if np.isfinite(r.first_token_s) and r.ttft_s < 0:
+                raise AssertionError(
+                    f"negative ttft {r.ttft_s} for uid {r.uid}")
+
+    @property
+    def cache_hbm_bytes_per_token(self) -> float:
+        return (self.cache_hbm_bytes / self.generated_tokens
+                if self.generated_tokens else 0.0)
 
     @property
     def tokens_per_s(self) -> float:
@@ -146,6 +181,13 @@ class ServeStats:
                             ) -> Dict[float, float]:
         lat = [r.latency_s for r in self.results]
         return {q: float(np.percentile(lat, q)) for q in qs} if lat else {}
+
+    def ttft_percentiles(self, qs: Sequence[float] = (50.0, 95.0)
+                         ) -> Dict[float, float]:
+        """First-token latency percentiles over requests that emitted at
+        least one token (NaN-sentinel zero-budget requests excluded)."""
+        tt = [r.ttft_s for r in self.results if np.isfinite(r.ttft_s)]
+        return {q: float(np.percentile(tt, q)) for q in qs} if tt else {}
 
 
 def sample(logits: jax.Array, key, temperature: float) -> jax.Array:
@@ -271,6 +313,48 @@ class ServeEngine:
                 logits, req_logits.astype(logits.dtype), slot, 0)
             return self._pin_caches(caches), self._pin_logits(logits)
 
+        @functools.partial(jax.jit, donate_argnums=(0, 2))
+        def claim_paged(caches, req_caches, logits, req_logits, slot, pages,
+                        write_mask):
+            """Paged slot claim: ``slot``/``pages``/``write_mask`` are all
+            traced, so one compile serves every admission of a given
+            request-cache length."""
+            caches = cache_claim_slot_paged(cfg, caches, req_caches, slot,
+                                            pages, write_mask)
+            logits = jax.lax.dynamic_update_slice_in_dim(
+                logits, req_logits.astype(logits.dtype), slot, 0)
+            return self._pin_caches(caches), self._pin_logits(logits)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def reset_paged(caches, slot):
+            """Unmap a retired slot's block-table row so its garbage
+            decode writes land on the trash page instead of pages the
+            host allocator has already handed to another request."""
+            return self._pin_caches(cache_reset_slot_paged(cfg, caches, slot))
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def seed_prefix(req_caches, caches, pages):
+            """Pull shared-prefix pages out of the pool into the leading
+            span of a fresh batch-1 request cache (suffix prefill seed)."""
+            return cache_seed_prefix(cfg, req_caches, caches, pages)
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def prefill_suffix(params, req_caches, tokens, start, plen):
+            """Append-only prefill of a prompt *suffix* over a cache whose
+            leading ``start`` positions were seeded from reused prefix
+            pages: step-mode forward with explicit (B, S) positions writes
+            and attends the suffix in one pass, so the shared span's
+            prefill FLOPs are paid once per unique prefix.  Padded suffix
+            tokens land at positions >= plen and are invalidated after."""
+            s = tokens.shape[1]
+            positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+            out = lm.forward(params, tokens, cfg, self._step_ctx,
+                             positions=positions, caches=req_caches)
+            caches2 = mask_cache_padding(cfg, out.caches, plen)
+            logits = jnp.take_along_axis(
+                out.logits, (plen - start - 1)[:, None, None], axis=1)[:, 0]
+            return self._pin_logits(logits), self._pin_caches(caches2)
+
         self._prefill = prefill
         # the same decode body, wrapped twice: the donating loop is the
         # steady-state path (cache buffers reused in place); the
@@ -283,6 +367,10 @@ class ServeEngine:
         self._decode_loop_spec = jax.jit(
             decode_loop, static_argnames=("max_new", "temperature"))
         self._claim = claim
+        self._claim_paged = claim_paged
+        self._reset_paged = reset_paged
+        self._seed_prefix = seed_prefix
+        self._prefill_suffix = prefill_suffix
 
     # -- compile accounting ------------------------------------------------
     @property
@@ -484,6 +572,18 @@ class ServeEngine:
                                        self.pcfg, CACHE_RULES + PARAM_RULES))
         return caches
 
+    def _make_paged_caches(self, num_slots: int, num_pages: int,
+                           page_size: int, max_blocks: int):
+        caches = init_paged_caches(self.cfg, num_slots, num_pages,
+                                   page_size, max_blocks,
+                                   dtype=self.cache_dtype)
+        if self.mesh is not None:
+            caches = jax.device_put(
+                caches, tree_shardings(self.mesh,
+                                       jax.eval_shape(lambda: caches),
+                                       self.pcfg, CACHE_RULES + PARAM_RULES))
+        return caches
+
     def _meter_offload(self, trace: np.ndarray,
                        plan: Optional[ControllerPlan] = None
                        ) -> Dict[str, float]:
@@ -565,6 +665,77 @@ class ServeEngine:
             if unresolved:
                 break          # stalled copies: serve this prefill degraded
         return lg, rc
+
+    def _admit_paged(self, req: Request, pool: PagePool, caches, slot: int,
+                     slot_pages: Dict[int, List[int]], *, max_blocks: int,
+                     page_size: int, ring_len: int, use_prefix: bool):
+        """Admit one request into the paged cache.
+
+        Maps a page list (shared prefix pages first, fresh pages after),
+        runs prefill — full, or suffix-only over a prefix seeded straight
+        from the shared physical pages — and returns ``(logits,
+        req_caches, claim_operands)`` for ``_claim_paged``.  Host-side
+        only; the device work is the prefill itself plus the claim the
+        caller issues.
+        """
+        ps = page_size
+        plen = req.prompt_len
+        plen_pad = (bucket_len(plen, PROMPT_BUCKET_MIN)
+                    if self._pad_prompts else plen)
+        need = -(-(plen_pad + req.max_new + 1) // ps)
+        shared: List[int] = []
+        hashes: List[bytes] = []
+        if use_prefix:
+            hashes = prefix_page_hashes(
+                np.asarray(req.tokens).reshape(-1).tolist(), ps)
+            hit = pool.lookup(hashes)
+            # keep at least the final prompt token in the suffix so the
+            # suffix prefill yields the last-token logits decode starts
+            # from
+            shared = hit[:min(len(hit), (plen - 1) // ps)]
+            # retain BEFORE alloc: alloc may LRU-evict parked pages, and
+            # the matched run must not be its own victim
+            pool.retain(shared)
+        n_sh = len(shared)
+        fresh = pool.alloc(need - n_sh)
+        page_list = list(shared) + fresh
+        pages = np.full((max_blocks,), -1, np.int32)
+        pages[:need] = page_list
+        write_mask = np.zeros((max_blocks,), bool)
+        write_mask[n_sh:need] = True     # shared pages are read-only
+
+        # request-cache length: page-aligned prompt capacity, raised to
+        # the serve cache's ring length so local layers claim 1:1
+        req_len = max(_round_up(plen_pad, ps), _round_up(ring_len, ps))
+        start = n_sh * ps
+        if start > 0:
+            seed = np.full((max_blocks,), -1, np.int32)
+            seed[:n_sh] = shared
+            rc = self._seed_prefix(self._make_caches(1, req_len), caches,
+                                   jnp.asarray(seed))
+            suf = np.asarray(req.tokens, np.int32).reshape(-1)[start:]
+            # pad the suffix to page granularity — never past req_len, so
+            # padded steps cannot ring-wrap onto the seeded prefix
+            spad = _round_up(len(suf), ps)
+            toks = np.zeros((1, spad), np.int32)
+            toks[0, :len(suf)] = suf
+            lg, rc = self._prefill_suffix(
+                self.params, rc, jnp.asarray(toks),
+                jnp.full((1,), start, jnp.int32),
+                jnp.full((1,), plen, jnp.int32))
+            n_prefill = spad
+        else:
+            lg, rc = self._prefill_request(req, req_len)
+            n_prefill = plen_pad
+        if use_prefix:
+            # publish every full prompt page (fresh ones get their
+            # content from the claim below; register is first-writer-wins)
+            for j in range(n_sh, plen // ps):
+                pool.register(page_list[j], hashes[j])
+        slot_pages[slot] = page_list
+        return lg, rc, {"pages": jnp.asarray(pages),
+                        "write_mask": jnp.asarray(write_mask),
+                        "prefill_tokens": n_prefill}
 
     def _run_chunk(self, caches, logits, key, plan, steps: int, active):
         """One decode chunk under streaming.
@@ -681,7 +852,9 @@ class ServeEngine:
     # -- continuous-batching serving ---------------------------------------
     def serve(self, requests: Iterable[Request], *,
               num_slots: Optional[int] = None, chunk: Optional[int] = None,
-              seed: int = 0) -> ServeStats:
+              seed: int = 0, page_size: Optional[int] = None,
+              prefix_cache: Optional[bool] = None,
+              pool_pages: Optional[int] = None) -> ServeStats:
         """Serve a request workload through the continuous-batching loop.
 
         One slot-indexed cache of ``num_slots`` rows and one compiled
@@ -690,6 +863,15 @@ class ServeEngine:
         max-token) and refills their slots from the arrival queue.
         Requests with future ``arrival_s`` wait in the queue (offered-load
         benchmarking); latencies are wall-clock from arrival.
+
+        ``page_size`` (default ``scfg.page_size``; 0 = off) switches the
+        cache's global-attention layers to block-table paging: capacity
+        is allocated in page quanta per request instead of one
+        power-of-two bucket for the whole mix, block tables are traced
+        data (still exactly one compiled decode signature), and
+        ``prefix_cache`` refcount-shares the physical pages of common
+        prompt prefixes so their prefill runs once.  ``pool_pages``
+        overrides the allocatable pool size (excluding the trash page).
 
         With a bandwidth controller attached, each chunk decodes under
         the controller's current (moe_layers, 2) restoration plan (traced
@@ -702,15 +884,56 @@ class ServeEngine:
         cfg = self.cfg
         num_slots = num_slots or self.scfg.num_slots
         chunk = chunk or self.scfg.chunk_steps
+        ps = self.scfg.page_size if page_size is None else page_size
+        use_prefix = (self.scfg.prefix_cache if prefix_cache is None
+                      else prefix_cache)
+        paged = ps > 0
         reqs = list(requests)
         order = [r.uid for r in reqs]       # results in submission order
         reqs = sorted(reqs, key=lambda r: r.arrival_s)
         if not reqs:
             return ServeStats([], num_slots, chunk, 0.0, 0.0, 0.0, 0, 0)
-        cache_len = bucket_len(
-            max(bucket_len(r.prompt_len, PROMPT_BUCKET_MIN) + r.max_new
-                for r in reqs) + 1)
-        caches = self._make_caches(num_slots, cache_len)
+
+        def padded_plen(r: Request) -> int:
+            return (bucket_len(r.prompt_len, PROMPT_BUCKET_MIN)
+                    if self._pad_prompts else r.prompt_len)
+
+        pool = None
+        slot_pages: Dict[int, List[int]] = {}
+        if paged:
+            if ps & (ps - 1):
+                raise ValueError(f"page_size must be a power of two: {ps}")
+            if use_prefix and not self._pad_prompts:
+                raise ValueError("prefix_cache needs an all-global "
+                                 "attention plan (recurrent / ring states "
+                                 "cannot seed from reused pages)")
+            if use_prefix and self._stream is not None:
+                raise ValueError("prefix_cache under expert streaming is "
+                                 "unsupported (suffix prefill bypasses the "
+                                 "stage-and-rerun fixpoint)")
+            # per-request page need; +1 matches the contiguous headroom
+            needs = sorted((-(-(padded_plen(r) + r.max_new + 1) // ps)
+                            for r in reqs), reverse=True)
+            max_blocks = needs[0]
+            # pool: the num_slots largest concurrent residents (plus the
+            # reserved trash page) — strictly less HBM than bucketing
+            # every slot to the global worst case
+            n_alloc = (pool_pages if pool_pages
+                       else min(sum(needs[:num_slots]),
+                                num_slots * max_blocks))
+            caches = self._make_paged_caches(num_slots, 1 + n_alloc, ps,
+                                             max_blocks)
+            pool = PagePool(1 + n_alloc, ps)
+            specs = layer_specs(cfg)
+            ring_len = (min(cfg.window_size, max_blocks * ps)
+                        if any(s.mixer == "local" for s in specs) else 0)
+        else:
+            cache_len = bucket_len(
+                max(bucket_len(r.prompt_len, PROMPT_BUCKET_MIN) + r.max_new
+                    for r in reqs) + 1)
+            caches = self._make_caches(num_slots, cache_len)
+        cache_hbm = int(sum(x.nbytes for x in jax.tree.leaves(caches)))
+        self._page_pool = pool              # test/introspection handle
         sched = Scheduler(num_slots)
         for r in reqs:
             sched.submit(r)
@@ -723,26 +946,42 @@ class ServeEngine:
         traces: List[np.ndarray] = []
         plans: List[np.ndarray] = []
         prefill_s = decode_s = 0.0
-        chunks = generated = metered_tokens = 0
+        chunks = generated = metered_tokens = prefill_tok = 0
         t0 = time.perf_counter()
         while sched.has_work():
             now = time.perf_counter() - t0
             admits = sched.admit(now)
             if not admits and sched.num_active == 0:
                 # idle: nothing resident, next request hasn't arrived yet
+                # — sleep the exact gap once (the old 0.25 s cap spun the
+                # loop awake repeatedly under sparse offered load)
                 gap = max(sched.next_arrival() - now, 0.0)
-                time.sleep(min(gap, 0.25) + 1e-4)
+                time.sleep(gap + 1e-4)
                 continue
             for slot, req in admits:
                 tp = time.perf_counter()
-                lg, rc = self._prefill_request(req, cache_len)
+                if paged:
+                    lg, rc, claim_args = self._admit_paged(
+                        req, pool, caches, slot, slot_pages,
+                        max_blocks=max_blocks, page_size=ps,
+                        ring_len=ring_len, use_prefix=use_prefix)
+                    prefill_tok += claim_args.pop("prefill_tokens")
+                else:
+                    lg, rc = self._prefill_request(req, cache_len)
+                    claim_args = None
+                    prefill_tok += padded_plen(req)
                 if logits is None:
                     logits = jnp.zeros((num_slots,) + lg.shape[1:], lg.dtype)
                     if self.mesh is not None:
                         logits = jax.device_put(
                             logits, self._logits_sharding(logits.shape))
-                caches, logits = self._claim(caches, rc, logits, lg,
-                                             jnp.int32(slot))
+                if paged:
+                    caches, logits = self._claim_paged(
+                        caches, rc, logits, lg, jnp.int32(slot),
+                        claim_args["pages"], claim_args["write_mask"])
+                else:
+                    caches, logits = self._claim(caches, rc, logits, lg,
+                                                 jnp.int32(slot))
                 prefill_s += time.perf_counter() - tp
 
             plan = self._current_plan()
@@ -765,8 +1004,23 @@ class ServeEngine:
             tr = (np.asarray(ys[2]) if self.collect_router_trace else None)
             uid_map = sched.uid_by_slot()
             now = time.perf_counter() - t0
-            accepted = sched.record_chunk(toks, lps, tr, now)  # (chunk, S)
+            # per-step times interpolate from the chunk's decode start, so
+            # first-token stamps land on their step instead of quantizing
+            # to the chunk boundary
+            accepted = sched.record_chunk(toks, lps, tr, now,
+                                          t_start=td - t0)  # (chunk, S)
             generated += int(accepted.sum())
+            if paged:
+                live = sched.uid_by_slot()
+                for slot_i, uid in uid_map.items():
+                    if live.get(slot_i) != uid:   # retired this chunk
+                        pool.release(slot_pages.pop(slot_i))
+                        # unmap before the next chunk decodes: the freed
+                        # pages may be re-allocated, and a dead slot keeps
+                        # scan-stepping (its writes must hit the trash
+                        # page, not the new tenant)
+                        caches = self._reset_paged(caches,
+                                                   jnp.int32(slot_i))
             if tr is not None:
                 masked = np.where(accepted[:, None, :, None], tr,
                                   -1).astype(tr.dtype)
@@ -798,6 +1052,8 @@ class ServeEngine:
                             shard_bytes=self._shard_totals() - shard_before)
 
         total_s = time.perf_counter() - t0
+        if pool is not None:
+            pool.check_leaks()     # every retire released its pages
         report = (offload_report(self._stores, self._prefetcher, snap,
                                  metered_tokens, self._offload_policy)
                   if snap is not None and traces else None)
@@ -805,6 +1061,10 @@ class ServeEngine:
         results = [by_uid[u] for u in order]
         return ServeStats(results, num_slots, chunk, total_s, prefill_s,
                           decode_s, chunks, generated,
+                          cache_hbm_bytes=cache_hbm,
+                          prefill_tokens=prefill_tok,
+                          page_report=(pool.report() if pool is not None
+                                       else None),
                           offload_report=report,
                           router_trace=(np.concatenate(traces)
                                         if traces else None),

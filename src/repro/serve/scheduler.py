@@ -75,6 +75,12 @@ class RequestResult:
     def latency_s(self) -> float:
         return self.finished_s - self.arrival_s
 
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token from arrival; NaN for requests that
+        retired before emitting any token (max_new <= 0)."""
+        return self.first_token_s - self.arrival_s
+
 
 @dataclasses.dataclass
 class _Active:
@@ -140,8 +146,8 @@ class Scheduler:
 
     # -- chunk bookkeeping -------------------------------------------------
     def record_chunk(self, tokens: np.ndarray, logprobs: np.ndarray,
-                     trace: Optional[np.ndarray], now: float
-                     ) -> np.ndarray:
+                     trace: Optional[np.ndarray], now: float,
+                     t_start: Optional[float] = None) -> np.ndarray:
         """Consume one decode chunk.
 
         ``tokens``/``logprobs``: (num_slots, chunk); ``trace``:
@@ -150,16 +156,32 @@ class Scheduler:
         requests (freeing the slot for the next ``admit``), and returns
         the (chunk, num_slots) bool mask of *accepted* steps — the mask
         the engine applies to the router trace before metering.
+
+        ``t_start``: wall time when the chunk's decode began.  Per-step
+        completion times interpolate linearly between ``t_start`` and
+        ``now``, so first-token / finish stamps land on their step rather
+        than quantizing to the chunk boundary (which inflated reported
+        TTFT by up to ``chunk`` steps).  ``t_start=None`` keeps the old
+        chunk-end stamping (every step stamps ``now``).
         """
         chunk = tokens.shape[1]
+
+        def step_t(c: int) -> float:
+            if t_start is None:
+                return now
+            return t_start + (c + 1) * (now - t_start) / chunk
+
         accepted = np.zeros((chunk, self.num_slots), bool)
         for i, st in enumerate(self.slots):
             if st is None:
                 continue
             done = None
+            done_t = now
             for c in range(chunk):
                 if len(st.tokens) >= st.req.max_new:   # max_new <= 0 case
                     done = "length"
+                    # no step ran for this request; it was done on entry
+                    done_t = t_start if t_start is not None else now
                     break
                 tok = int(tokens[i, c])
                 st.tokens.append(tok)
@@ -168,26 +190,31 @@ class Scheduler:
                     st.trace.append(trace[c, :, i, :])
                 accepted[c, i] = True
                 if st.first_token_s < 0:
-                    st.first_token_s = now
+                    st.first_token_s = step_t(c)
                 if st.req.eos_id is not None and tok == st.req.eos_id:
                     done = "eos"
                 elif len(st.tokens) >= st.req.max_new:
                     done = "length"
                 if done:
+                    done_t = step_t(c)
                     break
             if done:
-                self._retire(i, done, now)
+                self._retire(i, done, done_t)
         return accepted
 
     def _retire(self, slot: int, reason: str, now: float):
         st = self.slots[slot]
+        # a request retired before emitting any token (max_new <= 0) has
+        # no first-token time; NaN is the explicit sentinel (the -1.0
+        # placeholder used to leak in and skew latency aggregates)
+        first = st.first_token_s if st.first_token_s >= 0 else float("nan")
         res = RequestResult(
             uid=st.req.uid, prompt_len=st.req.prompt_len,
             tokens=np.asarray(st.tokens, np.int32),
             logprobs=np.asarray(st.logprobs, np.float32),
             trace=(np.stack(st.trace) if st.trace else None),
             finish_reason=reason, arrival_s=st.req.arrival_s,
-            admitted_s=st.admitted_s, first_token_s=st.first_token_s,
+            admitted_s=st.admitted_s, first_token_s=first,
             finished_s=now, offload_bytes=st.offload_bytes)
         self.finished.append(res)
         self._finished_by_uid[res.uid] = res

@@ -44,6 +44,11 @@ GATED = {
     "sim_tok_s": "up",
     "mb_per_tok": "down",
     "kb_per_tok": "down",
+    # KV-cache HBM bytes per generated token: deterministic (cache
+    # sizing + the workload's accepted-token count), tight 10% gate —
+    # the paged cache's reason to exist
+    "cache_mb_per_tok": "down",
+    "prefix_hit_rate": "up",
     "req_mb_per_tok": "down",
     "max_shard_kb_per_tok": "down",
     "fused_hbm_mb": "down",
