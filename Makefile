@@ -31,21 +31,29 @@
 #   make bench-paged     paged-cache HBM bytes/token + prefix-reuse sweep
 #                        vs the bucketed baseline (appends to
 #                        BENCH_serving.json; cache_mb_per_tok gated down)
+#   make tier1-spec      speculative-decoding tier: rejection-sampling
+#                        acceptance properties, temp-0 token identity vs
+#                        the non-speculative engine, KV rollback
+#                        bit-identity, lookahead prefetch metering
+#   make bench-spec      draft/verify serving sweep: lookahead prefetch
+#                        accuracy vs the layer-ahead heuristic on the
+#                        same workload (appends to BENCH_serving.json;
+#                        prefetch_acc + accept_rate gated up)
 #   make lint    repro-lint static analysis over src/ tools/ benchmarks/
 #                (jit purity, canonical byte accounting, tile legality;
 #                see tools/repro_lint.py --list-rules)
 #   make docs-check      every doc cross-reference resolves
 #   make check   the gate bundle CI runs: lint + docs-check +
-#                bench-check + tier1-stream (add gates HERE so CI
-#                cannot drift)
+#                bench-check + tier1-stream + tier1-paged + tier1-spec
+#                (add gates HERE so CI cannot drift)
 #   make serve-example   live-decode offload + controller report
 
 PY = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: tier1 tier1-dist tier1-kernels tier1-stream tier1-paged test \
-	bench-smoke bench-ep bench-frontier bench-kernels bench-stream \
-	bench-paged bench-check compress-smoke lint docs-check check \
-	serve-example
+.PHONY: tier1 tier1-dist tier1-kernels tier1-stream tier1-paged \
+	tier1-spec test bench-smoke bench-ep bench-frontier bench-kernels \
+	bench-stream bench-paged bench-spec bench-check compress-smoke \
+	lint docs-check check serve-example
 
 # dist-marked tests are excluded here only to avoid running them twice
 # in CI — tier1-dist runs exactly those, in-process on 8 host devices;
@@ -80,6 +88,16 @@ tier1-stream:
 tier1-paged:
 	$(PY) -m pytest -x -q -m "not dist" tests/test_paged_cache.py
 
+# the speculative-decoding correctness tier: acceptance-mask properties
+# (hypothesis + deterministic edges), greedy spec decode token-identical
+# to the autoregressive engine, rejected-suffix KV rollback leaving the
+# cache bit-identical to never having drafted, and the metered-bytes
+# oracle with speculation on
+# dist-marked rows (ep=2 identity) run under tier1-dist like every other
+# dist test; this tier is the single-device matrix
+tier1-spec:
+	$(PY) -m pytest -x -q -m "not dist" tests/test_speculative.py
+
 test:
 	$(PY) -m pytest -q
 
@@ -101,6 +119,9 @@ bench-stream:
 
 bench-paged:
 	$(PY) benchmarks/bench_serving.py --quick --paged
+
+bench-spec:
+	$(PY) benchmarks/bench_serving.py --quick --spec
 
 # wall-clock tok/s is noisy on shared CI hosts: gate it loosely there via
 # TOL_TOK_S; the deterministic bytes/token metrics keep the tight 10%
@@ -126,9 +147,11 @@ docs-check:
 # targets), so adding a gate here adds it to CI automatically; the
 # streaming tier rides along because its oracle is the cheap end-to-end
 # proof that the offload byte meter still matches real data movement,
-# and the paged tier because token identity vs the contiguous cache is
-# the paged path's correctness oracle
-check: lint docs-check bench-check tier1-stream tier1-paged
+# the paged tier because token identity vs the contiguous cache is the
+# paged path's correctness oracle, and the speculative tier because
+# token identity vs the autoregressive engine is the draft/verify
+# path's correctness oracle
+check: lint docs-check bench-check tier1-stream tier1-paged tier1-spec
 
 serve-example:
 	$(PY) examples/serve_offload.py

@@ -290,6 +290,88 @@ def run_stream(quick: bool = True) -> List[Dict]:
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding (--spec): lookahead vs layer-ahead prefetch
+# ---------------------------------------------------------------------------
+
+def run_spec(quick: bool = True) -> List[Dict]:
+    """Speculative-serving sweep: the same closed-loop ragged workload
+    served plain (layer-ahead prefetch heuristic) and through draft/
+    verify rounds (verify-trace lookahead prefetch), with temperature-0
+    token identity asserted between every arm.
+
+    Two drafter arms bracket the subsystem: the backoff n-gram is the
+    zero-cost realistic drafter (acceptance is whatever the workload's
+    stream statistics give), and the windowed self-draft is the
+    idealized high-acceptance drafter that isolates prefetcher quality
+    from drafter quality — the stand-in for the distilled drafters real
+    deployments pair with the target.  The self-draft arm's lookahead
+    ``prefetch_acc`` beating the baseline's layer-ahead heuristic on the
+    same workload is the subsystem's reason to exist, asserted here and
+    gated 'up' (with ``accept_rate``) by ``tools/bench_check.py``.
+    ``draft_overhead_kb`` is the attributable wasted-speculation wire
+    traffic (warms issued for rejected positions).
+    """
+    from repro.serve.speculative import DraftModelDrafter
+
+    n = 8 if quick else 24
+    max_new = 12 if quick else 32
+    slots, chunk, spec_k = 2, 4, 3
+
+    def workload():
+        return synthetic_workload(n, 256, max_new=max_new)
+
+    def serve_arm(drafter=None):
+        # fresh engine per arm: the expert LRU and prefetcher state are
+        # workload-dependent, so every arm must start cold to compare
+        eng = _engine(offload=True)
+        if drafter == "self":
+            # window covers the longest prompt (synthetic_workload's
+            # max_len=24) plus the whole generation, so self-draft
+            # proposals see full context and acceptance approaches 1
+            drafter = DraftModelDrafter.self_draft(
+                eng.cfg, eng.params, window=24 + max_new,
+                quantized=True, kernel_impl=eng.kernel_impl)
+        k = 0 if drafter is None else spec_k
+        return eng.serve(workload(), num_slots=slots, chunk=chunk,
+                         spec_k=k, drafter=drafter)
+
+    base = serve_arm()
+    ref = {r.uid: r.tokens.tolist() for r in base.results}
+    rep = base.offload_report
+    rows = [{
+        "name": "spec/baseline",
+        "tok_s": base.tokens_per_s,
+        "mb_per_tok": rep["bytes_per_token"] / 2 ** 20,
+        "hit_rate": rep["hit_rate"],
+        "prefetch_acc": rep["prefetch_accuracy"],
+        "chunks": float(base.chunks),
+    }]
+    for arm in ("ngram", "self"):
+        stats = serve_arm(arm)
+        toks = {r.uid: r.tokens.tolist() for r in stats.results}
+        assert toks == ref, f"speculative decode ({arm}) diverged " \
+                            f"from the non-speculative baseline"
+        sp = stats.spec_report
+        srep = stats.offload_report
+        rows.append({
+            "name": f"spec/{arm}-k{spec_k}",
+            "tok_s": stats.tokens_per_s,
+            "mb_per_tok": srep["bytes_per_token"] / 2 ** 20,
+            "hit_rate": srep["hit_rate"],
+            "prefetch_acc": sp["lookahead_accuracy"],
+            "accept_rate": sp["acceptance_rate"],
+            "draft_overhead_kb": sp["draft_overhead_bytes"] / 2 ** 10,
+            "rounds": float(sp["rounds"]),
+            "chunks": float(stats.chunks),
+        })
+    la_base, la_spec = rows[0]["prefetch_acc"], rows[-1]["prefetch_acc"]
+    assert la_spec > la_base, (
+        f"self-draft lookahead prefetch accuracy {la_spec:.3f} does not "
+        f"beat the layer-ahead baseline {la_base:.3f}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # expert-parallel shard-count sweep (--mesh ep=N)
 # ---------------------------------------------------------------------------
 
@@ -550,6 +632,11 @@ def main():
                     help="paged-KV-cache sweep: cache HBM bytes/token and "
                          "prefix reuse vs the bucketed-contiguous "
                          "baseline (token identity asserted)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding sweep: draft/verify rounds "
+                         "with lookahead expert prefetch vs the layer-"
+                         "ahead heuristic on the same workload (token "
+                         "identity asserted)")
     ap.add_argument("--mesh", default="",
                     help="'ep=N': sweep expert-parallel shard counts 1..N "
                          "(CPU needs XLA_FLAGS=--xla_force_host_platform_"
@@ -570,6 +657,9 @@ def main():
     elif args.stream:
         mode = "stream"
         rows = run_stream(quick=args.quick)
+    elif args.spec:
+        mode = "spec"
+        rows = run_spec(quick=args.quick)
     elif args.paged:
         mode = "paged"
         rows = run_paged(quick=args.quick)

@@ -36,6 +36,15 @@ admits, retires, and refills requests between chunks:
   ``--stream-miss degrade`` serves misses from the device-resident
   ``--stream-fallback-bits`` fallback instead of stalling; the report
   adds overlap efficiency, stalls, and the metered==observed byte check;
+- ``--spec-k K`` (with ``--requests``): speculative decoding — a
+  ``--drafter`` (backoff n-gram / small draft model / windowed
+  self-draft) proposes K tokens per slot per round, one batched target
+  pass verifies them by rejection sampling (token-identical to plain
+  decode at temperature 0), accepted prefixes commit their KV entries
+  and rejected suffixes roll back; with ``--offload`` the verify pass's
+  router trace drives the lookahead prefetcher, and the report adds
+  acceptance rate, lookahead prefetch accuracy, and the wasted-
+  speculation draft overhead bytes;
 - ``--mesh ep=N``: expert-parallel sharded serving — experts (and their
   quantized planes + compensator factors) partition over an N-way
   ``('model',)`` mesh, decode runs resident-expert partials + psum under
@@ -114,6 +123,18 @@ def main():
                     help="refcount-share physical pages across requests "
                          "with a common prompt prefix so the shared "
                          "span's prefill runs once (needs --page-size)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft this many tokens "
+                         "per slot per round and verify them in one "
+                         "batched target pass (0 = off; needs "
+                         "--requests; token-identical at temperature 0)")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=("ngram", "model", "self"),
+                    help="speculative drafter: backoff n-gram over each "
+                         "slot's committed stream, a small random-init "
+                         "dense draft model, or the serving model itself "
+                         "re-read over a token window (the idealized "
+                         "high-acceptance drafter)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="",
                     help="expert-parallel serving mesh, e.g. 'ep=4': "
@@ -185,6 +206,9 @@ def main():
     if args.stream and args.mesh:
         ap.error("--stream requires the single-device serving path "
                  "(mesh-sharded streaming is not supported)")
+    if args.spec_k > 0 and args.requests <= 0:
+        ap.error("--spec-k needs --requests (speculative rounds run "
+                 "through the continuous-batching scheduler)")
     if args.offload:
         if cfg.moe is None:
             ap.error(f"--offload needs an MoE arch; {cfg.name} has none")
@@ -230,7 +254,9 @@ def main():
             max_len=args.prompt_len, seed=args.seed)
         stats = eng.serve(reqs, num_slots=args.slots, chunk=args.chunk,
                           seed=args.seed, page_size=args.page_size,
-                          prefix_cache=args.prefix_cache)
+                          prefix_cache=args.prefix_cache,
+                          spec_k=args.spec_k,
+                          drafter=args.drafter if args.spec_k > 0 else None)
         lat = stats.latency_percentiles((50.0, 95.0))
         print(f"{cfg.name}: {args.requests} requests on {args.slots} slots "
               f"(chunk {args.chunk}, rate "
@@ -262,6 +288,15 @@ def main():
                 print(f"  per-shard links (ep={rep['ep']}): [{shares}] KiB, "
                       f"hottest {rep['max_shard_bytes_per_token'] / 2**10:.1f}"
                       f" KiB/token")
+        sp = stats.spec_report
+        if sp is not None:
+            print(f"speculative (k={sp['spec_k']}, {sp['drafter']}): "
+                  f"acceptance {sp['acceptance_rate']:.0%} "
+                  f"({sp['accepted_draft_tokens']}/{sp['drafted_tokens']} "
+                  f"drafts over {sp['rounds']} rounds), lookahead "
+                  f"prefetch accuracy {sp['lookahead_accuracy']:.0%}, "
+                  f"draft overhead "
+                  f"{sp['draft_overhead_bytes'] / 2**10:.1f} KiB")
         sr = stats.stream_report
         if sr is not None:
             print(f"stream ({sr['miss_policy']}, ring {sr['ring_slots']}): "

@@ -17,10 +17,10 @@ import jax.numpy as jnp
 from ..config import ModelConfig
 from .attention import attention, decode_attention
 from .ffn import ffn_apply, ffn_apply_quantized
-from .kvcache import (claim_slot, init_attn_cache, init_mlstm_cache,
-                      init_paged_attn_cache, init_rglru_cache,
-                      init_slstm_cache, paged_claim, paged_gather,
-                      paged_reset, paged_seed_prefix,
+from .kvcache import (TRASH_PAGE, claim_slot, init_attn_cache,
+                      init_mlstm_cache, init_paged_attn_cache,
+                      init_rglru_cache, init_slstm_cache, paged_claim,
+                      paged_gather, paged_reset, paged_seed_prefix,
                       paged_update_attn_cache, prefill_attn_cache,
                       reset_slot, update_attn_cache)
 from .layers import (apply_mrope, apply_rope, dense_init, embed_init,
@@ -633,6 +633,73 @@ def mask_cache_padding(cfg: ModelConfig, caches: Dict, plen: jax.Array
 
     segs = _map_segments(cfg, mask, caches)
     return {"segments": segs, "pos": plen.astype(jnp.int32)}
+
+
+def cache_rollback(cfg: ModelConfig, caches: Dict, new_len: jax.Array
+                   ) -> Dict:
+    """Roll a slotted cache back to ``new_len`` (B,) committed tokens.
+
+    Speculative decoding's verify pass appends KV for every drafted
+    token; rejection keeps only a per-row accepted prefix.  Attention
+    entries at absolute positions >= new_len are invalidated (pos -> -1)
+    AND their K/V payloads (plus int8 scales) are zeroed — fresh cache
+    planes are zero-filled and, under an all-'global' plan with enough
+    ring headroom, append-only, so the rolled-back cache is bit-identical
+    to one that never saw the rejected suffix.
+
+    Paged layers mask the pool through the block table: each mapped page
+    takes the min ``new_len`` over its owner slots.  Refcount-shared
+    prefix pages hold only positions below every owner's prompt length
+    (<= any new_len), so they are untouched, and the trash page is
+    exempted from the scatter so out-of-range verify writes parked there
+    don't leak a limit onto it.  Recurrent / local-ring states have no
+    per-position plane and cannot roll back; callers gate speculation to
+    all-'global' mixer plans.
+    """
+    new_len = new_len.astype(jnp.int32)
+
+    def wipe(out, bad):
+        out["pos"] = jnp.where(bad, -1, out["pos"])
+        for kk in ("k", "v"):
+            out[kk] = jnp.where(bad[..., None, None],
+                                jnp.zeros_like(out[kk]), out[kk])
+        for kk in ("k_scale", "v_scale"):
+            # dict-key membership on a static plane name, not traced:
+            if kk in out:  # repro-lint: disable=RL102
+                out[kk] = jnp.where(bad[..., None],
+                                    jnp.zeros_like(out[kk]), out[kk])
+        return out
+
+    def roll(c, ax):
+        if not (isinstance(c, dict) and "pos" in c):
+            return c
+        out = dict(c)
+        if "block" in c:
+            imax = jnp.iinfo(jnp.int32).max
+
+            def pool_mask(blk, pos):
+                # per-page limit = min new_len over owner slots; unmapped
+                # block entries (-1) land on the trash page, which is
+                # reset to "no limit" afterwards
+                lim = jnp.full((pos.shape[0],), imax, jnp.int32)
+                lim = lim.at[jnp.maximum(blk, 0)].min(
+                    jnp.broadcast_to(new_len[:, None], blk.shape))
+                lim = lim.at[TRASH_PAGE].set(imax)
+                return pos >= lim[:, None]
+
+            # ax is the segment's static batch axis (derive_plan), not
+            # traced:
+            if ax == 1:  # repro-lint: disable=RL102
+                # scanned segment: map over the repeat axis
+                bad = jax.vmap(pool_mask)(c["block"], c["pos"])
+            else:
+                bad = pool_mask(c["block"], c["pos"])
+            return wipe(out, bad)
+        lim = new_len[None, :, None] if ax == 1 else new_len[:, None]
+        return wipe(out, c["pos"] >= lim)
+
+    segs = _map_segments(cfg, roll, caches)
+    return {"segments": segs, "pos": new_len}
 
 
 # ---------------------------------------------------------------------------

@@ -6,11 +6,12 @@ from .bandwidth import GPU_NDP, GPU_ONLY, TPU_V5E_OFFLOAD, HardwareProfile
 from .cache import *  # noqa
 from .hostmem import (HostExpertImage, build_fallback_stack,
                       build_fallback_stacks)
-from .prefetch import LayerAheadPrefetcher, PrefetchStats
+from .prefetch import (LayerAheadPrefetcher, LookaheadPrefetcher,
+                       PrefetchStats)
 from .simulator import LayerSpecSim, SimResult, make_router_trace, simulate_decode
 from .staging import (DeviceTransferBackend, ExpertStreamEngine,
                       FakeTransferBackend, StagingRing, StagingSlot)
 from .store import (ExpertCache, ExpertStore, FetchStats,
                     ShardedExpertStore, make_expert_stores,
                     meter_decode_trace, offload_report, replay_decode_trace,
-                    snapshot_offload)
+                    replay_spec_round, snapshot_offload)

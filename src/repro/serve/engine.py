@@ -52,13 +52,14 @@ from ..distributed.sharding import (CACHE_RULES, PARAM_RULES,
 from ..models import model as lm
 from ..models.transformer import (ExecContext, cache_claim_slot,
                                   cache_claim_slot_paged, cache_reset_slot_paged,
-                                  cache_seed_prefix, init_caches,
-                                  init_paged_caches, layer_specs,
+                                  cache_rollback, cache_seed_prefix,
+                                  init_caches, init_paged_caches, layer_specs,
                                   mask_cache_padding)
 from ..launch.steps import make_context
 from .controller import BandwidthController, ControllerPlan
 from .paging import PagePool, prefix_page_hashes
 from .scheduler import Request, RequestResult, Scheduler
+from .speculative import accept_drafts, make_drafter, mask_banned
 
 PROMPT_BUCKET_MIN = 16     # smallest padded-prompt length
 CACHE_BUCKET_MIN = 32      # smallest bucketed cache length
@@ -136,6 +137,9 @@ class ServeStats:
     # page-pool accounting (paged runs): allocs/frees, prefix hit rate,
     # peak shared refcount, evictions (None on the contiguous path)
     page_report: Optional[Dict] = None
+    # speculative decoding (serve(spec_k=)): draft acceptance rate,
+    # lookahead prefetch accuracy, draft overhead bytes (None = spec off)
+    spec_report: Optional[Dict] = None
 
     def __post_init__(self):
         # zero-token requests carry first_token_s = NaN (an explicit
@@ -355,6 +359,76 @@ class ServeEngine:
                 out.logits, (plen - start - 1)[:, None, None], axis=1)[:, 0]
             return self._pin_logits(logits), self._pin_caches(caches2)
 
+        def spec_round(params, caches, logits0, key, plan, t1, draft,
+                       temperature):
+            """One speculative draft/verify round (serve/speculative.py).
+
+            ``t1``: (S,) this round's first token — already sampled (by
+            the PREVIOUS round's bonus sample, or from the claim logits
+            on admission) and fed back as data, so the host-side drafter
+            conditioned its ``draft`` (S, k) proposals on it.  One
+            batched step-mode forward scores all k+1 round positions;
+            acceptance is computed on device and only the final (S,)
+            accepted lengths cross to the host scheduler (no per-token
+            sync).  The cache commits the accepted prefix and rolls the
+            rejected suffix back to a bit-identical never-drafted state
+            (``cache_rollback``).
+
+            The round ends with the bonus sample: the NEXT round's first
+            token, drawn from the carry distribution with the first
+            rejected draft banned — the exact residual of point-mass
+            rejection sampling, so temperature > 0 stays
+            distribution-preserving (and at temperature 0 a rejected
+            draft is never the argmax, so banning it changes nothing).
+            """
+            s, k = draft.shape
+            key, k1, k2 = jax.random.split(key, 3)
+            toks = jnp.concatenate([t1.astype(jnp.int32)[:, None],
+                                    draft.astype(jnp.int32)],
+                                   axis=1)                    # (S, k+1)
+            pos0 = caches["pos"]
+            positions = (pos0[:, None]
+                         + jnp.arange(k + 1, dtype=jnp.int32)[None])
+            out = lm.forward(params, toks, cfg, self._step_ctx,
+                             positions=positions, caches=caches, plan=plan)
+            la = out.logits.astype(jnp.float32)               # (S, k+1, V)
+            acc_d = accept_drafts(la[:, :-1], draft, k2, temperature)
+            acc_len = 1 + acc_d.sum(axis=1).astype(jnp.int32) # in [1, k+1]
+            # carry = the distribution after the last accepted token; for
+            # a rejection at draft i it is la[:, i] — exactly the
+            # distribution that rejected draft i, so banning that token
+            # from the bonus sample realizes the residual
+            carry = jnp.take_along_axis(
+                la, (acc_len - 1)[:, None, None], axis=1)[:, 0]
+            first_rej = jnp.take_along_axis(
+                draft, jnp.minimum(acc_len - 1, k - 1)[:, None], axis=1)[:, 0]
+            banned = jnp.where(acc_len > k, -1,
+                               first_rej).astype(jnp.int32)
+            t1_next = sample(mask_banned(carry, banned), k1, temperature)
+            caches2 = cache_rollback(cfg, out.caches, pos0 + acc_len)
+            # per-token logprobs under the raw (unmasked, untempered)
+            # target distributions — the non-speculative loop's
+            # convention; t1's distribution is ``logits0``, the carry
+            # that produced it
+            lp0 = jax.nn.log_softmax(logits0.astype(jnp.float32), axis=-1)
+            lp_t1 = jnp.take_along_axis(
+                lp0, t1.astype(jnp.int32)[:, None], axis=-1)[:, 0]
+            lpd = jax.nn.log_softmax(la[:, :-1], axis=-1)
+            lp_dr = jnp.take_along_axis(
+                lpd, draft[..., None].astype(jnp.int32), axis=-1)[..., 0]
+            lps = jnp.concatenate([lp_t1[:, None], lp_dr], axis=1)
+            trace = None
+            if self.collect_router_trace:
+                # (moe_layers, S*(k+1), kr) row-major over (S, k+1) ->
+                # (round_steps=k+1, moe_layers, S, kr), the layout
+                # record_chunk / replay_spec_round consume
+                tr = out.trace
+                trace = tr.reshape(tr.shape[0], s, k + 1, tr.shape[-1]) \
+                    .transpose(2, 0, 1, 3)
+            ys = (toks, lps, trace, acc_len, t1_next)
+            return (self._pin_logits(carry), self._pin_caches(caches2),
+                    key, ys)
+
         self._prefill = prefill
         # the same decode body, wrapped twice: the donating loop is the
         # steady-state path (cache buffers reused in place); the
@@ -366,6 +440,14 @@ class ServeEngine:
             donate_argnums=(1,))
         self._decode_loop_spec = jax.jit(
             decode_loop, static_argnames=("max_new", "temperature"))
+        # spec rounds get the same two wrappings; the draft operand's
+        # (S, k) shape keys the jit cache, so one compile serves every
+        # round of a given (slots, spec_k) serve call
+        self._spec_round = jax.jit(
+            spec_round, static_argnames=("temperature",),
+            donate_argnums=(1,))
+        self._spec_round_nd = jax.jit(
+            spec_round, static_argnames=("temperature",))
         self._claim = claim
         self._claim_paged = claim_paged
         self._reset_paged = reset_paged
@@ -781,6 +863,47 @@ class ServeEngine:
         eng.degraded_tokens += degraded
         return out, degraded
 
+    def _run_spec_round(self, caches, logits, key, plan, t1, draft,
+                        active):
+        """One speculative verify round under streaming — ``_run_chunk``
+        for spec rounds.  The miss check covers the FULL round trace
+        (which positions survive rejection is unknown before the verify
+        runs, and under 'block' the accepted prefix must be
+        token-identical to all-resident), and re-runs are exact: the
+        same key and draft reproduce the same round."""
+        eng = self._stream
+        eng.integrate_ready()
+        top_ns, caps = eng.plan_vectors(
+            len(self._stores), plan,
+            self.cfg.moe.quant.top_n_restore if self.cfg.moe else 0)
+        plan_dev = self._plan_device(plan)
+        temp = self.scfg.temperature
+        if not eng.may_miss(top_ns, caps):
+            return self._spec_round(self.params, caches, logits, key,
+                                    plan_dev, t1, draft, temp), 0
+        out = needs = None
+        for _ in range(eng.cfg.max_reruns + 1):
+            out = self._spec_round_nd(self.params, caches, logits, key,
+                                      plan_dev, t1, draft, temp)
+            tr = np.asarray(out[3][2])
+            needs = eng.missing_for_trace(tr, active, top_ns, caps)
+            if not needs:
+                return out, 0
+            if eng.cfg.miss_policy == "degrade":
+                eng.stage_async(needs)
+                break
+            unresolved = eng.demand_stage(needs)
+            eng.reruns += 1
+            if unresolved:
+                bad = set(unresolved)
+                needs = [n for n in needs if (n[0], n[1]) in bad]
+                break
+        degraded = eng.count_affected_tokens(
+            np.asarray(out[3][2]), active,
+            [(l, e) for (l, e, _w, _f) in needs])
+        eng.degraded_tokens += degraded
+        return out, degraded
+
     # -- generation (one fixed batch) --------------------------------------
     def generate(self, prompt_tokens: np.ndarray, max_new: int = 32,
                  seed: int = 0) -> GenerationResult:
@@ -854,7 +977,8 @@ class ServeEngine:
               num_slots: Optional[int] = None, chunk: Optional[int] = None,
               seed: int = 0, page_size: Optional[int] = None,
               prefix_cache: Optional[bool] = None,
-              pool_pages: Optional[int] = None) -> ServeStats:
+              pool_pages: Optional[int] = None,
+              spec_k: Optional[int] = None, drafter=None) -> ServeStats:
         """Serve a request workload through the continuous-batching loop.
 
         One slot-indexed cache of ``num_slots`` rows and one compiled
@@ -878,9 +1002,25 @@ class ServeEngine:
         data — no recompile), the chunk's metered wire bytes feed
         ``controller.update`` at the chunk boundary, and the per-chunk
         plans come back as ``ServeStats.plan_trace``.
+
+        ``spec_k`` (default ``scfg.spec.k``; 0 = off) switches the
+        decode chunk for speculative draft/verify *rounds*: a drafter
+        (``'ngram'`` | ``'model'`` | a reset_slot/observe/propose_all
+        object; default from ``scfg.spec``) proposes ``spec_k`` tokens
+        per slot, one batched verify pass scores all spec_k+1 round
+        positions, rejection sampling commits a per-slot prefix
+        (token-identical to the non-speculative loop at temperature 0),
+        and the rejected cache suffix rolls back bit-exactly.  The
+        verify trace warms the expert stores through a
+        ``LookaheadPrefetcher`` — exact in-round routing rather than the
+        layer-ahead guess — and ``ServeStats.spec_report`` carries the
+        acceptance rate, lookahead accuracy, and wasted-speculation
+        bytes.  Requires an all-'global' attention plan (recurrent /
+        ring states cannot roll back rejected suffixes).
         """
         from ..offload.store import (offload_report, replay_decode_trace,
-                                     snapshot_offload)
+                                     replay_spec_round, snapshot_offload)
+        from ..offload.prefetch import LookaheadPrefetcher
         cfg = self.cfg
         num_slots = num_slots or self.scfg.num_slots
         chunk = chunk or self.scfg.chunk_steps
@@ -888,6 +1028,32 @@ class ServeEngine:
         use_prefix = (self.scfg.prefix_cache if prefix_cache is None
                       else prefix_cache)
         paged = ps > 0
+        spec_k = self.scfg.spec.k if spec_k is None else spec_k
+        spec_on = spec_k > 0
+        spec_pf = None
+        if spec_on:
+            if not self._pad_prompts or cfg.encoder is not None:
+                raise ValueError("speculative decoding needs an all-'global' "
+                                 "decoder-only attention plan: recurrent and "
+                                 "local-ring states cannot roll back a "
+                                 "rejected draft suffix")
+            if drafter is None:
+                drafter = self.scfg.spec.drafter
+            if isinstance(drafter, str):
+                drafter = make_drafter(
+                    dataclasses.replace(self.scfg.spec, drafter=drafter,
+                                        k=spec_k),
+                    cfg, target_params=self.params,
+                    target_quantized=self.quantized,
+                    kernel_impl=self.kernel_impl)
+            next_t1 = np.zeros((num_slots,), np.int32)
+            adm_key = jax.random.key(seed + 1)   # admission bonus samples
+            spec_drafted = spec_acc = 0
+            chunk = spec_k + 1          # round length, for stats/reporting
+            if self._stores:
+                spec_pf = LookaheadPrefetcher(len(self._stores),
+                                              cfg.moe.top_k)
+        pf_used = spec_pf if spec_on else self._prefetcher
         reqs = list(requests)
         order = [r.uid for r in reqs]       # results in submission order
         reqs = sorted(reqs, key=lambda r: r.arrival_s)
@@ -928,9 +1094,13 @@ class ServeEngine:
             ring_len = (min(cfg.window_size, max_blocks * ps)
                         if any(s.mixer == "local" for s in specs) else 0)
         else:
+            # spec_k extra headroom: a verify pass may append up to spec_k
+            # rejected positions past a slot's final token, and the ring
+            # must absorb them without wrapping onto live entries (the
+            # rollback can only restore what the write didn't destroy)
             cache_len = bucket_len(
                 max(bucket_len(r.prompt_len, PROMPT_BUCKET_MIN) + r.max_new
-                    for r in reqs) + 1)
+                    for r in reqs) + 1 + (spec_k if spec_on else 0))
             caches = self._make_caches(num_slots, cache_len)
         cache_hbm = int(sum(x.nbytes for x in jax.tree.leaves(caches)))
         self._page_pool = pool              # test/introspection handle
@@ -941,7 +1111,7 @@ class ServeEngine:
         key = self._place_replicated(jax.random.key(seed))
         logits = None
         top_n = cfg.moe.quant.top_n_restore if cfg.moe is not None else 1
-        snap = (snapshot_offload(self._stores, self._prefetcher)
+        snap = (snapshot_offload(self._stores, pf_used)
                 if self._stores else None)
         traces: List[np.ndarray] = []
         plans: List[np.ndarray] = []
@@ -982,11 +1152,37 @@ class ServeEngine:
                 else:
                     caches, logits = self._claim(caches, rc, logits, lg,
                                                  jnp.int32(slot))
+                if spec_on:
+                    # sample the new tenant's first token from its claim
+                    # logits now (the non-speculative loop does this as
+                    # its first scan step), so the drafter can condition
+                    # its first proposals on it
+                    adm_key, k1 = jax.random.split(adm_key)
+                    t1_new = int(np.asarray(
+                        sample(lg, k1, self.scfg.temperature))[0])
+                    next_t1[slot] = t1_new
+                    # rebind the slot's draft history to the new tenant;
+                    # no residual carries across requests
+                    drafter.reset_slot(slot, np.asarray(req.tokens))
+                    drafter.observe(slot, np.asarray([t1_new]))
                 prefill_s += time.perf_counter() - tp
 
             plan = self._current_plan()
             td = time.perf_counter()
-            if self._stream is not None:
+            if spec_on:
+                draft_np = drafter.propose_all(num_slots, spec_k)
+                draft_dev = jnp.asarray(draft_np, jnp.int32)
+                t1_dev = jnp.asarray(next_t1)
+                if self._stream is not None:
+                    (logits, caches, key, ys), _deg = self._run_spec_round(
+                        caches, logits, key, plan, t1_dev, draft_dev,
+                        sched.active_mask())
+                else:
+                    logits, caches, key, ys = self._spec_round(
+                        self.params, caches, logits, key,
+                        self._plan_device(plan), t1_dev, draft_dev,
+                        self.scfg.temperature)
+            elif self._stream is not None:
                 (logits, caches, key, ys), _deg = self._run_chunk(
                     caches, logits, key, plan, chunk, sched.active_mask())
             else:
@@ -999,17 +1195,48 @@ class ServeEngine:
             if plan is not None:
                 plans.append(plan.as_array())
 
-            toks = np.asarray(ys[0]).T                       # (S, chunk)
-            lps = np.asarray(ys[1]).T
-            tr = (np.asarray(ys[2]) if self.collect_router_trace else None)
+            if spec_on:
+                # round outputs are already slot-major (S, k+1); acc_len
+                # crosses to the host HERE, once per round, as one (S,)
+                # array — never a per-token sync inside the jitted round
+                toks = np.asarray(ys[0])
+                lps = np.asarray(ys[1])
+                tr = (np.asarray(ys[2]) if self.collect_router_trace
+                      else None)
+                acc_len = np.asarray(ys[3])
+                next_t1 = np.array(ys[4])   # writable: admits reset entries
+            else:
+                toks = np.asarray(ys[0]).T                   # (S, chunk)
+                lps = np.asarray(ys[1]).T
+                tr = (np.asarray(ys[2]) if self.collect_router_trace
+                      else None)
+                acc_len = None
             uid_map = sched.uid_by_slot()
+            live_mask = sched.active_mask()
             now = time.perf_counter() - t0
             # per-step times interpolate from the chunk's decode start, so
             # first-token stamps land on their step instead of quantizing
             # to the chunk boundary
             accepted = sched.record_chunk(toks, lps, tr, now,
-                                          t_start=td - t0)  # (chunk, S)
+                                          t_start=td - t0,
+                                          valid_len=acc_len)  # (chunk, S)
             generated += int(accepted.sum())
+            if spec_on:
+                live_after = sched.uid_by_slot()
+                for i in uid_map:
+                    spec_drafted += spec_k
+                    spec_acc += int(acc_len[i]) - 1
+                    # toks[i, 0] (the round's t1) was observed when it
+                    # was sampled — at admission or as the previous
+                    # round's bonus token — so only the accepted draft
+                    # suffix is new to the drafter here
+                    n_new = int(accepted[:, i].sum())
+                    if n_new > 1:
+                        drafter.observe(i, toks[i, 1:n_new])
+                    if live_after.get(i) == uid_map[i]:
+                        # slot survives the round: the bonus token it
+                        # will commit next round conditions proposals now
+                        drafter.observe(i, np.asarray([next_t1[i]]))
             if paged:
                 live = sched.uid_by_slot()
                 for slot_i, uid in uid_map.items():
@@ -1028,11 +1255,28 @@ class ServeEngine:
                 if self._stores:
                     before = sum(s.total_bytes for s in self._stores)
                     shard_before = self._shard_totals()
-                    ntok, slot_bytes = replay_decode_trace(
-                        self._stores, masked, policy=self._offload_policy,
-                        top_n=top_n if plan is None else plan.top_n,
-                        rank_caps=None if plan is None else plan.rank_cap,
-                        prefetcher=self._prefetcher)
+                    if spec_on:
+                        # lookahead warms cover every LIVE round position
+                        # (rejected ones included — that is the wasted
+                        # speculation the report attributes); demand
+                        # metering stays accepted-only
+                        full = np.where(live_mask[None, None, :, None], tr,
+                                        -1).astype(tr.dtype)
+                        ntok, slot_bytes, _ohb = replay_spec_round(
+                            self._stores, full, accepted,
+                            policy=self._offload_policy,
+                            top_n=top_n if plan is None else plan.top_n,
+                            rank_caps=(None if plan is None
+                                       else plan.rank_cap),
+                            lookahead=spec_pf)
+                    else:
+                        ntok, slot_bytes = replay_decode_trace(
+                            self._stores, masked,
+                            policy=self._offload_policy,
+                            top_n=top_n if plan is None else plan.top_n,
+                            rank_caps=(None if plan is None
+                                       else plan.rank_cap),
+                            prefetcher=self._prefetcher)
                     metered_tokens += ntok
                     sched.add_slot_bytes(slot_bytes, uid_map)
                     if self._stream is not None:
@@ -1054,9 +1298,27 @@ class ServeEngine:
         total_s = time.perf_counter() - t0
         if pool is not None:
             pool.check_leaks()     # every retire released its pages
-        report = (offload_report(self._stores, self._prefetcher, snap,
+        report = (offload_report(self._stores, pf_used, snap,
                                  metered_tokens, self._offload_policy)
                   if snap is not None and traces else None)
+        spec_report = None
+        if spec_on:
+            spec_report = {
+                "spec_k": spec_k,
+                "drafter": type(drafter).__name__,
+                "rounds": chunks,
+                "drafted_tokens": spec_drafted,
+                "accepted_draft_tokens": spec_acc,
+                # verify-pass acceptance (EOS / max_new scheduler trims
+                # excluded): the drafter-quality number
+                "acceptance_rate": spec_acc / max(spec_drafted, 1),
+                "lookahead_accuracy": (spec_pf.stats.accuracy
+                                       if spec_pf is not None else None),
+                "lookahead_prefetch_bytes": (spec_pf.bytes_issued
+                                             if spec_pf is not None else 0),
+                "draft_overhead_bytes": (spec_pf.bytes_wasted
+                                         if spec_pf is not None else 0),
+            }
         by_uid = {res.uid: res for res in sched.finished}
         results = [by_uid[u] for u in order]
         return ServeStats(results, num_slots, chunk, total_s, prefill_s,
@@ -1065,6 +1327,7 @@ class ServeEngine:
                           prefill_tokens=prefill_tok,
                           page_report=(pool.report() if pool is not None
                                        else None),
+                          spec_report=spec_report,
                           offload_report=report,
                           router_trace=(np.concatenate(traces)
                                         if traces else None),

@@ -147,7 +147,8 @@ class Scheduler:
     # -- chunk bookkeeping -------------------------------------------------
     def record_chunk(self, tokens: np.ndarray, logprobs: np.ndarray,
                      trace: Optional[np.ndarray], now: float,
-                     t_start: Optional[float] = None) -> np.ndarray:
+                     t_start: Optional[float] = None,
+                     valid_len: Optional[np.ndarray] = None) -> np.ndarray:
         """Consume one decode chunk.
 
         ``tokens``/``logprobs``: (num_slots, chunk); ``trace``:
@@ -163,6 +164,14 @@ class Scheduler:
         than quantizing to the chunk boundary (which inflated reported
         TTFT by up to ``chunk`` steps).  ``t_start=None`` keeps the old
         chunk-end stamping (every step stamps ``now``).
+
+        ``valid_len``: optional (num_slots,) per-slot cap on how many of
+        the chunk's steps are consumable — the speculative decoder's
+        verify-accepted lengths.  A rejected draft suffix still occupies
+        fixed-shape chunk positions but must never reach results; steps
+        at c >= valid_len[slot] are skipped exactly like steps past a
+        retirement.  ``None`` = every step is consumable (non-speculative
+        chunks).
         """
         chunk = tokens.shape[1]
 
@@ -177,7 +186,10 @@ class Scheduler:
                 continue
             done = None
             done_t = now
+            lim = chunk if valid_len is None else int(valid_len[i])
             for c in range(chunk):
+                if c >= lim:                  # rejected speculative suffix
+                    break
                 if len(st.tokens) >= st.req.max_new:   # max_new <= 0 case
                     done = "length"
                     # no step ran for this request; it was done on entry

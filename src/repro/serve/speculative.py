@@ -1,0 +1,275 @@
+"""Speculative decoding: drafters + rejection-sampling acceptance.
+
+One serve-loop iteration becomes a *round*: a drafter proposes ``k``
+continuation tokens per slot, and a single batched step-mode forward
+over all ``k+1`` round positions (the sampled token + the k drafts)
+verifies them against the target model — the expensive pass runs once
+per round instead of once per token, and its router trace is known for
+every not-yet-verified position, which is what the
+``LookaheadPrefetcher`` (offload/prefetch.py) turns into expert warms.
+
+Acceptance (``accept_drafts``) is standard rejection sampling for
+point-mass proposals.  Draft token d_i at verify position i is accepted
+with probability p_target(d_i) (greedy: iff d_i == argmax), and
+acceptance is cumulative — the first rejection truncates the round, so
+per slot the committed tokens are: 1 sampled token + the accepted draft
+prefix (accepted length in [1, k+1]).
+
+Distribution preservation for a point-mass proposal q = δ(d): the
+residual distribution norm(max(p - q·min(1, p(d)/q(d)), 0)) is exactly
+p with d removed and renormalized.  Instead of materializing it, the
+rejected token is *banned* from the next round's first sample
+(``mask_banned``) — the next round's carry logits are the distribution
+at the rejection position, so masking d there IS sampling the residual.
+At temperature 0 a rejected draft is by definition not the argmax, so
+banning it never changes the argmax and greedy speculative decode stays
+token-identical to the autoregressive engine.
+
+KV semantics: the verify pass appends cache entries for all k+1
+positions; ``models/transformer.py::cache_rollback`` then invalidates
+and zeroes everything past each slot's accepted length, leaving the
+cache bit-identical to never having drafted the rejected suffix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, SpecConfig, replace as cfg_replace
+
+
+# ---------------------------------------------------------------------------
+# device-side acceptance math (used inside the engine's jitted spec round)
+# ---------------------------------------------------------------------------
+
+def mask_banned(logits: jax.Array, banned: jax.Array) -> jax.Array:
+    """Mask each row's banned token (-1 = none) to -inf.
+
+    ``banned`` carries the previous round's first-rejected draft token:
+    removing it from this round's first sample realizes the residual
+    distribution of point-mass rejection sampling (module docstring).
+    """
+    v = logits.shape[-1]
+    oh = jax.nn.one_hot(jnp.maximum(banned, 0), v, dtype=bool)
+    oh = oh & (banned >= 0)[:, None]
+    return jnp.where(oh, -jnp.inf, logits)
+
+
+def accept_drafts(logits: jax.Array, draft: jax.Array, key,
+                  temperature: float) -> jax.Array:
+    """Cumulative acceptance mask (S, k) for point-mass draft proposals.
+
+    ``logits``: (S, k, V) target distributions at the draft positions —
+    row i scores draft token i.  temperature <= 0 accepts while the
+    draft matches the argmax; otherwise draft i is accepted with
+    probability p_target(draft_i).  ``jnp.cumprod`` enforces the
+    prefix property: everything after the first rejection is rejected.
+    """
+    if temperature <= 0.0:
+        ok = draft == jnp.argmax(logits, axis=-1).astype(draft.dtype)
+    else:
+        p = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+        pd = jnp.take_along_axis(p, draft[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        ok = jax.random.uniform(key, draft.shape) < pd
+    return jnp.cumprod(ok.astype(jnp.int32), axis=1).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# drafters (host-side: they only see committed tokens)
+# ---------------------------------------------------------------------------
+
+class NGramDrafter:
+    """Backoff n-gram proposer over each slot's committed stream.
+
+    Per slot, one table per context length n in [1, order-1] maps the
+    last n tokens to the most recently seen continuation; proposals
+    back off from the longest matching context to the shortest, falling
+    back to repeating the last token when even the unigram context is
+    unseen.  A decode stream that settles into a cycle — the common
+    case for greedy decoding of small models — is drafted with
+    near-perfect acceptance at zero model cost, and the longest-match
+    backoff disambiguates repeated tokens inside the cycle that a
+    single fixed-order table mispredicts.
+    """
+
+    def __init__(self, order: int = 3):
+        assert order >= 2, order
+        self.order = int(order)
+        self._hist: Dict[int, List[int]] = {}
+        self._tables: Dict[int, Dict[int, Dict[tuple, int]]] = {}
+
+    def _fresh_tables(self) -> Dict[int, Dict[tuple, int]]:
+        return {n: {} for n in range(1, self.order)}
+
+    def reset_slot(self, slot: int, prompt_tokens: np.ndarray):
+        """(Re)bind ``slot`` to a fresh request; seed from its prompt."""
+        self._hist[slot] = []
+        self._tables[slot] = self._fresh_tables()
+        self.observe(slot, prompt_tokens)
+
+    def observe(self, slot: int, tokens: np.ndarray):
+        """Append committed tokens to the slot's stream."""
+        h = self._hist.setdefault(slot, [])
+        tabs = self._tables.setdefault(slot, self._fresh_tables())
+        for t in np.asarray(tokens).reshape(-1).tolist():
+            h.append(int(t))
+            for n in range(1, self.order):
+                if len(h) > n:
+                    tabs[n][tuple(h[-n - 1:-1])] = int(t)
+
+    def propose(self, slot: int, k: int) -> np.ndarray:
+        h = self._hist.get(slot)
+        if not h:
+            return np.zeros((k,), np.int32)
+        tabs = self._tables.get(slot) or self._fresh_tables()
+        cur = list(h)
+        out = []
+        for _ in range(k):
+            nxt = None
+            for n in range(self.order - 1, 0, -1):
+                nxt = tabs[n].get(tuple(cur[-n:]))
+                if nxt is not None:
+                    break
+            if nxt is None:
+                nxt = cur[-1]
+            out.append(nxt)
+            cur.append(nxt)
+        return np.asarray(out, np.int32)
+
+    def propose_all(self, num_slots: int, k: int) -> np.ndarray:
+        """(num_slots, k) proposals; slots never reset draft zeros (their
+        rows are dead scheduler slots, masked out downstream)."""
+        return np.stack([self.propose(s, k) for s in range(num_slots)])
+
+
+class DraftModelDrafter:
+    """Greedy proposals from a small stand-in draft model.
+
+    The draft model re-reads a fixed ``window`` of each slot's committed
+    tail per proposal step (train-mode forward, no draft KV cache: for
+    the 1-layer dense configs this targets, re-reading W tokens is
+    cheaper than keeping per-slot draft caches in sync with the
+    target's commit/rollback) and extends with its argmax ``k`` times
+    under one jitted ``lax.scan``.  Proposals are point-mass — the
+    verify pass applies the same rejection rule as the n-gram path.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, window: int = 32,
+                 kernel_impl: Optional[str] = None,
+                 quantized: bool = False):
+        from ..launch.steps import make_context
+        from ..models import model as lm
+        assert cfg.encoder is None, "draft model must be decoder-only"
+        self.cfg = cfg
+        self.params = params
+        self.window = w = int(window)
+        ctx = make_context(cfg, "train", quantized=quantized,
+                           exact_capacity=True, kernel_impl=kernel_impl)
+
+        def propose_fn(params, win, ln, k):
+            """win: (S, W) left-aligned tails, ln: (S,) fill counts."""
+            def body(carry, _):
+                win, ln = carry
+                out = lm.forward(params, win, cfg, ctx)
+                idx = jnp.maximum(ln - 1, 0)
+                lg = jnp.take_along_axis(
+                    out.logits, idx[:, None, None], axis=1)[:, 0]
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                full = ln >= w
+                shifted = jnp.where(full[:, None],
+                                    jnp.roll(win, -1, axis=1), win)
+                wi = jnp.minimum(ln, w - 1)
+                win2 = shifted.at[jnp.arange(win.shape[0]), wi].set(nxt)
+                return (win2, jnp.minimum(ln + 1, w)), nxt
+
+            (_, _), toks = jax.lax.scan(body, (win, ln), xs=None, length=k)
+            return toks.T                        # (S, k)
+
+        self._propose = jax.jit(propose_fn, static_argnames=("k",))
+        self._hist: Dict[int, List[int]] = {}
+
+    @classmethod
+    def from_target(cls, target_cfg: ModelConfig, *, seed: int = 0,
+                    window: int = 32, kernel_impl: Optional[str] = None
+                    ) -> "DraftModelDrafter":
+        """Build a 1-layer dense stand-in sharing the target's vocab and
+        width — the 'small-config draft model' counterpart to the
+        external distilled drafters real deployments use."""
+        from ..models.transformer import init_params
+        small = cfg_replace(
+            target_cfg, name=target_cfg.name + "-draft", family="dense",
+            num_layers=1, moe=None, first_layer_dense=False,
+            block_pattern=("global",), encoder=None, tie_embeddings=True,
+            quant=dataclasses.replace(target_cfg.quant, enabled=False))
+        params = init_params(jax.random.key(seed), small, jnp.float32)
+        return cls(small, params, window=window, kernel_impl=kernel_impl)
+
+    @classmethod
+    def self_draft(cls, cfg: ModelConfig, params, *, window: int = 64,
+                   quantized: bool = False,
+                   kernel_impl: Optional[str] = None
+                   ) -> "DraftModelDrafter":
+        """Draft with the serving model itself (windowed re-read).
+
+        The idealized upper-bound drafter: proposals agree with the
+        target wherever the ``window``-token context suffices, so
+        acceptance approaches 1 and the measured lookahead-prefetch
+        numbers isolate the *prefetcher* from drafter quality — the
+        stand-in for the distilled high-acceptance drafters real
+        deployments pair with the target.  Pointless as a speedup (the
+        draft pass costs a full forward) but exactly what the bandwidth
+        benchmarks need.
+        """
+        return cls(cfg, params, window=window, kernel_impl=kernel_impl,
+                   quantized=quantized)
+
+    def reset_slot(self, slot: int, prompt_tokens: np.ndarray):
+        self._hist[slot] = np.asarray(prompt_tokens).reshape(-1) \
+            .astype(np.int32).tolist()
+
+    def observe(self, slot: int, tokens: np.ndarray):
+        self._hist.setdefault(slot, []).extend(
+            int(t) for t in np.asarray(tokens).reshape(-1).tolist())
+
+    def propose_all(self, num_slots: int, k: int) -> np.ndarray:
+        w = self.window
+        win = np.zeros((num_slots, w), np.int32)
+        ln = np.zeros((num_slots,), np.int32)
+        for s in range(num_slots):
+            h = self._hist.get(s, [])
+            tail = h[-w:]
+            win[s, :len(tail)] = tail
+            ln[s] = len(tail)
+        return np.asarray(self._propose(self.params, jnp.asarray(win),
+                                        jnp.asarray(ln), k))
+
+    def propose(self, slot: int, k: int) -> np.ndarray:
+        return self.propose_all(slot + 1, k)[slot]
+
+
+def make_drafter(spec: SpecConfig, target_cfg: ModelConfig, *,
+                 target_params=None, target_quantized: bool = False,
+                 kernel_impl: Optional[str] = None):
+    """Resolve a SpecConfig drafter name into a drafter instance.
+
+    'ngram' needs nothing beyond the config; 'model' builds the small
+    random-init dense stand-in; 'self' re-reads the target itself
+    (``DraftModelDrafter.self_draft``) and therefore needs the target's
+    params threaded through.
+    """
+    if spec.drafter == "ngram":
+        return NGramDrafter(order=spec.ngram_order)
+    if spec.drafter == "self":
+        assert target_params is not None, \
+            "'self' drafter needs the target model's params"
+        return DraftModelDrafter.self_draft(
+            target_cfg, target_params, window=spec.draft_window,
+            quantized=target_quantized, kernel_impl=kernel_impl)
+    return DraftModelDrafter.from_target(target_cfg,
+                                         window=spec.draft_window,
+                                         kernel_impl=kernel_impl)

@@ -153,9 +153,11 @@ def test_prefetcher_keeps_top_k_and_skips_masked():
     # masked rows (inactive scheduler slots) are ignored entirely
     pf.observe(0, np.array([[-1, -1], [4, 4]]))
     assert pf.predict(0).tolist() == [4]
-    # fully-masked step keeps the previous prediction
+    # fully-masked step EXPIRES the pending prediction: nothing consumed
+    # it, and a later step would otherwise meter the stale warm as a
+    # fresh prefetch for routing that is a full step old
     pf.observe(0, np.array([[-1, -1]]))
-    assert pf.predict(0).tolist() == [4]
+    assert pf.predict(0) is None
 
 
 def test_meter_skips_masked_slots():

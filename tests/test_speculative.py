@@ -1,0 +1,486 @@
+"""Speculative-decoding tier (serve/speculative.py + the engine's round).
+
+The subsystem's correctness oracle is the autoregressive engine itself:
+at temperature 0, draft/verify rounds must produce EXACTLY the tokens
+the plain decode loop produces, for any drafter, because a rejected
+draft is by definition not the argmax — so banning it from the next
+round's first sample (the point-mass rejection residual) never changes
+the greedy choice.  Checked here across kernel impls, expert-parallel
+sharding (ep=2 under the dist tier), the paged KV cache, and the async
+streaming engine (where the metered-bytes oracle must stay exact with
+speculation on).
+
+The other invariant is KV hygiene: the verify pass appends cache
+entries for every drafted position, and ``cache_rollback`` must leave
+the cache bit-identical to one that never saw the rejected suffix —
+checked directly on the contiguous (fp + int8-scale) and paged layouts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+from repro.config import ModelConfig, MoEConfig, QuantConfig, ServeConfig, \
+    StreamConfig
+from repro.models import init_params
+from repro.models.kvcache import (init_attn_cache, init_paged_attn_cache,
+                                  paged_update_attn_cache,
+                                  update_attn_cache)
+from repro.models.transformer import cache_rollback, compress_moe_params
+from repro.offload.prefetch import LayerAheadPrefetcher, LookaheadPrefetcher
+from repro.serve import (DraftModelDrafter, NGramDrafter, Request,
+                         ServeEngine, accept_drafts, mask_banned)
+from repro.serve.scheduler import Scheduler
+
+E = 8
+MAX_NEW = 8
+
+
+def moe_cfg():
+    return ModelConfig(
+        name="spec-tier", family="moe", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=0, vocab_size=128,
+        block_pattern=("global",), max_position=512,
+        moe=MoEConfig(num_experts=E, top_k=2, d_expert=64,
+                      quant=QuantConfig(enabled=True, bits=2, rank_budget=16,
+                                        top_n_restore=1, hqq_iters=2)))
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = moe_cfg()
+    return cfg, init_params(jax.random.key(0), cfg, jnp.float32)
+
+
+def requests():
+    rng = np.random.default_rng(3)
+    return [Request(uid=i, tokens=rng.integers(1, 128, (int(n),))
+                    .astype(np.int32), max_new=MAX_NEW)
+            for i, n in enumerate((4, 6, 5))]
+
+
+def build(cfg, params, impl="ref", ep=1, stream=False, cache_capacity=E):
+    qp, cq, stacks = compress_moe_params(params, cfg)
+    eng = ServeEngine(cq, qp, ServeConfig(temperature=0.0), quantized=True,
+                      kernel_impl=impl)
+    eng.attach_offload(stacks, policy="ours", cache_capacity=cache_capacity,
+                       ep=ep)
+    if stream:
+        eng.attach_streaming(StreamConfig(enabled=True))
+    return eng
+
+
+def serve(eng, **kw):
+    return eng.serve(requests(), num_slots=2, chunk=4, **kw)
+
+
+_plain = {}
+
+
+def plain_tokens(cfg, params, impl, **build_kw):
+    key = (impl,) + tuple(sorted(build_kw.items()))
+    if key not in _plain:
+        stats = serve(build(cfg, params, impl, **build_kw))
+        _plain[key] = [r.tokens.tolist() for r in stats.results]
+    return _plain[key]
+
+
+# ---------------------------------------------------------------------------
+# acceptance math (device-side): deterministic edges + hypothesis
+# ---------------------------------------------------------------------------
+
+def test_accept_drafts_greedy_edges():
+    """Greedy acceptance is prefix-of-argmax-matches: full-accept and
+    full-reject are the {k, 0} accepted-length edges."""
+    v, k = 16, 3
+    logits = jnp.zeros((2, k, v)).at[:, :, 5].set(9.0)
+    agree = jnp.full((2, k), 5, jnp.int32)
+    differ = jnp.full((2, k), 6, jnp.int32)
+    key = jax.random.key(0)
+    assert accept_drafts(logits, agree, key, 0.0).all()
+    assert not accept_drafts(logits, differ, key, 0.0).any()
+    # first-position rejection truncates the whole round (prefix rule)
+    mixed = jnp.asarray([[6, 5, 5], [5, 6, 5]], jnp.int32)
+    acc = np.asarray(accept_drafts(logits, mixed, key, 0.0))
+    assert acc.tolist() == [[False, False, False], [True, False, False]]
+
+
+def test_accept_drafts_sampling_edges():
+    """temperature > 0: p_target(draft)=1 accepts surely, p=0 rejects
+    surely — the same {k, 0} edges under the stochastic rule."""
+    v, k = 16, 3
+    logits = jnp.full((2, k, v), -1e9).at[:, :, 5].set(0.0)
+    agree = jnp.full((2, k), 5, jnp.int32)
+    differ = jnp.full((2, k), 6, jnp.int32)
+    key = jax.random.key(1)
+    assert accept_drafts(logits, agree, key, 0.7).all()
+    assert not accept_drafts(logits, differ, key, 0.7).any()
+
+
+def _check_greedy_is_argmax_prefix(seed: int, rows: int, k: int):
+    """The greedy acceptance mask equals the cumulative prefix of
+    per-position argmax agreement — accepted length is exactly the
+    draft's prefix-match length, anywhere in [0, k]."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    logits = jax.random.normal(k1, (rows, k, 8))
+    draft = jax.random.randint(k2, (rows, k), 0, 8)
+    acc = np.asarray(accept_drafts(logits, draft, k3, 0.0))
+    match = np.asarray(draft) == np.asarray(jnp.argmax(logits, axis=-1))
+    assert np.array_equal(acc, np.cumprod(match, axis=1).astype(bool))
+
+
+def _check_sampling_is_prefix(seed: int, rows: int, k: int):
+    """Under the stochastic rule the mask is still a prefix
+    (cumulative), never a gap."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    logits = jax.random.normal(k1, (rows, k, 8)) * 3.0
+    draft = jax.random.randint(k2, (rows, k), 0, 8)
+    acc = np.asarray(accept_drafts(logits, draft, k3, 0.9))
+    assert np.array_equal(acc, np.cumprod(acc, axis=1).astype(bool))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5),
+           st.integers(1, 4))
+    def test_accept_drafts_is_argmax_prefix(seed, rows, k):
+        _check_greedy_is_argmax_prefix(seed, rows, k)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5),
+           st.integers(1, 4))
+    def test_accept_drafts_sampling_is_prefix(seed, rows, k):
+        _check_sampling_is_prefix(seed, rows, k)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_accept_drafts_prefix_seeded(seed):
+    """Seeded fallback for the hypothesis properties (CI installs
+    hypothesis; this keeps the tier meaningful without it)."""
+    _check_greedy_is_argmax_prefix(seed, 1 + seed % 5, 1 + seed % 4)
+    _check_sampling_is_prefix(seed, 1 + seed % 5, 1 + seed % 4)
+
+
+def test_mask_banned():
+    logits = jnp.zeros((3, 8))
+    banned = jnp.asarray([2, -1, 7], jnp.int32)
+    out = np.asarray(mask_banned(logits, banned))
+    assert np.isneginf(out[0, 2]) and np.isneginf(out[2, 7])
+    assert np.isfinite(out[0, [i for i in range(8) if i != 2]]).all()
+    assert np.isfinite(out[1]).all()     # -1 = nothing banned
+
+
+# ---------------------------------------------------------------------------
+# drafters (host-side)
+# ---------------------------------------------------------------------------
+
+def test_ngram_backoff_disambiguates():
+    """The stream 1,2,1,3,1,2,1,3,... is ambiguous at order 2 (context
+    (1,) maps to both 2 and 3) but exact at order 3: backoff must
+    continue the cycle perfectly."""
+    d = NGramDrafter(order=3)
+    d.reset_slot(0, np.asarray([1, 2, 1, 3, 1, 2, 1, 3], np.int32))
+    assert d.propose(0, 4).tolist() == [1, 2, 1, 3]
+    # unseen context falls back through shorter orders to repeat-last
+    d2 = NGramDrafter(order=3)
+    d2.reset_slot(0, np.asarray([7], np.int32))
+    assert d2.propose(0, 3).tolist() == [7, 7, 7]
+
+
+def test_ngram_reset_clears_slot_state():
+    d = NGramDrafter(order=2)
+    d.reset_slot(0, np.asarray([5, 6, 5, 6], np.int32))
+    assert d.propose(0, 2).tolist() == [5, 6]
+    d.reset_slot(0, np.asarray([9], np.int32))
+    assert d.propose(0, 2).tolist() == [9, 9]
+
+
+def test_draft_model_drafter_shapes(base):
+    cfg, _ = base
+    d = DraftModelDrafter.from_target(cfg, window=8, kernel_impl="ref")
+    d.reset_slot(0, np.asarray([3, 4, 5], np.int32))
+    d.reset_slot(1, np.asarray([6], np.int32))
+    out = d.propose_all(2, 3)
+    assert out.shape == (2, 3) and out.dtype == np.int32
+    assert (0 <= out).all() and (out < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: valid_len (rejected speculative suffixes never reach results)
+# ---------------------------------------------------------------------------
+
+def test_record_chunk_valid_len_truncates():
+    sched = Scheduler(num_slots=2)
+    for r in [Request(uid=0, tokens=np.asarray([1]), max_new=8),
+              Request(uid=1, tokens=np.asarray([1]), max_new=8)]:
+        sched.submit(r)
+    sched.admit()
+    toks = np.arange(8, dtype=np.int32).reshape(2, 4)
+    lps = np.zeros((2, 4), np.float32)
+    accepted = sched.record_chunk(toks, lps, None, now=1.0,
+                                  valid_len=np.asarray([2, 4]))
+    assert accepted.T.tolist() == [[True, True, False, False],
+                                   [True, True, True, True]]
+    assert sched.slots[0].tokens == [0, 1]
+    assert sched.slots[1].tokens == [4, 5, 6, 7]
+
+
+def test_record_chunk_valid_len_respects_retirement():
+    """A slot that hits max_new inside its accepted prefix retires there;
+    the rest of the accepted prefix is dropped like any post-retirement
+    step."""
+    sched = Scheduler(num_slots=1)
+    sched.submit(Request(uid=0, tokens=np.asarray([1]), max_new=2))
+    sched.admit()
+    toks = np.asarray([[3, 4, 5, 6]], np.int32)
+    accepted = sched.record_chunk(toks, np.zeros((1, 4), np.float32), None,
+                                  now=1.0, valid_len=np.asarray([3]))
+    assert accepted[:, 0].tolist() == [True, True, False, False]
+    assert sched.slots[0] is None
+    assert sched.finished[0].tokens.tolist() == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# prefetchers
+# ---------------------------------------------------------------------------
+
+def test_layer_ahead_prediction_expires_when_unconsumed():
+    """A fully-masked step must EXPIRE the pending prediction: a later
+    step would otherwise meter the stale warm as a fresh prefetch for
+    routing that is a full step old."""
+    pf = LayerAheadPrefetcher(num_layers=1, top_k=2)
+    pf.observe(0, np.asarray([[1, 2]]))
+    assert pf.predict(0) is not None
+    pf.observe(0, np.asarray([[-1, -1]]))     # dead chunk: nothing routed
+    assert pf.predict(0) is None
+    # and the expired prediction was never scored as issued
+    assert pf.stats.issued == 0
+
+
+def test_lookahead_scores_rejected_positions_as_waste():
+    pf = LookaheadPrefetcher(num_layers=1, top_k=2)
+    trace = np.full((2, 1, 1, 2), -1, np.int64)
+    trace[0, 0, 0] = [3, 5]
+    trace[1, 0, 0] = [5, 6]
+    pf.begin_round(trace)
+    p0 = pf.predict(0, 0)
+    assert sorted(p0.tolist()) == [3, 5]
+    w = pf.score(p0, np.asarray([[3, 5]]), {3: 100, 5: 100})
+    assert w == 0 and pf.stats.useful == 2
+    p1 = pf.predict(1, 0)
+    w = pf.score(p1, np.empty((0,), np.int64), {5: 100, 6: 100})
+    assert w == 200                      # position rejected wholesale
+    assert pf.bytes_wasted == 200 and pf.stats.wasted == 2
+
+
+# ---------------------------------------------------------------------------
+# KV rollback: bit-identical to never having drafted
+# ---------------------------------------------------------------------------
+
+def _rollback_cfg():
+    return ModelConfig(
+        name="rollback", family="dense", num_layers=1, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=8, d_ff=64, vocab_size=32,
+        block_pattern=("global",), max_position=64)
+
+
+@pytest.mark.parametrize("kv_bits", (16, 8))
+def test_cache_rollback_contiguous_bit_identical(kv_bits):
+    """Write a prefix, append a draft suffix, roll back: every plane
+    (pos, k, v, int8 scales) must equal a cache that never saw the
+    suffix."""
+    cfg = _rollback_cfg()
+    rng = np.random.default_rng(0)
+
+    def kv(n):
+        return (jnp.asarray(rng.standard_normal((1, n, 1, 8)), jnp.float32),
+                jnp.asarray(rng.standard_normal((1, n, 1, 8)), jnp.float32))
+
+    pk, pv = kv(5)
+    dk, dv = kv(3)
+    for row_new_len in (5, 6, 8):
+        ref = init_attn_cache(1, 16, 1, 8, kv_bits=kv_bits)
+        ref = update_attn_cache(ref, pk, pv, jnp.arange(5)[None])
+        keep = row_new_len - 5
+        if keep:
+            ref = update_attn_cache(ref, dk[:, :keep], dv[:, :keep],
+                                    jnp.arange(5, row_new_len)[None])
+        tst = init_attn_cache(1, 16, 1, 8, kv_bits=kv_bits)
+        tst = update_attn_cache(tst, pk, pv, jnp.arange(5)[None])
+        tst = update_attn_cache(tst, dk, dv, jnp.arange(5, 8)[None])
+        rolled = cache_rollback(
+            cfg, {"segments": ((tst,),), "pos": jnp.asarray([8])},
+            jnp.asarray([row_new_len]))
+        out = rolled["segments"][0][0]
+        assert int(rolled["pos"][0]) == row_new_len
+        for plane in ref:
+            assert np.array_equal(np.asarray(out[plane]),
+                                  np.asarray(ref[plane])), (plane,
+                                                            row_new_len)
+
+
+def test_cache_rollback_paged_bit_identical():
+    """Paged rollback masks the pool through the block table with
+    per-page limits; rows roll back to different lengths, and the
+    non-trash pages must match a pool that never saw the rejected
+    positions (the trash page is scratch by contract)."""
+    cfg = _rollback_cfg()
+    rng = np.random.default_rng(1)
+    ps = 4
+
+    def kv(n):
+        return (jnp.asarray(rng.standard_normal((2, n, 1, 8)), jnp.float32),
+                jnp.asarray(rng.standard_normal((2, n, 1, 8)), jnp.float32))
+
+    def fresh():
+        c = init_paged_attn_cache(2, 5, ps, max_blocks=2, kv_heads=1,
+                                  head_dim=8)
+        return dict(c, block=jnp.asarray([[1, 2], [3, 4]], jnp.int32))
+
+    pk, pv = kv(5)
+    dk, dv = kv(3)
+    pref_pos = jnp.broadcast_to(jnp.arange(5)[None], (2, 5))
+    draft_pos = jnp.broadcast_to(jnp.arange(5, 8)[None], (2, 3))
+    new_len = jnp.asarray([5, 7])
+
+    tst = fresh()
+    tst = dict(tst, **paged_update_attn_cache(tst, pk, pv, pref_pos))
+    tst = dict(tst, **paged_update_attn_cache(tst, dk, dv, draft_pos))
+    rolled = cache_rollback(
+        cfg, {"segments": ((tst,),), "pos": jnp.asarray([8, 8])}, new_len)
+    out = rolled["segments"][0][0]
+
+    # reference: rejected draft positions parked on the trash page (an
+    # out-of-range position routes there), i.e. never written to a page
+    ref = fresh()
+    ref = dict(ref, **paged_update_attn_cache(ref, pk, pv, pref_pos))
+    keep_pos = jnp.where(draft_pos < new_len[:, None], draft_pos, -1)
+    ref = dict(ref, **paged_update_attn_cache(ref, dk, dv, keep_pos))
+    assert np.array_equal(np.asarray(out["block"]), np.asarray(ref["block"]))
+    for plane in ("pos", "k", "v"):
+        assert np.array_equal(np.asarray(out[plane])[1:],
+                              np.asarray(ref[plane])[1:]), plane
+
+
+# ---------------------------------------------------------------------------
+# engine: greedy token identity + accepted-length edges + oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ("ref", "pallas_interpret"))
+@pytest.mark.parametrize("spec_k", (1, 3))
+def test_greedy_spec_is_token_identical(base, impl, spec_k):
+    cfg, params = base
+    stats = serve(build(cfg, params, impl), spec_k=spec_k)
+    toks = [r.tokens.tolist() for r in stats.results]
+    assert toks == plain_tokens(cfg, params, impl), (impl, spec_k)
+    sp = stats.spec_report
+    assert sp["spec_k"] == spec_k
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    assert 0.0 <= sp["lookahead_accuracy"] <= 1.0
+    assert sp["draft_overhead_bytes"] >= 0
+    # logprob convention matches the plain loop (raw log_softmax)
+    for r in stats.results:
+        assert np.isfinite(r.logprobs).all()
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("ep", (2,))
+def test_greedy_spec_token_identity_expert_parallel(base, ep):
+    cfg, params = base
+    stats = serve(build(cfg, params, "ref", ep=ep), spec_k=2)
+    toks = [r.tokens.tolist() for r in stats.results]
+    assert toks == plain_tokens(cfg, params, "ref", ep=ep)
+
+
+def test_greedy_spec_token_identity_paged(base):
+    """Spec + paged cache: rejected-suffix writes overshoot through the
+    block table onto the trash page and roll back; tokens must match the
+    non-speculative paged serve exactly."""
+    cfg, params = base
+    stats = serve(build(cfg, params, "ref"), spec_k=3, page_size=4)
+    toks = [r.tokens.tolist() for r in stats.results]
+    ref = serve(build(cfg, params, "ref"), page_size=4)
+    assert toks == [r.tokens.tolist() for r in ref.results]
+
+
+def test_accepted_length_edge_all_rejected(base):
+    """A drafter that always proposes a token the greedy stream never
+    emits pins acceptance at exactly 0 (accepted length 1 per round —
+    the bonus token only)."""
+    cfg, params = base
+
+    class NeverRight:
+        def reset_slot(self, slot, toks):
+            pass
+
+        def observe(self, slot, toks):
+            pass
+
+        def propose_all(self, num_slots, k):
+            return np.full((num_slots, k), self.token, np.int32)
+
+    d = NeverRight()
+    d.token = next(t for t in range(cfg.vocab_size)
+                   if all(t not in row
+                          for row in plain_tokens(cfg, params, "ref")))
+    stats = serve(build(cfg, params, "ref"), spec_k=2, drafter=d)
+    assert [r.tokens.tolist() for r in stats.results] == \
+        plain_tokens(cfg, params, "ref")
+    assert stats.spec_report["acceptance_rate"] == 0.0
+
+
+def test_accepted_length_edge_all_accepted(base):
+    """The windowed self-draft (window covering the whole stream) agrees
+    with the target everywhere: acceptance is exactly 1 (accepted length
+    k+1 per live round)."""
+    cfg, params = base
+    eng = build(cfg, params, "ref")
+    d = DraftModelDrafter.self_draft(eng.cfg, eng.params, window=32,
+                                     quantized=True, kernel_impl="ref")
+    stats = serve(eng, spec_k=2, drafter=d)
+    assert [r.tokens.tolist() for r in stats.results] == \
+        plain_tokens(cfg, params, "ref")
+    assert stats.spec_report["acceptance_rate"] == 1.0
+
+
+def test_metered_bytes_oracle_with_spec(base):
+    """PR 8's exactness invariant survives speculation: every metered
+    wire byte (demand + lookahead warms, wasted ones included) is a real
+    observed ring copy."""
+    cfg, params = base
+    eng = build(cfg, params, "ref", stream=True, cache_capacity=3)
+    stats = serve(eng, spec_k=3)
+    assert [r.tokens.tolist() for r in stats.results] == \
+        plain_tokens(cfg, params, "ref")
+    for li, s in enumerate(eng._stores):
+        assert s.total_bytes == s.observed_copy_bytes, (
+            li, s.total_bytes, s.observed_copy_bytes)
+    rep = stats.offload_report
+    assert rep["observed_copy_bytes"] == rep["total_bytes"] > 0
+    sp = stats.spec_report
+    assert sp["lookahead_prefetch_bytes"] >= sp["draft_overhead_bytes"] >= 0
+
+
+def test_sampling_spec_serves_and_reports(base):
+    """temperature > 0: rounds are distribution-preserving rather than
+    token-identical — the run must complete with full-length results and
+    finite logprobs, and the residual banning path must engage (the
+    report sees rejections)."""
+    cfg, params = base
+    qp, cq, stacks = compress_moe_params(params, cfg)
+    eng = ServeEngine(cq, qp, ServeConfig(temperature=0.8), quantized=True,
+                      kernel_impl="ref")
+    eng.attach_offload(stacks, policy="ours", cache_capacity=E)
+    stats = serve(eng, spec_k=2, seed=7)
+    assert sorted(r.uid for r in stats.results) == [0, 1, 2]
+    for r in stats.results:
+        assert r.tokens.shape[0] == MAX_NEW
+        assert np.isfinite(r.logprobs).all()
+    assert 0.0 <= stats.spec_report["acceptance_rate"] <= 1.0

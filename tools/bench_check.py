@@ -54,6 +54,11 @@ GATED = {
     "fused_hbm_mb": "down",
     "hbm_reduction_x": "up",
     "overlap_efficiency": "up",
+    # prefetch accuracy is deterministic given the routing trace (both
+    # the layer-ahead heuristic and the speculative lookahead replay the
+    # same metered trace), so it keeps the tight byte tolerance
+    "prefetch_acc": "up",
+    "accept_rate": "up",
 }
 _NOISY = {"tok_s", "goodput_tok_s", "sim_tok_s",
           "overlap_efficiency"}   # wall-clock-derived
